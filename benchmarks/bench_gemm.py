@@ -1,0 +1,48 @@
+"""Figure 2 — hardware-accelerated GEMM from a managed runtime.
+
+The paper benchmarks f2jblas/OpenBLAS/MKL/cuBLAS GEMM from the JVM across
+matrix sizes.  The analogues here:
+  * measured: XLA:CPU wall time per GEMM (the "managed runtime" number),
+  * derived: v5e MXU roofline time (2mnk / 197 TFLOP/s vs HBM bytes/819GB/s
+    — whichever dominates), the number the Pallas kernel targets; the
+    kernel itself is validated against the oracle in tests (interpret mode
+    is not a timing proxy).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SIZES = [(256, 256, 256), (1024, 1024, 1024), (2048, 2048, 2048),
+         (4096, 4096, 512), (10000, 1000, 1000)]
+
+
+def _roofline_us(m: int, n: int, k: int, dtype_bytes: int) -> float:
+    flops = 2.0 * m * n * k
+    bytes_ = dtype_bytes * (m * k + k * n + m * n)
+    return max(flops / 197e12, bytes_ / 819e9) * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for dtype, dname in [(jnp.float32, "f32"), (jnp.bfloat16, "bf16")]:
+        for m, n, k in SIZES:
+            a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+            b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+            f = jax.jit(lambda x, y: x @ y)
+            f(a, b).block_until_ready()
+            t0 = time.perf_counter()
+            reps = 3
+            for _ in range(reps):
+                f(a, b).block_until_ready()
+            us = (time.perf_counter() - t0) / reps * 1e6
+            gflops = 2.0 * m * n * k / (us / 1e6) / 1e9
+            rows.append((
+                f"fig2_gemm_{dname}_{m}x{k}x{n}", us,
+                f"cpu_gflops={gflops:.1f};"
+                f"v5e_roofline_us={_roofline_us(m, n, k, 2 if dname == 'bf16' else 4):.1f}"))
+    return rows

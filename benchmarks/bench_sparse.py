@@ -1,0 +1,62 @@
+"""§4.2 — sparse single-core kernels.
+
+MLlib's CCS SpMV/SpMM vs dense; plus the TPU-native block-sparse (BSR)
+layout, reporting the density break-even against dense GEMM — the number
+that decides when the Pallas BSR kernel pays off on the MXU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distmat import SparseMatrixCSC
+from repro.kernels.bsr import BlockELL
+
+
+def _time(f, *args, reps=5):
+    f(*args)
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    m, n, nx = 2048, 2048, 64
+    for density in (0.01, 0.1):
+        S = ((rng.random((m, n)) < density)
+             * rng.normal(size=(m, n))).astype(np.float32)
+        x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(n, nx)), jnp.float32)
+        sp = SparseMatrixCSC.from_dense(S)
+        Sd = jnp.asarray(S)
+
+        us_spmv = _time(jax.jit(sp.matvec), x)
+        us_dmv = _time(jax.jit(lambda v: Sd @ v), x)
+        rows.append((f"s42_csc_spmv_d{density}", us_spmv,
+                     f"dense_us={us_dmv:.1f}"))
+        us_spmm = _time(jax.jit(sp.matmat), X)
+        us_dmm = _time(jax.jit(lambda v: Sd @ v), X)
+        rows.append((f"s42_csc_spmm_d{density}", us_spmm,
+                     f"dense_us={us_dmm:.1f}"))
+
+    # block-sparse: 8x8 blocks, 12.5% block density
+    mask = rng.random((32, 32)) < 0.125
+    dense = (np.kron(mask, np.ones((8, 8)))
+             * rng.normal(size=(256, 256))).astype(np.float32)
+    bell = BlockELL.from_dense(dense, bs=8)
+    X = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    from repro.kernels import ops
+    us_bsr = _time(lambda xx: ops.bsr_matmul(bell, xx), X)
+    us_dense = _time(jax.jit(lambda xx: jnp.asarray(dense) @ xx), X)
+    rows.append(("s42_bsr_matmul_d0.125", us_bsr,
+                 f"dense_us={us_dense:.1f};"
+                 f"block_density={bell.density():.3f}"))
+    return rows

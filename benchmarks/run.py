@@ -1,0 +1,49 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (paper artifacts:
+Table 1 = bench_svd, Figure 1 = bench_optim, Figure 2 = bench_gemm,
+§4.2 = bench_sparse).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size problems (slow on one core)")
+    ap.add_argument("--only", default=None,
+                    help="run a single suite: svd|optim|gemm|sparse")
+    args = ap.parse_args()
+
+    from benchmarks import bench_svd, bench_optim, bench_gemm, bench_sparse
+    suites = {
+        "svd": lambda: bench_svd.run(),
+        "optim": lambda: bench_optim.run(full=args.full),
+        "gemm": lambda: bench_gemm.run(),
+        "sparse": lambda: bench_sparse.run(),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for sname, fn in suites.items():
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{sname}_SUITE_ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

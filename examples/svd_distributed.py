@@ -1,0 +1,35 @@
+"""Paper §3.1 / Table 1 — distributed SVD at Netflix-prize-like aspect
+ratios (scaled to this machine), via both code paths.
+
+    PYTHONPATH=src python examples/svd_distributed.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distmat import CoordinateMatrix, RowMatrix
+from repro.core.linalg import compute_svd
+
+rng = np.random.default_rng(0)
+
+# Netflix-shaped (17770 × 480189 in the paper; transpose-scaled here):
+# tall-skinny path — Gram on the "driver", U recovered in parallel.
+A = rng.normal(size=(50_000, 128)).astype(np.float32)
+t0 = time.time()
+res = compute_svd(RowMatrix.create(A), k=5)
+print(f"tall-skinny ({A.shape}): mode={res.info['mode']} "
+      f"σ={np.round(np.asarray(res.s), 2)}  [{time.time()-t0:.2f}s]")
+
+# square sparse path — ARPACK-analogue Lanczos, matrix-free matvecs.
+m = n = 5000
+nnz = 100_000
+ri, ci = rng.integers(0, m, nnz), rng.integers(0, n, nnz)
+va = rng.normal(size=nnz).astype(np.float32)
+cm = CoordinateMatrix.create(jnp.asarray(ri), jnp.asarray(ci),
+                             jnp.asarray(va), (m, n))
+t0 = time.time()
+res = compute_svd(cm, k=5, mode="lanczos", tol=1e-4)
+print(f"square sparse ({m}x{n}, nnz={nnz}): "
+      f"σ={np.round(np.asarray(res.s), 3)} "
+      f"restarts={int(res.info['restarts'])}  [{time.time()-t0:.2f}s]")

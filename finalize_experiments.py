@@ -1,0 +1,44 @@
+"""Append generated tables to EXPERIMENTS.md from recorded JSONs."""
+import json, pathlib, sys
+sys.path.insert(0, "src")
+from repro.launch.report import dryrun_table, roofline_table, load
+
+md = open("EXPERIMENTS.md").read()
+cut = md.index("# Generated results")
+md = md[:cut] + "# Generated results\n\n"
+
+v2 = load(pathlib.Path("experiments/dryrun"))
+v2_keys = {(r["arch"], r["shape"], r["mesh"]) for r in v2}
+v1 = [r for r in load(pathlib.Path("experiments/dryrun_v1"))
+      if (r["arch"], r["shape"], r["mesh"]) not in v2_keys
+      and r.get("status") != "error"]
+
+md += "## §Dry-run (final code)\n\n" + dryrun_table(v2) + "\n\n"
+if v1:
+    md += ("### Cells from the pre-optimization sweep\n"
+           "(identical model code except: vocab padding, q-chunked "
+           "attention, slot-centric MoE — compile proof equally valid; "
+           "memory upper-bounds the final code)\n\n"
+           + dryrun_table(v1) + "\n\n")
+
+md += "## §Roofline (single-pod, per-device terms)\n\n"
+md += roofline_table(v2) + "\n\n"
+if v1:
+    md += "### Pre-optimization sweep cells\n\n" + roofline_table(v1) + "\n\n"
+
+md += "## §Perf — measured hillclimb iterations\n\n"
+md += ("| cell | variant | bound | step ms | compute s | memory s | "
+       "collective s | verdict |\n|---|---|---|---|---|---|---|---|\n")
+for p in sorted(pathlib.Path("experiments/perf").glob("*.json")):
+    r = json.loads(p.read_text())
+    if r.get("status") != "ok":
+        continue
+    rf = r["roofline"]
+    tag = p.stem.split("pod")[-1].strip("_") or "base"
+    md += (f"| {r['arch']}×{r['shape']} | {tag} | {rf['bound']} | "
+           f"{rf['step_s']*1e3:.1f} | {rf['compute_s']:.3f} | "
+           f"{rf['memory_s']:.3f} | {rf['collective_s']:.4f} | "
+           f"see narrative |\n")
+open("EXPERIMENTS.md", "w").write(md)
+print("EXPERIMENTS.md finalized;",
+      len(v2), "v2 cells,", len(v1), "v1-fallback cells")

@@ -1,0 +1,40 @@
+"""Assigned architecture registry: `get(name)` → ModelConfig;
+`ARCHES` lists all ids.  Shapes live in .shapes."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHES = [
+    "deepseek-coder-33b",
+    "qwen3-4b",
+    "llama3.2-3b",
+    "qwen2.5-32b",
+    "seamless-m4t-large-v2",
+    "zamba2-1.2b",
+    "llava-next-34b",
+    "deepseek-v2-236b",
+    "deepseek-v3-671b",
+    "falcon-mamba-7b",
+]
+
+_MODULES = {
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen3-4b": "qwen3_4b",
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "llava-next-34b": "llava_next_34b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCHES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG

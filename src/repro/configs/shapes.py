@@ -1,0 +1,52 @@
+"""Assigned input shapes (per-arch cells) + skip rules.
+
+  train_4k     seq_len=4096    global_batch=256   (training)
+  prefill_32k  seq_len=32768   global_batch=32    (inference-prefill)
+  decode_32k   seq_len=32768   global_batch=128   (inference-decode:
+               one new token against a KV cache of seq_len)
+  long_500k    seq_len=524288  global_batch=1     (long-context-decode;
+               sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped).  long_500k needs sub-quadratic attention;
+    every assigned arch has a decoder, so decode shapes always apply."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("pure quadratic-attention arch: 500k decode KV cache "
+                       "is the full-attention regime the assignment skips "
+                       "(see DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def cells(arches: list[str]):
+    """All (arch, shape) cells with skip annotations."""
+    from repro.configs import get
+    out = []
+    for a in arches:
+        cfg = get(a)
+        for s in SHAPES:
+            runs, why = applicable(cfg, s)
+            out.append((a, s, runs, why))
+    return out

@@ -1,0 +1,5 @@
+"""repro.core — the paper's contribution: distributed matrices, spectral and
+convex solvers built on the matrix/vector separation principle."""
+from . import distmat, linalg, tfocs, optim
+
+__all__ = ["distmat", "linalg", "tfocs", "optim"]

@@ -1,0 +1,99 @@
+"""Local vectors and matrices (paper §2.4 and §4.2).
+
+MLlib ships dense/sparse local vectors and a CCS-format SparseMatrix with
+hand-rolled SpMM/SpMV kernels.  On TPU, unstructured scalar gathers do not
+pay, so the CCS layout here is the *reference* implementation (pure jnp,
+used as the oracle for kernels/bsr.py) and the production path converts to
+MXU-friendly block-CSR (see repro/kernels/bsr.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class SparseVector:
+    size: int
+    indices: Array   # (nnz,) int32, sorted
+    values: Array    # (nnz,)
+
+    @staticmethod
+    def from_dense(v: Array) -> "SparseVector":
+        v = np.asarray(v)
+        (idx,) = np.nonzero(v)
+        return SparseVector(int(v.shape[0]), jnp.asarray(idx, jnp.int32),
+                            jnp.asarray(v[idx]))
+
+    def to_dense(self) -> Array:
+        return jnp.zeros((self.size,),
+                         self.values.dtype).at[self.indices].set(self.values)
+
+    def dot(self, other: Array) -> Array:
+        return jnp.sum(self.values * other[self.indices])
+
+
+@dataclass(frozen=True)
+class SparseMatrixCSC:
+    """Compressed Column Storage, exactly as described in paper §4.2:
+    row indices + values per nonzero, column extents in `col_ptr`."""
+    shape: tuple[int, int]
+    col_ptr: Array    # (n+1,) int32
+    row_idx: Array    # (nnz,) int32
+    values: Array     # (nnz,)
+
+    @staticmethod
+    def from_dense(a: Array) -> "SparseMatrixCSC":
+        a = np.asarray(a)
+        m, n = a.shape
+        cols, rows, vals = [], [], [0]
+        for j in range(n):
+            (nz,) = np.nonzero(a[:, j])
+            rows.extend(nz.tolist())
+            cols.extend(a[nz, j].tolist())
+            vals.append(len(rows))
+        return SparseMatrixCSC(
+            (m, n), jnp.asarray(vals, jnp.int32),
+            jnp.asarray(rows, jnp.int32), jnp.asarray(cols))
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.shape[0])
+
+    def _col_of_nnz(self) -> Array:
+        """Column index of each stored nonzero (from col_ptr extents)."""
+        n = self.shape[1]
+        return jnp.searchsorted(self.col_ptr[1:], jnp.arange(self.nnz),
+                                side="right").astype(jnp.int32)
+
+    def matvec(self, x: Array, transpose: bool = False) -> Array:
+        """SpMV (optionally Aᵀx), matching MLlib's specialized kernels."""
+        col = self._col_of_nnz()
+        if transpose:
+            contrib = self.values * x[self.row_idx]
+            return jax.ops.segment_sum(contrib, col,
+                                       num_segments=self.shape[1])
+        contrib = self.values * x[col]
+        return jax.ops.segment_sum(contrib, self.row_idx,
+                                   num_segments=self.shape[0])
+
+    def matmat(self, B: Array, transpose: bool = False) -> Array:
+        """SpMM: Sparse × Dense (optionally AᵀB)."""
+        col = self._col_of_nnz()
+        if transpose:
+            contrib = self.values[:, None] * B[self.row_idx]
+            return jax.ops.segment_sum(contrib, col,
+                                       num_segments=self.shape[1])
+        contrib = self.values[:, None] * B[col]
+        return jax.ops.segment_sum(contrib, self.row_idx,
+                                   num_segments=self.shape[0])
+
+    def to_dense(self) -> Array:
+        col = self._col_of_nnz()
+        out = jnp.zeros(self.shape, self.values.dtype)
+        return out.at[self.row_idx, col].add(self.values)

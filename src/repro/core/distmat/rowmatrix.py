@@ -1,0 +1,229 @@
+"""RowMatrix / IndexedRowMatrix — row-sharded distributed matrices.
+
+Paper §2.1: "a row-oriented distributed matrix ... backed by an RDD of its
+rows, where each row is a local vector".  On the TPU mesh the RDD becomes a
+2-D array sharded over the row axes (('pod','data') on multi-pod meshes) and
+"local vector" means the row lives whole inside one device's HBM shard.
+
+All cluster/driver separation from the paper is explicit here:
+  * matrix ops (gram, matvec, multiply_local, column stats) are `shard_map`
+    bodies — they run on the cluster shards with explicit collectives;
+  * vector results (gram output, rmatvec output, stats) come back replicated
+    (the "driver" copy, which on a TPU pod is every chip redundantly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import types as T
+
+Array = jax.Array
+
+
+def _shard_index(axes: Sequence[str]) -> Array:
+    """Flat index of this shard along the given (major→minor) mesh axes."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+@dataclass(frozen=True)
+class RowMatrix(T.DistMatrix):
+    rows: Array                      # (m_padded, n), sharded P(row_axes, None)
+    n_rows: int                      # true row count (pre-padding)
+    mesh: Mesh = field(repr=False)
+    row_axes: tuple[str, ...] = T.ROW_AXES
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def create(rows: Array, mesh: Mesh | None = None,
+               row_axes: Sequence[str] | None = None) -> "RowMatrix":
+        mesh = mesh or T.single_device_mesh()
+        row_axes = tuple(row_axes) if row_axes else T.row_axes_for(mesh)
+        nshards = T.axes_size(mesh, row_axes)
+        padded, m = T.pad_rows(jnp.asarray(rows), nshards)
+        padded = T.put(padded, NamedSharding(mesh, P(row_axes, None)))
+        return RowMatrix(rows=padded, n_rows=m, mesh=mesh, row_axes=row_axes)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n_rows, self.rows.shape[1])
+
+    @property
+    def _spec(self) -> P:
+        return P(self.row_axes, None)
+
+    def _smap(self, f, in_specs, out_specs):
+        return jax.shard_map(f, mesh=self.mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+
+    def _row_mask(self) -> Array:
+        """Row-sharded {0,1} mask of true (non-padding) rows."""
+        m, nshards = self.n_rows, T.axes_size(self.mesh, self.row_axes)
+        local = self.rows.shape[0] // nshards
+        axes = self.row_axes
+
+        def body():
+            start = _shard_index(axes) * local
+            return ((start + jnp.arange(local)) < m).astype(self.rows.dtype)
+
+        return self._smap(body, in_specs=(), out_specs=P(self.row_axes))()
+
+    # -- cluster matrix ops --------------------------------------------------
+    def gram(self) -> Array:
+        """AᵀA, replicated — the paper's one-all-to-one DIMSUM reduction.
+
+        Per-shard partial Gram then a tree all-reduce over the row axes.
+        Padding rows are zero so they do not contribute.
+        """
+        axes = self.row_axes
+
+        def body(a):
+            g = jnp.einsum("ij,ik->jk", a, a,
+                           preferred_element_type=jnp.float32)
+            return jax.lax.psum(g, axes)
+
+        out = self._smap(body, in_specs=(self._spec,), out_specs=P())(self.rows)
+        return out.astype(self.rows.dtype)
+
+    def matvec(self, v: Array) -> Array:
+        """A v with v replicated (driver) → row-sharded result (cluster)."""
+        def body(a, v):
+            return a @ v
+
+        return self._smap(body, in_specs=(self._spec, P()),
+                          out_specs=P(self.row_axes))(self.rows, v)
+
+    def rmatvec(self, u: Array) -> Array:
+        """Aᵀ u with u row-sharded → replicated n-vector (back to driver)."""
+        axes = self.row_axes
+
+        def body(a, u):
+            return jax.lax.psum(a.T @ u, axes)
+
+        return self._smap(body, in_specs=(self._spec, P(self.row_axes)),
+                          out_specs=P())(self.rows, u)
+
+    def multiply_local(self, B: Array) -> "RowMatrix":
+        """A @ B for a small replicated B — the `U = A (VΣ⁻¹)` pattern:
+        broadcast the small factor, then embarrassingly parallel."""
+        def body(a, b):
+            return a @ b
+
+        out = self._smap(body, in_specs=(self._spec, P()),
+                         out_specs=self._spec)(self.rows, B)
+        return replace(self, rows=out)
+
+    def scale_columns(self, d: Array) -> "RowMatrix":
+        """A · diag(d) with replicated d (DIMSUM column scaling)."""
+        def body(a, d):
+            return a * d[None, :]
+
+        out = self._smap(body, in_specs=(self._spec, P()),
+                         out_specs=self._spec)(self.rows, d)
+        return replace(self, rows=out)
+
+    def column_stats(self) -> dict[str, Array]:
+        """Replicated per-column statistics (MLlib colStats)."""
+        axes, m = self.row_axes, self.n_rows
+        mask = self._row_mask()
+
+        def body(a, mask):
+            am = a * mask[:, None]
+            s = jax.lax.psum(am.sum(0), axes)
+            sq = jax.lax.psum((am * am).sum(0), axes)
+            nnz = jax.lax.psum((am != 0).sum(0), axes)
+            big = jnp.asarray(jnp.inf, a.dtype)
+            sel_lo = jnp.where(mask[:, None] > 0, a, big)
+            sel_hi = jnp.where(mask[:, None] > 0, a, -big)
+            mn = jax.lax.pmin(sel_lo.min(0), axes)
+            mx = jax.lax.pmax(sel_hi.max(0), axes)
+            return s, sq, nnz, mn, mx
+
+        s, sq, nnz, mn, mx = self._smap(
+            body, in_specs=(self._spec, P(self.row_axes)),
+            out_specs=(P(), P(), P(), P(), P()))(self.rows, mask)
+        mean = s / m
+        var = jnp.maximum(sq / m - mean * mean, 0.0) * (m / max(m - 1, 1))
+        return {"mean": mean, "variance": var, "num_nonzeros": nnz,
+                "min": mn, "max": mx, "norm_l2": jnp.sqrt(sq)}
+
+    def column_similarities(self) -> Array:
+        """DIMSUM cosine similarity of columns (paper refs [10, 11]).
+
+        The sampling in DIMSUM exists to bound shuffle sizes on commodity
+        networks; on ICI the exact scaled Gram is bandwidth-optimal, so we
+        compute cos(i,j) = (AᵀA)ij / (‖aᵢ‖‖aⱼ‖) exactly (adaptation noted in
+        DESIGN.md).
+        """
+        norms = jnp.sqrt(self.column_stats()["norm_l2"] ** 2)
+        inv = jnp.where(norms > 0, 1.0 / jnp.maximum(norms, 1e-30), 0.0)
+        return self.scale_columns(inv).gram()
+
+    def frobenius_norm(self) -> Array:
+        def body(a):
+            return jax.lax.psum((a * a).sum(), self.row_axes)
+
+        return jnp.sqrt(self._smap(body, in_specs=(self._spec,),
+                                   out_specs=P())(self.rows))
+
+    # -- materialization ----------------------------------------------------
+    def to_local(self) -> Array:
+        return jax.device_get(self.rows)[: self.n_rows]
+
+    # -- linalg entry points (implemented in core.linalg) -------------------
+    def compute_svd(self, k: int, **kw):
+        from repro.core.linalg import svd as _svd
+        return _svd.compute_svd(self, k, **kw)
+
+    def compute_pca(self, k: int, **kw):
+        from repro.core.linalg import svd as _svd
+        return _svd.compute_pca(self, k, **kw)
+
+    def tall_skinny_qr(self):
+        from repro.core.linalg import tsqr as _tsqr
+        return _tsqr.tsqr(self)
+
+
+@dataclass(frozen=True)
+class IndexedRowMatrix(T.DistMatrix):
+    """RowMatrix plus meaningful long-typed row indices (paper §2.1)."""
+    indices: Array                   # (m_padded,), int32/64, row-sharded
+    inner: RowMatrix
+
+    @staticmethod
+    def create(indices: Array, rows: Array, mesh: Mesh | None = None,
+               row_axes: Sequence[str] | None = None) -> "IndexedRowMatrix":
+        rm = RowMatrix.create(rows, mesh, row_axes)
+        nshards = T.axes_size(rm.mesh, rm.row_axes)
+        idx, _ = T.pad_rows(jnp.asarray(indices), nshards)
+        idx = T.put(idx, NamedSharding(rm.mesh, P(rm.row_axes)))
+        return IndexedRowMatrix(indices=idx, inner=rm)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.inner.shape
+
+    def to_row_matrix(self) -> RowMatrix:
+        return self.inner
+
+    def matvec(self, v: Array) -> Array:
+        return self.inner.matvec(v)
+
+    def rmatvec(self, u: Array) -> Array:
+        return self.inner.rmatvec(u)
+
+    def to_local(self) -> Array:
+        idx = np.asarray(jax.device_get(self.indices))[: self.inner.n_rows]
+        dense = np.asarray(self.inner.to_local())
+        out = np.zeros((int(idx.max()) + 1 if idx.size else 0,
+                        dense.shape[1]), dense.dtype)
+        out[idx] = dense
+        return jnp.asarray(out)

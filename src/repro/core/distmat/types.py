@@ -1,0 +1,108 @@
+"""Mesh plumbing and the DistMatrix protocol.
+
+The paper lays matrices out across a cluster as RDDs; here the cluster is a
+TPU mesh and the layout is a NamedSharding.  Every distributed matrix type
+carries (data, mesh, row_axes, col_axis) and exposes the same small protocol
+(shape / matvec / rmatvec / to_local) so the linalg layer is representation
+agnostic, exactly like MLlib's DistributedMatrix interface.
+
+"Driver-local" quantities (the paper's vectors) are replicated arrays:
+PartitionSpec() over the same mesh.  "Cluster" quantities are sharded.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# Default logical axis names.  Row-sharding uses the batch-like axes; column /
+# block sharding uses the model axis.  The multi-pod mesh adds a leading
+# "pod" axis which is treated as an extra row axis.
+ROW_AXES = ("data",)
+COL_AXIS = "model"
+
+
+@functools.cache
+def single_device_mesh() -> Mesh:
+    """A (1, 1) mesh so the same shard_map code path runs on one CPU."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str]) -> Mesh:
+    return jax.make_mesh(
+        tuple(shape), tuple(names),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(names),
+    )
+
+
+def row_axes_for(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes that shard rows: ('pod','data') on multi-pod meshes."""
+    return tuple(n for n in mesh.axis_names if n != COL_AXIS)
+
+
+def axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def row_sharding(mesh: Mesh, row_axes: Sequence[str] | None = None) -> NamedSharding:
+    row_axes = tuple(row_axes) if row_axes is not None else row_axes_for(mesh)
+    return NamedSharding(mesh, P(row_axes, None))
+
+
+def block_sharding(mesh: Mesh, row_axes: Sequence[str] | None = None,
+                   col_axis: str = COL_AXIS) -> NamedSharding:
+    row_axes = tuple(row_axes) if row_axes is not None else row_axes_for(mesh)
+    return NamedSharding(mesh, P(row_axes, col_axis))
+
+
+def put(x: Array, sharding: NamedSharding) -> Array:
+    """Place `x` with `sharding` (device_put works inside or outside jit)."""
+    return jax.device_put(jnp.asarray(x), sharding)
+
+
+def pad_rows(x: Array, multiple: int) -> tuple[Array, int]:
+    """Pad axis 0 of `x` to a multiple; returns (padded, original_rows)."""
+    m = x.shape[0]
+    rem = (-m) % multiple
+    if rem:
+        pad_width = [(0, rem)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, pad_width)
+    return x, m
+
+
+@dataclass(frozen=True)
+class DistMatrix:
+    """Base for distributed matrices; subclasses set `data` layout."""
+
+    @property
+    def shape(self) -> tuple[int, int]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def matvec(self, v: Array) -> Array:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def rmatvec(self, u: Array) -> Array:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def to_local(self) -> Array:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def normal_op(self) -> Callable[[Array], Array]:
+        """v ↦ Aᵀ(A v): the only operator ARPACK-style SVD ever needs."""
+        return lambda v: self.rmatvec(self.matvec(v))

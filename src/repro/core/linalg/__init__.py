@@ -1,0 +1,6 @@
+from .lanczos import lanczos_eigsh, svd_via_lanczos
+from .svd import compute_svd, compute_pca, SVDResult, GRAM_THRESHOLD
+from .tsqr import tsqr
+
+__all__ = ["lanczos_eigsh", "svd_via_lanczos", "compute_svd", "compute_pca",
+           "SVDResult", "GRAM_THRESHOLD", "tsqr"]

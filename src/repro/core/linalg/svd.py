@@ -1,0 +1,81 @@
+"""computeSVD / computePCA — paper §3.1.
+
+Dispatch mirrors MLlib's RowMatrix.computeSVD: the *user does not choose* —
+tall-and-skinny matrices (n small enough that the n×n Gram fits "on the
+driver", i.e. replicated per chip) take the Gram path (§3.1.2); otherwise the
+ARPACK-analogue matrix-free Lanczos path (§3.1.1).  Wide-and-short inputs are
+handled through their transpose, as in the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distmat.rowmatrix import RowMatrix
+from . import lanczos as _lanczos
+
+Array = jax.Array
+
+# n at which an n×n float32 Gram stops being a comfortable "driver" object.
+# 16 GB HBM chip → reserve ≲ 1 GB for the replicated Gram → n ≈ 16384.
+GRAM_THRESHOLD = 8192
+
+
+@dataclass(frozen=True)
+class SVDResult:
+    U: RowMatrix | None     # (m, k) distributed left singular vectors
+    s: Array                # (k,) singular values, descending (replicated)
+    V: Array                # (n, k) right singular vectors (replicated)
+    info: dict | None = None
+
+
+def _recover_u(A: RowMatrix, s: Array, V: Array, rcond: float) -> RowMatrix:
+    """U = A (V Σ⁻¹): broadcast the small factor (paper: "embarrassingly
+    parallel"), one local GEMM per row shard, no collectives at all."""
+    inv = jnp.where(s > rcond * jnp.max(s), 1.0 / jnp.maximum(s, 1e-30), 0.0)
+    return A.multiply_local(V * inv[None, :])
+
+
+def compute_svd(A, k: int, *, compute_u: bool = True,
+                mode: Literal["auto", "gram", "lanczos"] = "auto",
+                gram_threshold: int = GRAM_THRESHOLD,
+                rcond: float = 1e-9, **lanczos_kw) -> SVDResult:
+    m, n = A.shape
+    k = min(k, min(m, n))
+    if mode == "auto":
+        mode = "gram" if (isinstance(A, RowMatrix) and n <= gram_threshold) \
+            else "lanczos"
+
+    if mode == "gram":
+        # §3.1.2 tall-and-skinny: one all-reduce builds AᵀA, the
+        # eigendecomposition is a driver-local (replicated) op.
+        G = A.gram().astype(jnp.float32)
+        w, V = jnp.linalg.eigh(G)
+        w, V = w[::-1][:k], V[:, ::-1][:, :k]
+        s = jnp.sqrt(jnp.maximum(w, 0.0))
+        info = {"mode": "gram"}
+    else:
+        # §3.1.1 square/sparse: ARPACK-analogue matrix-free Lanczos.
+        s, V, info = _lanczos.svd_via_lanczos(A, k, **lanczos_kw)
+        info = dict(info, mode="lanczos")
+
+    U = _recover_u(A, s, V, rcond) if (compute_u and
+                                       isinstance(A, RowMatrix)) else None
+    return SVDResult(U=U, s=s, V=V, info=info)
+
+
+def compute_pca(A: RowMatrix, k: int) -> tuple[Array, Array]:
+    """Principal components from the Gram matrix with the rank-one mean
+    correction — never materializes the centered matrix (it would be dense
+    even when A is sparse).  Returns (components (n,k), explained variance)."""
+    m, n = A.shape
+    stats = A.column_stats()
+    mu = stats["mean"]
+    G = A.gram().astype(jnp.float32)
+    cov = (G - m * jnp.outer(mu, mu)) / max(m - 1, 1)
+    w, V = jnp.linalg.eigh(cov)
+    w, V = w[::-1][:k], V[:, ::-1][:, :k]
+    return V, jnp.maximum(w, 0.0)

@@ -1,0 +1,9 @@
+from .first_order import minimize_first_order, METHODS
+from .lbfgs import lbfgs, lbfgs_composite
+from .problems import make_problem, Problem, composite_value, \
+    lbfgs_value_and_grad
+from .api import minimize
+
+__all__ = ["minimize_first_order", "METHODS", "lbfgs", "lbfgs_composite",
+           "make_problem", "Problem", "composite_value",
+           "lbfgs_value_and_grad", "minimize"]

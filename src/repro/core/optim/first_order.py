@@ -1,0 +1,45 @@
+"""The Figure-1 optimizer family (paper §3.3).
+
+`gra / acc / acc_r / acc_b / acc_rb` are all the one TFOCS engine with flags
+(see core.tfocs.solver); this module binds the paper's names and presents a
+uniform `minimize_first_order` that takes a *distributed* objective — a
+composite (linop, smooth, prox) triple where the linop owns all cluster
+communication, so the driver-side method code is oblivious to distribution,
+exactly as §3.3 argues.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax.numpy as jnp
+
+from repro.core.tfocs.solver import tfocs, TfocsOptions
+from repro.core.tfocs.prox import ProxZero
+
+METHODS = ("gra", "acc", "acc_r", "acc_b", "acc_rb", "lbfgs")
+
+_FLAGS = {
+    #            accel  backtracking restart
+    "gra":      (False, False,       False),
+    "acc":      (True,  False,       False),
+    "acc_r":    (True,  False,       True),
+    "acc_b":    (True,  True,        False),
+    "acc_rb":   (True,  True,        True),
+}
+
+
+def minimize_first_order(method: str, smooth, linop, prox=None, x0=None,
+                         opts: TfocsOptions | None = None):
+    """Dispatch a paper-named method. For 'lbfgs' see core.optim.lbfgs."""
+    if method == "lbfgs":
+        from .lbfgs import lbfgs_composite
+        return lbfgs_composite(smooth, linop, prox, x0, opts)
+    accel, bt, restart = _FLAGS[method]
+    opts = opts or TfocsOptions()
+    opts = replace(opts, accel=accel, backtracking=bt, restart=restart)
+    if not bt and opts.Lexact is None:
+        # Fixed-step variants use 1/step_size as the exact Lipschitz bound.
+        opts = replace(opts, Lexact=opts.L0)
+    prox = prox or ProxZero()
+    x0 = jnp.zeros(linop.in_shape) if x0 is None else x0
+    return tfocs(smooth, linop, prox, x0, opts)

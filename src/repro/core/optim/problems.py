@@ -1,0 +1,132 @@
+"""The four Figure-1 benchmark problems (paper §3.3), generated exactly as
+described:
+
+  linear      — scaled-up TFOCS `test_LASSO.m` data: 10000 × 1024, 512 of the
+                features truly correlated; unregularized least squares.
+  linear_l1   — same data, + λ‖x‖₁.
+  logistic    — 10000 × 250; each feature = class-mean gaussian + noise
+                gaussian; unregularized logistic regression.
+  logistic_l2 — same, + (λ/2)‖x‖₂².
+
+Problems are built as distributed composites over a RowMatrix so every
+method sees the identical cluster-side objective.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distmat import RowMatrix
+from repro.core.tfocs import (LinopMatrix, SmoothQuad, SmoothLogLoss,
+                              SmoothHuberL1, SmoothSum, ProxZero, ProxL1,
+                              ProxL2Sq)
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class Problem:
+    name: str
+    linop: LinopMatrix
+    smooth: object
+    prox: object
+    smooth_for_lbfgs: object     # L1 folded in smoothly where needed
+    L: float                     # exact Lipschitz bound (‖A‖² · curvature)
+
+
+def _lipschitz_sq_norm(A: np.ndarray) -> float:
+    """‖A‖₂² via a few power iterations (driver-side, benchmark setup)."""
+    v = np.random.default_rng(0).normal(size=A.shape[1])
+    for _ in range(50):
+        v = A.T @ (A @ v)
+        v /= np.linalg.norm(v)
+    return float(np.linalg.norm(A @ v) ** 2)
+
+
+def make_problem(name: str, *, m: int = 10000, n: int = 1024,
+                 mesh=None, seed: int = 0, lam: float | None = None,
+                 dtype=np.float32) -> Problem:
+    rng = np.random.default_rng(seed)
+    if name.startswith("linear"):
+        n_eff = n
+        k_true = n_eff // 2                    # 512 of 1024 truly correlated
+        A = rng.normal(size=(m, n_eff)).astype(dtype)
+        xtrue = np.zeros(n_eff, dtype)
+        xtrue[:k_true] = rng.normal(size=k_true).astype(dtype)
+        b = (A @ xtrue + 0.1 * rng.normal(size=m)).astype(dtype)
+        lam = 1.0 if lam is None else lam
+        rm = RowMatrix.create(jnp.asarray(A), mesh)
+        linop = LinopMatrix(rm)
+        quad = SmoothQuad(b=linop.pad_data(jnp.asarray(b)),
+                          weights=linop.row_weights())
+        L = _lipschitz_sq_norm(A)
+        if name == "linear":
+            return Problem(name, linop, quad, ProxZero(), quad, L)
+        if name == "linear_l1":
+            return Problem(name, linop, quad, ProxL1(lam),
+                           _WithSmoothReg(quad, SmoothHuberL1(lam)), L)
+    if name.startswith("logistic"):
+        n_eff = 250 if n == 1024 else n
+        y = (rng.random(m) < 0.5).astype(dtype) * 2 - 1
+        mu = rng.normal(size=n_eff).astype(dtype)
+        A = (y[:, None] * mu[None, :]
+             + rng.normal(size=(m, n_eff))).astype(dtype)
+        lam = 1e-2 if lam is None else lam
+        rm = RowMatrix.create(jnp.asarray(A), mesh)
+        linop = LinopMatrix(rm)
+        w = linop.row_weights()
+        ll = SmoothLogLoss(y=linop.pad_data(jnp.asarray(y)), weights=w)
+        L = 0.25 * _lipschitz_sq_norm(A)       # σ'' ≤ 1/4
+        if name == "logistic":
+            return Problem(name, linop, ll, ProxZero(), ll, L)
+        if name == "logistic_l2":
+            return Problem(name, linop, ll, ProxL2Sq(lam),
+                           _WithL2(ll, lam), L + lam)
+    raise ValueError(f"unknown problem {name!r}")
+
+
+@dataclass(frozen=True)
+class _WithSmoothReg:
+    """smooth(Ax) + reg(x) presented as an x-space objective for L-BFGS."""
+    inner: object
+    reg: object
+
+    def data_value(self, z):
+        return self.inner.value(z)
+
+
+@dataclass(frozen=True)
+class _WithL2:
+    inner: object
+    lam: float
+
+    def data_value(self, z):
+        return self.inner.value(z)
+
+
+def composite_value(problem: Problem, x: Array) -> Array:
+    z = problem.linop.apply(x)
+    return problem.smooth.value(z) + problem.prox.value(x)
+
+
+def lbfgs_value_and_grad(problem: Problem):
+    """x-space (value, grad) for L-BFGS, with regularizers smoothed."""
+    linop, prox = problem.linop, problem.prox
+
+    def vg(x):
+        z = linop.apply(x)
+        f = problem.smooth.value(z)
+        g = linop.adjoint(problem.smooth.grad(z))
+        if isinstance(prox, ProxL1):
+            reg = SmoothHuberL1(prox.lam)
+            f = f + reg.value(x)
+            g = g + reg.grad(x)
+        elif isinstance(prox, ProxL2Sq):
+            f = f + 0.5 * prox.lam * jnp.vdot(x, x)
+            g = g + prox.lam * x
+        return f, g
+
+    return vg

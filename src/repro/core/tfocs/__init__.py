@@ -1,0 +1,15 @@
+from .linop import LinopMatrix, LinopIdentity, LinopAdjoint
+from .smooth import (SmoothQuad, SmoothLogLoss, SmoothLinear, SmoothHuberL1,
+                     SmoothSum)
+from .prox import ProxZero, ProxL1, ProxL2Sq, ProxNonneg, ProxBox
+from .solver import tfocs, TfocsOptions
+from .lp import solve_smoothed_lp
+from .lasso import solve_lasso
+
+__all__ = [
+    "LinopMatrix", "LinopIdentity", "LinopAdjoint",
+    "SmoothQuad", "SmoothLogLoss", "SmoothLinear", "SmoothHuberL1",
+    "SmoothSum",
+    "ProxZero", "ProxL1", "ProxL2Sq", "ProxNonneg", "ProxBox",
+    "tfocs", "TfocsOptions", "solve_smoothed_lp", "solve_lasso",
+]

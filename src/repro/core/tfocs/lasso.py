@@ -1,0 +1,29 @@
+"""solveLASSO helper (paper §3.2.2):  ½‖Ax − b‖² + λ‖x‖₁.
+
+The three composite parts, exactly as the paper lists them:
+  linear component    — LinopMatrix (distributed matmul)
+  smooth component    — SmoothQuad (quadratic loss)
+  nonsmooth component — ProxL1 (soft threshold)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .linop import LinopMatrix
+from .smooth import SmoothQuad
+from .prox import ProxL1
+from .solver import tfocs, TfocsOptions
+
+Array = jax.Array
+
+
+def solve_lasso(A, b: Array, lam: float, *, x0: Array | None = None,
+                opts: TfocsOptions | None = None):
+    linop = LinopMatrix(A)
+    smooth = SmoothQuad(b=linop.pad_data(b), weights=linop.row_weights())
+    prox = ProxL1(lam)
+    x0 = jnp.zeros(linop.in_shape) if x0 is None else x0
+    opts = opts or TfocsOptions(max_iters=500, backtracking=True,
+                                restart=True)
+    return tfocs(smooth, linop, prox, x0, opts)

@@ -1,0 +1,120 @@
+"""Linear operators for composite objectives (paper §3.2.2 `LinopMatrix`).
+
+The linear component is the *expensive, distributed* part of a TFOCS
+composite objective — exactly the paper's matrix/vector split: `apply` maps
+the replicated ("driver") variable into the row-sharded ("cluster") data
+space; `adjoint` reduces back.  All solver math above this layer is
+representation-agnostic and mesh-agnostic: it sees global arrays and lets
+the operators own the collectives.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distmat.rowmatrix import RowMatrix
+
+Array = jax.Array
+
+
+class LinearOperator(Protocol):
+    in_shape: tuple[int, ...]
+    out_shape: tuple[int, ...]
+
+    def apply(self, x: Array) -> Array: ...
+    def adjoint(self, y: Array) -> Array: ...
+
+
+@dataclass(frozen=True)
+class LinopMatrix:
+    """y = A x for a distributed RowMatrix (or a plain local matrix)."""
+    A: RowMatrix | Array
+
+    @property
+    def in_shape(self) -> tuple[int, ...]:
+        return (self.A.shape[1],)
+
+    @property
+    def out_shape(self) -> tuple[int, ...]:
+        # Padded row count — the data-space vectors (b, weights) must be
+        # padded consistently; `pad_data` below does this for callers.
+        if isinstance(self.A, RowMatrix):
+            return (self.A.rows.shape[0],)
+        return (self.A.shape[0],)
+
+    def apply(self, x: Array) -> Array:
+        if isinstance(self.A, RowMatrix):
+            return self.A.matvec(x)
+        return self.A @ x
+
+    def adjoint(self, y: Array) -> Array:
+        if isinstance(self.A, RowMatrix):
+            return self.A.rmatvec(y)
+        return self.A.T @ y
+
+    def pad_data(self, b: Array) -> Array:
+        """Pad a data-space vector to the padded row count."""
+        m = self.out_shape[0]
+        return jnp.pad(b, (0, m - b.shape[0])) if b.shape[0] < m else b
+
+    def row_weights(self) -> Array:
+        """{0,1} mask of true rows — weights for the smooth component so the
+        padding rows of the distributed layout contribute nothing."""
+        if isinstance(self.A, RowMatrix):
+            return self.A._row_mask()
+        return jnp.ones(self.out_shape, jnp.float32)
+
+
+@dataclass(frozen=True)
+class LinopIdentity:
+    n: int
+
+    @property
+    def in_shape(self):
+        return (self.n,)
+
+    @property
+    def out_shape(self):
+        return (self.n,)
+
+    def apply(self, x: Array) -> Array:
+        return x
+
+    def adjoint(self, y: Array) -> Array:
+        return y
+
+    def pad_data(self, b: Array) -> Array:
+        return b
+
+    def row_weights(self) -> Array:
+        return jnp.ones((self.n,), jnp.float32)
+
+
+@dataclass(frozen=True)
+class LinopAdjoint:
+    """The formal adjoint of another operator (used by the SCD dual solver,
+    where the dual variable lives in data space)."""
+    base: LinearOperator
+
+    @property
+    def in_shape(self):
+        return self.base.out_shape
+
+    @property
+    def out_shape(self):
+        return self.base.in_shape
+
+    def apply(self, x: Array) -> Array:
+        return self.base.adjoint(x)
+
+    def adjoint(self, y: Array) -> Array:
+        return self.base.apply(y)
+
+    def pad_data(self, b: Array) -> Array:
+        return b
+
+    def row_weights(self) -> Array:
+        return jnp.ones(self.out_shape, jnp.float32)

@@ -1,0 +1,77 @@
+"""Nonsmooth prox-capable components (paper §3.2.2 `ProxL1`).
+
+prox_h(x, t) = argmin_u h(u) + 1/(2t) ‖u − x‖².  These act on the replicated
+("driver") variable, so they are pure vector math — no collectives.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class ProxFunction(Protocol):
+    def value(self, x: Array) -> Array: ...
+    def prox(self, x: Array, t: Array) -> Array: ...
+
+
+@dataclass(frozen=True)
+class ProxZero:
+    """h ≡ 0 (unconstrained smooth minimization)."""
+
+    def value(self, x: Array) -> Array:
+        return jnp.asarray(0.0, x.dtype)
+
+    def prox(self, x: Array, t: Array) -> Array:
+        return x
+
+
+@dataclass(frozen=True)
+class ProxL1:
+    """h(x) = λ‖x‖₁ → soft thresholding."""
+    lam: float
+
+    def value(self, x: Array) -> Array:
+        return self.lam * jnp.sum(jnp.abs(x))
+
+    def prox(self, x: Array, t: Array) -> Array:
+        return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t * self.lam, 0.0)
+
+
+@dataclass(frozen=True)
+class ProxL2Sq:
+    """h(x) = (λ/2)‖x‖₂² → shrinkage."""
+    lam: float
+
+    def value(self, x: Array) -> Array:
+        return 0.5 * self.lam * jnp.vdot(x, x)
+
+    def prox(self, x: Array, t: Array) -> Array:
+        return x / (1.0 + t * self.lam)
+
+
+@dataclass(frozen=True)
+class ProxNonneg:
+    """Indicator of {x ≥ 0} → projection (the LP cone)."""
+
+    def value(self, x: Array) -> Array:
+        return jnp.asarray(0.0, x.dtype)   # +inf outside; solvers stay inside
+
+    def prox(self, x: Array, t: Array) -> Array:
+        return jnp.maximum(x, 0.0)
+
+
+@dataclass(frozen=True)
+class ProxBox:
+    lo: float
+    hi: float
+
+    def value(self, x: Array) -> Array:
+        return jnp.asarray(0.0, x.dtype)
+
+    def prox(self, x: Array, t: Array) -> Array:
+        return jnp.clip(x, self.lo, self.hi)

@@ -1,0 +1,168 @@
+"""The TFOCS first-order engine (paper §3.2): Auslender–Teboulle accelerated
+proximal gradient with backtracking Lipschitz estimation, gradient-test
+restart, and linear-operator structure caching.
+
+Composite problem:  minimize  f(A x) + h(x)
+  * `linop`  (A)  — distributed matrix ops (cluster)
+  * `smooth` (f)  — evaluated in data space
+  * `prox`   (h)  — vector math on the replicated variable (driver)
+
+The linear-operator caching is the paper's "the optimizer may evaluate the
+(expensive) linear component and cache the result": the iterates x̄, z carry
+their images A x̄, A z, so  A y = (1−θ)A x̄ + θA z  costs no matvec, and each
+iteration performs exactly ONE apply and ONE adjoint (per backtracking
+attempt) — the minimum possible.
+
+One engine serves the whole Figure-1 family:
+  accel=False                         → `gra`   (proximal gradient)
+  accel=True                          → `acc`
+  accel=True,  restart=True           → `acc_r`
+  accel=True,  backtracking=True      → `acc_b`
+  accel=True,  both                   → `acc_rb`
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class TfocsOptions:
+    max_iters: int = 500
+    tol: float = 1e-8
+    L0: float = 1.0              # initial Lipschitz estimate
+    Lexact: float | None = None  # if set: no backtracking, fixed step 1/L
+    alpha: float = 2.0           # backtracking increase factor
+    beta: float = 0.9            # per-iteration optimistic L decay
+    max_backtracks: int = 30
+    accel: bool = True
+    backtracking: bool = True
+    restart: bool = False        # O'Donoghue–Candès gradient-test restart
+
+
+class TfocsState(NamedTuple):
+    x: Array;  Ax: Array
+    z: Array;  Az: Array
+    theta: Array
+    L: Array
+    k: Array
+    hist: Array                  # objective per outer iteration
+    done: Array
+    n_backtracks: Array
+    n_restarts: Array
+
+
+class _Attempt(NamedTuple):
+    L: Array
+    theta: Array
+    x: Array; Ax: Array; z: Array; Az: Array
+    fy: Array; gy: Array         # data-space gradient at y
+    Ay: Array
+    ok: Array
+    tries: Array
+
+
+def tfocs(smooth, linop, prox, x0: Array,
+          opts: TfocsOptions = TfocsOptions()) -> tuple[Array, dict]:
+    """Run the solver; returns (x*, info dict with per-iteration history)."""
+    backtracking = opts.backtracking and opts.Lexact is None
+    L_init = jnp.asarray(opts.Lexact if opts.Lexact is not None else opts.L0,
+                         jnp.float32)
+
+    def theta_next(theta, L_ratio):
+        """TFOCS θ update; with backtracking the ratio L⁺/L rescales the
+        accumulated momentum."""
+        if not opts.accel:
+            return jnp.asarray(1.0, jnp.float32)
+        return 2.0 / (1.0 + jnp.sqrt(1.0 + 4.0 * L_ratio / (theta * theta)))
+
+    def attempt_once(a: _Attempt) -> _Attempt:
+        """One candidate step at the current (L, θ); θ is recomputed by the
+        caller whenever L changes (backtracking rescales the momentum)."""
+        y = (1 - a.theta) * a.x + a.theta * a.z
+        Ay = (1 - a.theta) * a.Ax + a.theta * a.Az
+        fy = smooth.value(Ay)
+        gy = smooth.grad(Ay)
+        g = linop.adjoint(gy)                       # ← ONE adjoint
+        step = 1.0 / (a.L * a.theta)
+        z_new = prox.prox(a.z - step * g, step)
+        Az_new = linop.apply(z_new)                 # ← ONE apply
+        x_new = (1 - a.theta) * a.x + a.theta * z_new
+        Ax_new = (1 - a.theta) * a.Ax + a.theta * Az_new
+        f_new = smooth.value(Ax_new)
+        dx = x_new - y
+        rhs = fy + jnp.vdot(gy, Ax_new - Ay) + 0.5 * a.L * jnp.vdot(dx, dx)
+        ok = f_new <= rhs + 1e-12 * jnp.abs(fy)
+        return a._replace(x=x_new, Ax=Ax_new, z=z_new, Az=Az_new,
+                          fy=fy, gy=gy, Ay=Ay, ok=ok, tries=a.tries + 1)
+
+    def outer(state: TfocsState) -> TfocsState:
+        L0k = state.L * (opts.beta if backtracking else 1.0)
+        theta0 = theta_next(state.theta, L0k / state.L)
+
+        init = _Attempt(L=L0k, theta=theta0,
+                        x=state.x, Ax=state.Ax, z=state.z, Az=state.Az,
+                        fy=jnp.float32(0), gy=jnp.zeros_like(state.Ax),
+                        Ay=state.Ax, ok=jnp.asarray(False),
+                        tries=jnp.int32(0))
+        first = attempt_once(init)
+
+        if backtracking:
+            def bt_cond(a: _Attempt):
+                return (~a.ok) & (a.tries < opts.max_backtracks)
+
+            def bt_body(a: _Attempt):
+                L_new = a.L * opts.alpha
+                theta_new = theta_next(state.theta, L_new / state.L)
+                return attempt_once(a._replace(
+                    L=L_new, theta=theta_new,
+                    x=state.x, Ax=state.Ax, z=state.z, Az=state.Az))
+
+            acc = jax.lax.while_loop(bt_cond, bt_body, first)
+        else:
+            acc = first
+
+        # Gradient-test restart: momentum points uphill → reset it.
+        if opts.restart and opts.accel:
+            uphill = jnp.vdot(acc.gy, acc.Ax - state.Ax) > 0
+            theta_out = jnp.where(uphill, 1.0, acc.theta)
+            z_out = jnp.where(uphill, acc.x, acc.z)
+            Az_out = jnp.where(uphill, acc.Ax, acc.Az)
+            n_restarts = state.n_restarts + uphill.astype(jnp.int32)
+        else:
+            theta_out, z_out, Az_out = acc.theta, acc.z, acc.Az
+            n_restarts = state.n_restarts
+
+        obj = smooth.value(acc.Ax) + prox.value(acc.x)
+        hist = state.hist.at[state.k].set(obj)
+        dx = acc.x - state.x
+        rel = jnp.linalg.norm(dx) / jnp.maximum(1.0, jnp.linalg.norm(acc.x))
+        return TfocsState(
+            x=acc.x, Ax=acc.Ax, z=z_out, Az=Az_out,
+            theta=theta_out, L=acc.L, k=state.k + 1, hist=hist,
+            done=rel < opts.tol,
+            n_backtracks=state.n_backtracks + acc.tries - 1,
+            n_restarts=n_restarts)
+
+    def cond(state: TfocsState):
+        return (~state.done) & (state.k < opts.max_iters)
+
+    Ax0 = linop.apply(x0)
+    init = TfocsState(
+        x=x0, Ax=Ax0, z=x0, Az=Ax0,
+        theta=jnp.asarray(1.0, jnp.float32), L=L_init,
+        k=jnp.int32(0),
+        hist=jnp.full((opts.max_iters,), jnp.nan, jnp.float32),
+        done=jnp.asarray(False),
+        n_backtracks=jnp.int32(0), n_restarts=jnp.int32(0))
+    final = jax.lax.while_loop(cond, outer, init)
+    info = {"iterations": final.k, "history": final.hist,
+            "n_backtracks": final.n_backtracks,
+            "n_restarts": final.n_restarts,
+            "objective": final.hist[jnp.maximum(final.k - 1, 0)]}
+    return final.x, info

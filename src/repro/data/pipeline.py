@@ -1,0 +1,100 @@
+"""Deterministic, shardable, resumable synthetic data pipeline.
+
+Real pretraining data layers (tokenized shards + samplers) reduce, for the
+purposes of this framework, to a function `step → global batch` that is
+(a) deterministic (restart-safe: re-delivers the same batch after a
+checkpoint restore), (b) cheap to evaluate anywhere (any host can produce
+any shard — elastic re-sharding needs no data movement), and (c) pure, so
+it can run either host-side or in-graph.
+
+`in_graph_batch` is the production path: the batch is *generated on the
+devices* from (seed, step) via counter-based PRNG, so the input pipeline
+can never be the straggler and needs no host↔device transfer at all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 1234
+    frontend: str | None = None
+    frontend_len: int = 0
+    d_model: int = 0
+
+
+def from_model(cfg: ModelConfig, global_batch: int, seq_len: int,
+               seed: int = 1234) -> DataConfig:
+    return DataConfig(vocab_size=cfg.vocab_size, global_batch=global_batch,
+                      seq_len=seq_len, seed=seed, frontend=cfg.frontend,
+                      frontend_len=(seq_len if cfg.family == "encdec"
+                                    else cfg.frontend_len),
+                      d_model=cfg.d_model)
+
+
+def in_graph_batch(dc: DataConfig, step) -> dict:
+    """Pure (traceable) batch synthesis from the step counter."""
+    key = jax.random.fold_in(jax.random.PRNGKey(dc.seed), step)
+    k1, k2 = jax.random.split(key)
+    batch = {"tokens": jax.random.randint(
+        k1, (dc.global_batch, dc.seq_len), 0, dc.vocab_size, jnp.int32)}
+    if dc.frontend:
+        batch["frontend_embeds"] = jax.random.normal(
+            k2, (dc.global_batch, dc.frontend_len, dc.d_model),
+            jnp.bfloat16) * 0.02
+    return batch
+
+
+class HostIterator:
+    """Host-side equivalent with explicit, checkpointable state."""
+
+    def __init__(self, dc: DataConfig, start_step: int = 0):
+        self.dc = dc
+        self.step = start_step
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.dc.seed}
+
+    @staticmethod
+    def restore(dc: DataConfig, state: dict) -> "HostIterator":
+        assert state["seed"] == dc.seed, "seed mismatch on restore"
+        return HostIterator(dc, start_step=state["step"])
+
+    def __next__(self) -> dict:
+        rng = np.random.default_rng((self.dc.seed, self.step))
+        batch = {"tokens": rng.integers(
+            0, self.dc.vocab_size,
+            (self.dc.global_batch, self.dc.seq_len)).astype(np.int32)}
+        if self.dc.frontend:
+            batch["frontend_embeds"] = (rng.standard_normal(
+                (self.dc.global_batch, self.dc.frontend_len,
+                 self.dc.d_model)) * 0.02).astype(np.float32)
+        self.step += 1
+        return batch
+
+    def shard_for(self, host_index: int, num_hosts: int) -> "ShardView":
+        return ShardView(self, host_index, num_hosts)
+
+
+class ShardView:
+    """Per-host slice of the global batch (multi-host data loading)."""
+
+    def __init__(self, it: HostIterator, idx: int, n: int):
+        assert it.dc.global_batch % n == 0
+        self.it, self.idx, self.n = it, idx, n
+
+    def __next__(self) -> dict:
+        full = next(self.it)
+        per = self.it.dc.global_batch // self.n
+        lo = self.idx * per
+        return jax.tree.map(lambda x: x[lo:lo + per], full)

@@ -1,0 +1,121 @@
+"""Block-sparse (BSR/ELL) × dense matmul — paper §4.2 adapted to the MXU.
+
+MLlib stores local sparse matrices in CCS and hand-rolls SpMV/SpMM because
+JVM BLAS has no sparse story.  A TPU has the *opposite* problem: scalar
+gathers are slow but dense (8·k × 128·l) tiles are free, so the TPU-native
+sparse format is block-CSR padded to ELL: every block-row holds a fixed
+number of (bs × bs) blocks (zero-padded — a zero block contributes nothing,
+which removes all control flow from the kernel).
+
+The column indices live in SMEM via scalar prefetch, and the index_map
+*gathers the needed X block directly* — the kernel body is one dense MXU
+matmul per block, i.e. sparsity is handled entirely by the grid machinery.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+Array = jax.Array
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("data", "cols"), meta_fields=("shape",))
+@dataclass(frozen=True)
+class BlockELL:
+    """Fixed-width block-sparse rows: data[i, j] is the j-th stored block of
+    block-row i, at block-column col[i, j] (padding blocks are zero with
+    col = 0)."""
+    data: Array      # (n_block_rows, ell, bs, bs)
+    cols: Array      # (n_block_rows, ell) int32
+    shape: tuple[int, int]
+
+    @property
+    def bs(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def ell(self) -> int:
+        return self.data.shape[1]
+
+    @staticmethod
+    def from_dense(a: np.ndarray, bs: int) -> "BlockELL":
+        m, n = a.shape
+        assert m % bs == 0 and n % bs == 0, (a.shape, bs)
+        nbr, nbc = m // bs, n // bs
+        blocks = a.reshape(nbr, bs, nbc, bs).transpose(0, 2, 1, 3)
+        nz = np.abs(blocks).sum(axis=(2, 3)) > 0          # (nbr, nbc)
+        ell = max(int(nz.sum(1).max()), 1)
+        data = np.zeros((nbr, ell, bs, bs), a.dtype)
+        cols = np.zeros((nbr, ell), np.int32)
+        for i in range(nbr):
+            js = np.nonzero(nz[i])[0]
+            for slot, j in enumerate(js):
+                data[i, slot] = blocks[i, j]
+                cols[i, slot] = j
+        return BlockELL(jnp.asarray(data), jnp.asarray(cols), (m, n))
+
+    def to_dense(self) -> Array:
+        m, n = self.shape
+        bs, nbr, ell = self.bs, self.data.shape[0], self.ell
+        out = jnp.zeros((nbr, n // bs, bs, bs), self.data.dtype)
+        rows = jnp.repeat(jnp.arange(nbr), ell)
+        out = out.at[rows, self.cols.reshape(-1)].add(
+            self.data.reshape(-1, bs, bs))
+        return out.transpose(0, 2, 1, 3).reshape(m, n)
+
+    def density(self) -> float:
+        nbc = self.shape[1] // self.bs
+        return self.ell / nbc
+
+
+def _bsr_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, ell: int):
+    del cols_ref   # consumed by the index_map gathers
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0], x_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == ell - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_matmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
+    """y = A @ X for block-ELL A (m × n) and dense X (n × nx)."""
+    m, n = a.shape
+    assert x.shape[0] == n, (a.shape, x.shape)
+    nx = x.shape[1]
+    bs, ell = a.bs, a.ell
+    nbr = m // bs
+    flat = a.data.reshape(nbr * ell, bs, bs)
+    cols = a.cols.reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nbr, ell),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
+            pl.BlockSpec((bs, nx), lambda i, j, cols: (cols[i * ell + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, nx), lambda i, j, cols: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bs, nx), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_bsr_kernel, ell=ell),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nx), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="repro_bsr_matmul",
+    )(cols, flat, x)

@@ -1,0 +1,128 @@
+"""Public jit'd wrappers: shape padding, layout handling, backend dispatch.
+
+On TPU these call the Pallas kernels; on CPU they dispatch to the jnp
+reference (identical semantics) unless `force_pallas=True`, which runs the
+kernel body in interpret mode — that is how the test suite validates the
+kernels on this CPU-only container.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import gemm as _gemm
+from . import tsgram as _tsgram
+from . import bsr as _bsr
+from . import flash_attention as _fa
+from . import selective_scan as _ss
+from . import ref as _ref
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: Array, axis: int, multiple: int) -> Array:
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def gemm(a: Array, b: Array, *, bm: int = 256, bn: int = 256, bk: int = 512,
+         out_dtype=None, force_pallas: bool = False) -> Array:
+    """C = A @ B, arbitrary shapes (padded up to tiles internally)."""
+    if not (_on_tpu() or force_pallas):
+        return _ref.gemm_ref(a, b, out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    bm_, bn_, bk_ = (min(bm, _rup(m, 8)), min(bn, _rup(n, 128)),
+                     min(bk, _rup(k, 128)))
+    ap = _pad_to(_pad_to(a, 0, bm_), 1, bk_)
+    bp = _pad_to(_pad_to(b, 0, bk_), 1, bn_)
+    out = _gemm.gemm(ap, bp, bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype,
+                     interpret=not _on_tpu())
+    return out[:m, :n]
+
+
+def tsgram(a: Array, *, bm: int = 512, out_dtype=None,
+           force_pallas: bool = False) -> Array:
+    """G = AᵀA for tall-skinny A (n padded to lanes internally)."""
+    if not (_on_tpu() or force_pallas):
+        return _ref.tsgram_ref(a, out_dtype)
+    m, n = a.shape
+    bm_ = min(bm, _rup(m, 8))
+    ap = _pad_to(_pad_to(a, 0, bm_), 1, 128)
+    out = _tsgram.tsgram(ap, bm=bm_, out_dtype=out_dtype,
+                         interpret=not _on_tpu())
+    return out[:n, :n]
+
+
+def bsr_matmul(a: "_bsr.BlockELL", x: Array, *,
+               force_pallas: bool = False) -> Array:
+    """y = A @ X for block-sparse A."""
+    if not (_on_tpu() or force_pallas):
+        return _ref.bsr_matmul_ref(a, x)
+    nx = x.shape[1]
+    xp = _pad_to(x, 1, 128)
+    out = _bsr.bsr_matmul(a, xp, interpret=not _on_tpu())
+    return out[:, :nx]
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    scale: float | None = None, bq: int = 256, bk: int = 256,
+                    force_pallas: bool = False) -> Array:
+    """q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq a multiple of Hkv.
+    Returns (B, Hq, S, D)."""
+    B, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if not (_on_tpu() or force_pallas):
+        out = _ref.flash_attention_ref(
+            q.reshape(B * hq, sq, d), k.reshape(B * hkv, sk, d),
+            v.reshape(B * hkv, sk, d), scale=scale, causal=causal,
+            q_heads_per_kv=group)
+        return out.reshape(B, hq, sq, d)
+    bq_ = min(bq, _rup(sq, 8))
+    bk_ = min(bk, _rup(sk, 128))
+    qp = _pad_to(q.reshape(B * hq, sq, d), 1, bq_)
+    kp = _pad_to(k.reshape(B * hkv, sk, d), 1, bk_)
+    vp = _pad_to(v.reshape(B * hkv, sk, d), 1, bk_)
+    # Padded KV columns sit at causal positions > every real query row, so
+    # with causal=True they are masked out automatically; for non-causal we
+    # fall back to explicit slicing of K/V (pad only Q).
+    if not causal and kp.shape[1] != sk:
+        raise NotImplementedError("non-causal requires S_k % bk == 0")
+    out = _fa.flash_attention(qp, kp, vp, scale=scale, causal=causal,
+                              bq=bq_, bk=bk_, q_heads_per_kv=group,
+                              interpret=not _on_tpu())
+    return out[:, :sq].reshape(B, hq, sq, d)
+
+
+def selective_scan(x, dt, A, B, C, D, *, q: int = 256,
+                   force_pallas: bool = False):
+    """Fused Mamba1 scan; pads S to q and d to 128 internally."""
+    if not (_on_tpu() or force_pallas):
+        return _ref.selective_scan_ref(x, dt, A, B, C, D)
+    Bt, S, d = x.shape
+    q_ = min(q, _rup(S, 8))
+    xp = _pad_to(_pad_to(x, 1, q_), 2, 128)
+    dtp = _pad_to(_pad_to(dt, 1, q_), 2, 128)
+    Bp = _pad_to(B, 1, q_)
+    Cp = _pad_to(C, 1, q_)
+    Ap = _pad_to(A, 0, 128)
+    Dp = _pad_to(D, 0, 128)
+    out = _ss.selective_scan(xp, dtp, Ap, Bp, Cp, Dp, q=q_,
+                             bd=min(128, xp.shape[2]),
+                             interpret=not _on_tpu())
+    return out[:, :S, :d]
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

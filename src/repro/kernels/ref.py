@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def gemm_ref(a: Array, b: Array, out_dtype=None) -> Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def tsgram_ref(a: Array, out_dtype=None) -> Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.T, a, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def bsr_matmul_ref(a, x: Array) -> Array:
+    """Oracle via densification of the BlockELL operand."""
+    dense = a.to_dense().astype(jnp.float32)
+    return jnp.dot(dense, x.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *,
+                        scale: float | None = None, causal: bool = True,
+                        q_heads_per_kv: int = 1) -> Array:
+    """Naive attention with explicit (S × S) scores, f32 softmax."""
+    bhq, sq, d = q.shape
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(d))
+    if q_heads_per_kv > 1:
+        k = jnp.repeat(k, q_heads_per_kv, axis=0)
+        v = jnp.repeat(v, q_heads_per_kv, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, A, B, C, D):
+    """Sequential oracle for the Mamba1 recurrence (f32)."""
+    Bt, S, d = x.shape
+    N = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(dtf[:, t, :, None] * A[None])          # (Bt,d,N)
+        h = decay * h + (dtf[:, t] * xf[:, t])[..., None] * \
+            B[:, t, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, C[:, t].astype(jnp.float32)) \
+            + D * xf[:, t]
+        return h, y
+
+    h0 = jnp.zeros((Bt, d, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

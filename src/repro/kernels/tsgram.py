@@ -1,0 +1,59 @@
+"""Tall-skinny Gram kernel: G = AᵀA for m ≫ n (the DIMSUM hotspot, §3.1.2).
+
+This is the per-shard compute inside RowMatrix.gram(): each chip reduces its
+(m_local × n) row shard to an (n × n) partial Gram before the cross-chip
+psum.  The kernel streams row blocks through VMEM while the full (n × n)
+float32 accumulator stays resident — one pass over A, fully MXU-bound, no
+(m × n) intermediate ever materialized in HBM.
+
+Constraint: n ≤ ~1024 so the accumulator (n²·4 B) fits comfortably in VMEM
+alongside the streaming row block — exactly the paper's "AᵀA fits on the
+driver" regime, one level down the memory hierarchy (HBM → VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+Array = jax.Array
+
+
+def _tsgram_kernel(a_ref, o_ref, acc_ref, *, m_steps: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = a_ref[...]
+    acc_ref[...] += jnp.dot(blk.T, blk, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == m_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret", "out_dtype"))
+def tsgram(a: Array, *, bm: int = 512, out_dtype=None,
+           interpret: bool = False) -> Array:
+    """G = AᵀA streaming over row blocks of size `bm`.
+    m must be a multiple of bm and n a multiple of 128 (ops.tsgram pads)."""
+    m, n = a.shape
+    assert m % bm == 0, (m, bm)
+    out_dtype = out_dtype or a.dtype
+    m_steps = m // bm
+
+    return pl.pallas_call(
+        functools.partial(_tsgram_kernel, m_steps=m_steps),
+        grid=(m_steps,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="repro_tsgram",
+    )(a)

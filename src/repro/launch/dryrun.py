@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), record memory/cost analysis and
+roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the
+device count at first init.  Results land in experiments/dryrun/*.json and
+are skipped when already present (resumable)."""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: pathlib.Path,
+             *, force: bool = False, plan_kw: dict | None = None,
+             tag: str = "", no_full: bool = False) -> dict | None:
+    from repro.configs.shapes import applicable
+    from repro import configs as cfgs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import make_plan
+    from repro.launch import roofline as RL
+
+    name = f"{arch}__{shape}__{mesh_kind}{tag}"
+    out_path = out_dir / f"{name}.json"
+    if out_path.exists() and not force:
+        print(f"[skip-cached] {name}")
+        return json.loads(out_path.read_text())
+
+    cfg = cfgs.get(arch)
+    runs, why = applicable(cfg, shape)
+    if not runs:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "status": "skipped", "reason": why}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[skip] {name}: {why}")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    try:
+        from repro.launch import costmodel as CM
+        kw = dict(plan_kw or {})
+        # 1) full config, scan-over-layers: THE runnability/memory proof
+        plan = make_plan(arch, shape, mesh, **kw)
+        if no_full:
+            # §Perf fast path: skip the full-depth compile; per-layer
+            # roofline deltas come from the cost-model variants alone.
+            # argument bytes computed analytically from the arg shardings.
+            import numpy as _np
+
+            def _pd(sds):
+                sh = sds.sharding
+                n = 1
+                for ent in (sh.spec or ()):
+                    if ent is None:
+                        continue
+                    for a in (ent if isinstance(ent, tuple) else (ent,)):
+                        n *= sh.mesh.shape[a]
+                return int(_np.prod(sds.shape)) * sds.dtype.itemsize / n
+
+            arg_bytes = sum(_pd(x) for x in jax.tree.leaves(plan.args))
+            t_lower = t_compile = 0.0
+
+            class _M:
+                argument_size_in_bytes = int(arg_bytes)
+                output_size_in_bytes = 0
+                temp_size_in_bytes = 0
+                alias_size_in_bytes = 0
+                generated_code_size_in_bytes = 0
+
+            mem = _M()
+        else:
+            lowered = plan.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+        plan.meta["argument_bytes"] = mem.argument_size_in_bytes
+        # 2) trip-count-correct costs from reduced unrolled variants
+        #    (pin the full plan's sharding policy so layers are identical).
+        #    The roofline table is single-pod; multipod cells only need the
+        #    compile/memory proof, so skip the cost model there.
+        if mesh_kind == "multipod" and not (plan_kw or {}).get(
+                "force_costmodel"):
+            costs = None
+            roof = None
+        else:
+            kw.setdefault("fsdp", plan.meta["fsdp"])
+            kw.pop("microbatches", None)  # cost model pins microbatches=1
+            kw.pop("force_costmodel", None)
+            costs = CM.measure(arch, shape, mesh, make_plan, kw)
+            roof = RL.as_dict(RL.analyze(costs["flops"],
+                                         costs["hbm_bytes"],
+                                         costs["collective_bytes"],
+                                         plan.meta))
+        t_cost = time.time() - t0 - t_lower - t_compile
+        rec = {
+            "arch": arch, "shape": shape, "mesh": mesh_kind,
+            "status": "ok",
+            "meta": plan.meta,
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+                "peak_per_device": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+            },
+            "roofline": roof,
+            "collectives": costs["collectives"] if costs else None,
+            "cost_variants": costs["variants"] if costs else None,
+            "timing": {"lower_s": t_lower, "compile_s": t_compile,
+                       "costmodel_s": t_cost},
+        }
+        out_path.write_text(json.dumps(rec, indent=2))
+        fit = rec["memory"]["peak_per_device"] / 16e9
+        if roof:
+            print(f"[ok] {name}: bound={roof['bound']} "
+                  f"step={roof['step_s']*1e3:.2f}ms "
+                  f"roofline={roof['roofline_fraction']*100:.1f}% "
+                  f"mem={fit*100:.0f}% of HBM "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        else:
+            print(f"[ok] {name}: compiled; mem={fit*100:.0f}% of HBM "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        return rec
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        out_path.write_text(json.dumps(rec, indent=2))
+        print(f"[FAIL] {name}: {type(e).__name__}: {e}")
+        return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--fsdp", choices=["auto", "on", "off"], default="auto")
+    ap.add_argument("--no-full", action="store_true",
+                    help="skip the full-depth compile (cost model only)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides key=value (int/float/str)")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, \
+        "dry-run requires the 512 placeholder devices (import order bug?)"
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    plan_kw = {"microbatches": args.microbatches,
+               "optimizer": args.optimizer}
+    if args.fsdp != "auto":
+        plan_kw["fsdp"] = args.fsdp == "on"
+    if args.set:
+        ov = {}
+        for kv in args.set:
+            k, v = kv.split("=", 1)
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+            ov[k] = v
+        plan_kw["overrides"] = ov
+
+    from repro import configs as cfgs
+    from repro.configs.shapes import SHAPES
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in cfgs.ARCHES:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for m in meshes:
+            cells.append((args.arch, args.shape, m))
+
+    failures = 0
+    for a, s, m in cells:
+        rec = run_cell(a, s, m, out_dir, force=args.force, plan_kw=plan_kw,
+                       tag=args.tag, no_full=args.no_full)
+        if rec and rec.get("status") == "error":
+            failures += 1
+    print(f"done: {len(cells)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single-pod: (data=16, model=16) — 256 chips (one v5e pod slice).
+Multi-pod : (pod=2, data=16, model=16) — 512 chips; 'pod' is an outer
+data-parallel axis (the only cross-pod collective is the once-per-step
+gradient all-reduce, optionally compressed — see train.compression).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run pins the device count before first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/drivers."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,126 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute   = HLO_FLOPs        / (chips × 197 TFLOP/s bf16)
+  memory    = HLO_bytes        / (chips × 819 GB/s HBM)
+  collective= collective_bytes / (chips × 50 GB/s ICI link)
+
+cost_analysis() on an SPMD executable reports the *per-device* module, so
+the per-chip division is already done for compute/memory (verified in
+tests/test_dryrun.py::test_cost_analysis_is_per_device).  Collective bytes
+are not in cost_analysis — they are parsed from the optimized HLO: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op contributes its result-buffer bytes (per-device traffic; ring-algorithm
+wire factors ~2(N−1)/N are noted, not applied).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped buffer, e.g. bf16[8,128]{1,0} or f32[] or pred[4]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _buffer_bytes(text: str) -> float:
+    """Sum bytes of every shaped buffer in `text` (handles tuples)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-category result-buffer bytes + op counts from optimized HLO."""
+    out: dict[str, dict] = {c: {"bytes": 0.0, "count": 0}
+                            for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # match "<result shape(s)> <op>(" with optional -start/-done forms
+        m = re.match(r"%?[\w.\-]+ = (.+?) (\w[\w-]*)\(", line)
+        if not m:
+            continue
+        result_part, op = m.groups()
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out[base]["bytes"] += _buffer_bytes(result_part)
+            out[base]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops: float
+    useful_fraction: float
+    step_s: float
+    roofline_fraction: float
+
+
+def analyze(flops: float, hbm: float, collective_bytes: float,
+            meta: dict) -> Roofline:
+    """All inputs are PER-DEVICE quantities (SPMD modules report
+    per-device costs; trip-count-corrected by launch.costmodel)."""
+    chips = int(np.prod(list(meta["mesh"].values())))
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = collective_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D serving (fwd only),
+    # N = active params (MoE discount), D = tokens processed this step.
+    n = meta["params_active"]
+    d = meta["tokens_per_step"]
+    mf = (6.0 if meta["kind"] == "train" else 2.0) * n * d
+    mf_per_chip = mf / chips
+    useful = mf_per_chip / flops if flops else 0.0
+
+    step = max(terms.values())
+    # Ideal step: useful model FLOPs at peak, floored by reading every
+    # live byte (params + optimizer state + caches) exactly once — the
+    # bandwidth bound that governs decode.
+    arg_bytes = float(meta.get("argument_bytes", 0.0))
+    ideal = max(mf_per_chip / PEAK_FLOPS, arg_bytes / HBM_BW)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=collective_bytes,
+        chips=chips, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bound=bound, model_flops=mf,
+        useful_fraction=useful, step_s=step,
+        roofline_fraction=(ideal / step if step else 0.0))
+
+
+def as_dict(r: Roofline) -> dict:
+    return dataclasses.asdict(r)

@@ -1,0 +1,252 @@
+"""Per-(arch × shape × mesh) lowering plans.
+
+`make_plan` assembles everything the dry-run needs: the step function
+(train / prefill / decode), ShapeDtypeStruct stand-ins for every input with
+their NamedShardings attached (no allocation — the 671B config lowers on a
+CPU container), and workload metadata for the roofline.
+
+Sharding policy (defaults; §Perf iterates on these):
+  * params: TP specs from the model; FSDP (extra data-axis sharding of the
+    largest free dim) switched on automatically when the replicated-over-dp
+    footprint would not fit HBM;
+  * optimizer state: ZeRO-1 (sharded over data axes) always;
+  * batch: sharded over (pod, data); decode cells with global_batch <
+    dp_size shard the KV cache *sequence* dim instead (single-stream
+    long-context decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.models import build
+from repro.models.sharding import use_mesh, batch_axes
+from repro.data import pipeline as data_pipeline
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import build_train_step
+
+Array = jax.Array
+
+HBM_BYTES = 16e9           # v5e
+FSDP_PARAM_THRESHOLD = 6e9  # bytes/device above which params go FSDP
+
+
+def _sds(shape_dtype, sharding):
+    return jax.ShapeDtypeStruct(shape_dtype.shape, shape_dtype.dtype,
+                                sharding=sharding)
+
+
+def _tree_sds(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda sd, sp: _sds(sd, NamedSharding(mesh, sp)), shapes, specs,
+        is_leaf=lambda v: isinstance(v, P) or hasattr(v, "shape"))
+
+
+def _fsdp_specs(shapes, specs, mesh):
+    """Shard the largest None-dim of each leaf over the data axes."""
+    ba = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def leaf(sd, sp):
+        full = list(sp) + [None] * (len(sd.shape) - len(sp))
+        used = {a for s in full if s is not None
+                for a in (s if isinstance(s, tuple) else (s,))}
+        if any(a in used for a in ba):
+            return P(*full)            # already dp-sharded (e.g. moe_2d)
+        best, best_dim = -1, -1
+        for i, (dim, s) in enumerate(zip(sd.shape, full)):
+            if s is None and dim % dp == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0:
+            full[best] = ba
+        return P(*full)
+
+    return jax.tree.map(leaf, shapes, specs,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def _param_bytes(shapes) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(shapes))
+
+
+def _count_params(shapes, cfg) -> tuple[int, int]:
+    """(total, active) parameter counts (active discounts routed experts)."""
+    total = active = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if cfg.moe and "ffn" in keys and any(
+                k in ("w_gate", "w_up", "w_down") for k in keys) \
+                and len(leaf.shape) == 4:
+            active += int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        else:
+            active += n
+    return total, active
+
+
+def _seq_shard_caches(shapes, specs, mesh):
+    """long_500k: batch=1 → shard cache sequence dim over the data axes."""
+    ba = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def leaf(sd, sp):
+        full = list(sp) + [None] * (len(sd.shape) - len(sp))
+        # drop batch-axes sharding (batch dim is 1)
+        out = [None if (isinstance(s, tuple) or (isinstance(s, str)
+                        and s in ba)) else s for s in full]
+        # shard the largest remaining free dim (the sequence) instead
+        cands = [i for i, (dim, s) in enumerate(zip(sd.shape, out))
+                 if s is None and dim % dp == 0 and dim >= dp]
+        if cands:
+            i = max(cands, key=lambda j: sd.shape[j])
+            out[i] = ba
+        return P(*out)
+
+    return jax.tree.map(leaf, shapes, specs,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+@dataclasses.dataclass
+class Plan:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple
+    donate: tuple
+    mesh: Mesh
+    meta: dict
+
+    def lower(self):
+        with self.mesh, use_mesh(self.mesh):
+            return jax.jit(self.fn, donate_argnums=self.donate).lower(
+                *self.args)
+
+
+def make_plan(arch: str, shape_name: str, mesh: Mesh, *,
+              microbatches: int | None = None, fsdp: bool | None = None,
+              zero1: bool = True, moment_dtype: str | None = None,
+              optimizer: str = "adamw",
+              overrides: dict | None = None) -> Plan:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind != "train":
+        cfg = cfg.scaled(remat="none")   # no backward pass → never remat
+    if overrides:
+        overrides = dict(overrides)
+        ssm_chunk = overrides.pop("ssm_chunk", None)
+        if ssm_chunk and cfg.ssm:
+            cfg = cfg.scaled(ssm=dataclasses.replace(cfg.ssm,
+                                                     chunk=int(ssm_chunk)))
+        cfg = cfg.scaled(**overrides)
+    runs, why = applicable(cfg, shape_name)
+    if not runs:
+        raise ValueError(f"{arch} × {shape_name} skipped: {why}")
+
+    with use_mesh(mesh):
+        model = build(cfg)
+        p_shapes, p_specs = model.specs()
+        ba = batch_axes(mesh)
+        dp = int(np.prod([mesh.shape[a] for a in ba]))
+
+        per_dev = _param_bytes(p_shapes) / mesh.shape["model"]
+        use_fsdp = fsdp if fsdp is not None else per_dev > FSDP_PARAM_THRESHOLD
+        if microbatches is None:
+            # default: ~2 sequences per device per microbatch
+            microbatches = max(1, shape.global_batch // (dp * 2)) \
+                if shape.kind == "train" else 1
+        if use_fsdp:
+            p_specs = _fsdp_specs(p_shapes, p_specs, mesh)
+        params = _tree_sds(p_shapes, p_specs, mesh)
+
+        total, active = _count_params(p_shapes, cfg)
+        meta = {
+            "arch": arch, "shape": shape_name, "kind": shape.kind,
+            "params_total": total, "params_active": active,
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+            "fsdp": use_fsdp, "zero1": zero1,
+            "microbatches": microbatches,
+            "mesh": dict(mesh.shape),
+        }
+
+        if shape.kind == "train":
+            big = _param_bytes(p_shapes) > 8e11
+            mdt = moment_dtype or ("bfloat16" if big else "float32")
+            ocfg = opt_mod.OptimizerConfig(name=optimizer, moment_dtype=mdt)
+            opt_init, opt_update = opt_mod.make_optimizer(ocfg)
+            o_shapes, o_specs = opt_mod.make_opt_specs(
+                opt_init, p_shapes, p_specs, zero1=zero1, mesh=mesh)
+            opt_state = _tree_sds(o_shapes, o_specs, mesh)
+            dc = data_pipeline.from_model(cfg, shape.global_batch,
+                                          shape.seq_len)
+            batch_shapes = jax.eval_shape(
+                lambda: data_pipeline.in_graph_batch(dc, 0))
+            bspec = {"tokens": P(ba, None)}
+            if "frontend_embeds" in batch_shapes:
+                bspec["frontend_embeds"] = P(ba, None, None)
+            batch = _tree_sds(batch_shapes, bspec, mesh)
+            import jax.numpy as _jnp
+            step = build_train_step(model, opt_update,
+                                    microbatches=microbatches,
+                                    accum_dtype=(_jnp.bfloat16 if big
+                                                 else _jnp.float32))
+            meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+            meta["moment_dtype"] = mdt
+            meta["accum_dtype"] = "bfloat16" if big else "float32"
+            return Plan(arch, shape_name, "train", step,
+                        (params, opt_state, batch), (0, 1), mesh, meta)
+
+        # ---- serving cells ----
+        gb, S = shape.global_batch, shape.seq_len
+        box = {}
+
+        def cache_shapes():
+            if cfg.family == "encdec":
+                c, s = model.init_caches(gb, S, S)
+            else:
+                c, s = model.init_caches(gb, S)
+            box["s"] = s
+            return c
+
+        c_shapes = jax.eval_shape(cache_shapes)
+        c_specs = box["s"]
+        if gb < dp:
+            c_specs = _seq_shard_caches(c_shapes, c_specs, mesh)
+        caches = _tree_sds(c_shapes, c_specs, mesh)
+        tok_spec = P(ba, None) if gb >= dp else P(None, None)
+
+        if shape.kind == "prefill":
+            batch = {"tokens": jax.ShapeDtypeStruct(
+                (gb, S), jnp.int32,
+                sharding=NamedSharding(mesh, tok_spec))}
+            if cfg.frontend:
+                flen = S if cfg.family == "encdec" else cfg.frontend_len
+                batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (gb, flen, cfg.d_model), jnp.bfloat16,
+                    sharding=NamedSharding(
+                        mesh, P(ba, None, None) if gb >= dp
+                        else P(None, None, None)))
+            fn = model.prefill
+            meta["tokens_per_step"] = gb * S
+            return Plan(arch, shape_name, "prefill", fn,
+                        (params, batch, caches), (2,), mesh, meta)
+
+        # decode: one token against a cache of length S
+        tokens = jax.ShapeDtypeStruct(
+            (gb, 1), jnp.int32, sharding=NamedSharding(mesh, tok_spec))
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        fn = model.decode_step
+        meta["tokens_per_step"] = gb
+        return Plan(arch, shape_name, "decode", fn,
+                    (params, tokens, caches, pos), (2,), mesh, meta)

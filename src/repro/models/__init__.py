@@ -1,0 +1,5 @@
+from .config import ModelConfig, MoEConfig, MLAConfig, SSMConfig, smoke_config
+from .registry import build, Model
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+           "smoke_config", "build", "Model"]

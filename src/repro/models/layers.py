@@ -1,0 +1,337 @@
+"""Core transformer layers: norms, RoPE, GQA attention (qk_norm / bias
+options), gated MLP, embeddings, losses.
+
+Pure-functional: every layer is an (init, apply) pair; `init` returns
+(params, specs) where specs is a parallel pytree of PartitionSpec for the
+TP layout (Megatron-style: QKV/up column-parallel over 'model', O/down
+row-parallel, vocab-sharded embeddings).  Params are replicated over the
+data axes; only 'model' appears in param specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .sharding import shard, BATCH, MODEL
+
+Array = jax.Array
+KeyArray = jax.Array
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _dense_init(key: KeyArray, shape, dtype, scale: float | None = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+def init_norm(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        p = {"scale": jnp.ones((d,), jnp.float32),
+             "bias": jnp.zeros((d,), jnp.float32)}
+        s = {"scale": P(None), "bias": P(None)}
+    else:
+        p = {"scale": jnp.ones((d,), jnp.float32)}
+        s = {"scale": P(None)}
+    return p, s
+
+
+def apply_norm(p, x: Array, cfg: ModelConfig) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"] + p["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale: Array, x: Array, eps: float) -> Array:
+    """Per-head RMS norm (qk_norm, Qwen3-style): x (..., hd)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, pos: Array, theta: float) -> Array:
+    """x: (B, S, H, hd), pos: (B, S) int32 → rotated x."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs    # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def init_attention(key: KeyArray, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    p: dict[str, Any] = {
+        "wq": _dense_init(ks[0], (d, H * hd), dt),
+        "wk": _dense_init(ks[1], (d, KV * hd), dt),
+        "wv": _dense_init(ks[2], (d, KV * hd), dt),
+        "wo": _dense_init(ks[3], (H * hd, d), dt),
+    }
+    s: dict[str, Any] = {"wq": P(None, "model"), "wk": P(None, "model"),
+                         "wv": P(None, "model"), "wo": P("model", None)}
+    if cfg.qkv_bias:
+        p |= {"bq": jnp.zeros((H * hd,), dt), "bk": jnp.zeros((KV * hd,), dt),
+              "bv": jnp.zeros((KV * hd,), dt)}
+        s |= {"bq": P("model"), "bk": P("model"), "bv": P("model")}
+    if cfg.qk_norm:
+        p |= {"q_norm": jnp.ones((hd,), jnp.float32),
+              "k_norm": jnp.ones((hd,), jnp.float32)}
+        s |= {"q_norm": P(None), "k_norm": P(None)}
+    return p, s
+
+
+def _qkv(p, x: Array, pos: Array, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    # No explicit head-dim constraints: H/KV are rarely divisible by the TP
+    # width (56 heads on tp=16), and fighting GSPMD's propagation here
+    # causes involuntary remat copies.  The projections' column sharding
+    # propagates a consistent layout on its own.
+    return q, k, v
+
+
+def _mha_direct(q: Array, k: Array, v: Array, *, causal: bool,
+                q_offset: Array | int = 0, kv_mask: Array | None = None,
+                scale: float | None = None) -> Array:
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, KV, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        logits = jnp.where((qpos >= kpos)[None, None, None], logits, -1e30)
+    if kv_mask is not None:
+        logits = jnp.where(kv_mask[:, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def mha(q: Array, k: Array, v: Array, *, causal: bool,
+        q_offset: Array | int = 0, kv_mask: Array | None = None,
+        scale: float | None = None, q_chunk: int = 0,
+        unroll: bool = False) -> Array:
+    """Grouped-query attention, f32 softmax.  q: (B,S,H,hd); k/v: (B,T,KV,·).
+    q_offset: global position of the first query (decode into a cache).
+    kv_mask: (B, T) validity (decode against a partially-filled cache).
+
+    With q_chunk > 0 and long S, queries stream through in chunks so only a
+    (B, H, q_chunk, T) score block is ever live — the XLA-level analogue of
+    the Pallas flash kernel (which replaces this entirely on real TPU; see
+    kernels/flash_attention.py).  Under full-remat training the backward
+    recomputes per chunk, bounding memory both ways."""
+    B, S, H, hd = q.shape
+    if not q_chunk or S <= q_chunk or S % q_chunk:
+        return _mha_direct(q, k, v, causal=causal, q_offset=q_offset,
+                           kv_mask=kv_mask, scale=scale)
+    nc = S // q_chunk
+    qs = jnp.moveaxis(q.reshape(B, nc, q_chunk, H, hd), 1, 0)
+    offs = q_offset + jnp.arange(nc) * q_chunk
+
+    def one(qc, off):
+        return _mha_direct(qc, k, v, causal=causal, q_offset=off,
+                           kv_mask=kv_mask, scale=scale)
+
+    if unroll:
+        outs = jnp.stack([one(qs[i], offs[i]) for i in range(nc)])
+    else:
+        _, outs = jax.lax.scan(lambda c, x: (c, one(*x)), None, (qs, offs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def attention(p, x: Array, pos: Array, cfg: ModelConfig, *,
+              cache: dict | None = None, cache_pos: Array | None = None,
+              xattn_kv: Array | None = None, causal: bool = True):
+    """Full attention with optional KV cache (decode) and cross-attention.
+
+    cache: {"k": (B, Smax, KV, hd), "v": ...} updated at cache_pos.
+    Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    if xattn_kv is not None:
+        # Cross-attention: keys/values from encoder output (no RoPE, no cache
+        # update needed after prefill — kv recomputed or cached upstream).
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        q = (x @ p["wq"]).reshape(B, S, H, hd)
+        k = (xattn_kv @ p["wk"]).reshape(B, xattn_kv.shape[1], KV, hd)
+        v = (xattn_kv @ p["wv"]).reshape(B, xattn_kv.shape[1], KV, hd)
+        out = mha(q, k, v, causal=False, q_chunk=cfg.attn_q_chunk,
+                  unroll=cfg.scan_unroll)
+        out = out.reshape(B, S, -1) @ p["wo"]
+        return shard(out, BATCH, None, None), None
+
+    q, k, v = _qkv(p, x, pos, cfg)
+    if cfg.attn_kv_pregather:
+        # §Perf: materialize fully-gathered K/V ONCE before the q-chunk
+        # loop (XLA cannot hoist the gather out of the scanned loop, so
+        # without this every chunk re-gathers — see EXPERIMENTS.md §Perf).
+        k = shard(k, BATCH, None, None, None)
+        v = shard(v, BATCH, None, None, None)
+    if cache is None:
+        out = mha(q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk,
+                  unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, 1)
+        T = ck.shape[1]
+        kv_mask = jnp.arange(T)[None, :] < (cache_pos + S)
+        out = mha(q, ck, cv, causal=True, q_offset=cache_pos,
+                  kv_mask=kv_mask, q_chunk=cfg.attn_q_chunk,
+                  unroll=cfg.scan_unroll)
+        new_cache = {"k": ck, "v": cv}
+    out = out.reshape(B, S, -1) @ p["wo"]
+    return shard(out, BATCH, None, None), new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         dtype=None):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = dtype or pdtype(cfg)
+    z = jnp.zeros((batch, max_len, KV, hd), dt)
+    # Sequence-sharded cache (context-parallel decode): the attention
+    # contraction over T then needs only O(B·H) softmax-stat psums instead
+    # of gathering the cache — and it works for any KV-head count vs TP
+    # width.  Prefill pays one reshard when writing the cache.
+    spec = P(batch_spec(), "model", None, None)
+    return {"k": z, "v": z}, {"k": spec, "v": spec}
+
+
+def batch_spec():
+    from .sharding import batch_axes
+    return batch_axes()
+
+
+# ----------------------------------------------------------------- mlp -----
+def init_mlp(key: KeyArray, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        p = {"w_gate": _dense_init(ks[0], (d, f), dt),
+             "w_up": _dense_init(ks[1], (d, f), dt),
+             "w_down": _dense_init(ks[2], (f, d), dt)}
+        s = {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+             "w_down": P("model", None)}
+    else:
+        p = {"w_up": _dense_init(ks[0], (d, f), dt),
+             "b_up": jnp.zeros((f,), dt),
+             "w_down": _dense_init(ks[1], (f, d), dt),
+             "b_down": jnp.zeros((d,), dt)}
+        s = {"w_up": P(None, "model"), "b_up": P("model"),
+             "w_down": P("model", None), "b_down": P(None)}
+    return p, s
+
+
+def apply_mlp(p, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = shard(h, BATCH, None, MODEL)
+        out = h @ p["w_down"]
+    else:
+        h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+        h = shard(h, BATCH, None, MODEL)
+        out = h @ p["w_down"] + p["b_down"]
+    return shard(out, BATCH, None, None)
+
+
+# ------------------------------------------------------------ embedding ----
+VOCAB_PAD = 256   # pad vocab so the table shards on any mesh (≤256-way TP)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return ((cfg.vocab_size + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def init_embedding(key: KeyArray, cfg: ModelConfig):
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 2)
+    vp = padded_vocab(cfg)
+    p = {"table": _dense_init(ks[0], (vp, cfg.d_model), dt, 0.02)}
+    s = {"table": P("model", None)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(ks[1], (cfg.d_model, vp), dt)
+        s["head"] = P(None, "model")
+    return p, s
+
+
+def embed(p, tokens: Array, cfg: ModelConfig,
+          frontend_embeds: Array | None = None) -> Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if frontend_embeds is not None:
+        # [vlm]/[audio] stub: the first `frontend_len` positions are
+        # precomputed modality embeddings (paper-assignment contract).
+        n = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x[:, n:]], 1)
+    return shard(x, BATCH, None, None)
+
+
+def lm_logits(p, x: Array, cfg: ModelConfig) -> Array:
+    w = p["table"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ w.astype(x.dtype)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab_size:
+        # mask padded vocab columns out of the softmax
+        valid = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    return shard(logits, BATCH, None, MODEL)
+
+
+# ---------------------------------------------------------------- loss -----
+def softmax_xent(logits: Array, labels: Array,
+                 mask: Array | None = None) -> Array:
+    """Mean next-token CE over valid positions; logits may be vocab-sharded
+    (reductions over V become psums under GSPMD)."""
+    lf = logits.astype(jnp.float32)
+    m = lf.max(-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), -1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    label_logit = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    nll = lse - label_logit
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,179 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+The KV path is a *low-rank factorization* — W_DKV: d_model → kv_lora_rank
+(512) with per-head up-projections W_UK/W_UV — which is exactly the paper's
+tall-skinny regime: the latent cache c_kv is the "small factor that fits on
+the driver" (512 + 64 floats per token vs H·hd·2 = 32768 for MHA).
+
+Two decode paths (the §Perf hillclimb pair for decode_32k):
+  * materialize : reconstruct K, V for all cached positions each step —
+                  faithful to the algebra, memory-bound on T·H·hd traffic.
+  * absorbed    : fold W_UK into the query and W_UV into the output —
+                  attention runs directly against the rank-512 latent cache,
+                  traffic drops by ~H·hd/(r+r_rope) ≈ 57×.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import _dense_init, pdtype, apply_rope
+from .sharding import shard, BATCH, MODEL
+
+Array = jax.Array
+
+
+def init_mla(key, cfg: ModelConfig):
+    c = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk_head = c.qk_nope_head_dim + c.qk_rope_head_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    if c.q_lora_rank:
+        p |= {"w_dq": _dense_init(ks[0], (d, c.q_lora_rank), dt),
+              "q_norm": jnp.ones((c.q_lora_rank,), jnp.float32),
+              "w_uq": _dense_init(ks[1], (c.q_lora_rank, H * qk_head), dt)}
+        s |= {"w_dq": P(None, None), "q_norm": P(None),
+              "w_uq": P(None, "model")}
+    else:
+        p["w_q"] = _dense_init(ks[1], (d, H * qk_head), dt)
+        s["w_q"] = P(None, "model")
+    p |= {
+        "w_dkv": _dense_init(ks[2], (d, c.kv_lora_rank), dt),
+        "kv_norm": jnp.ones((c.kv_lora_rank,), jnp.float32),
+        "w_kr": _dense_init(ks[3], (d, c.qk_rope_head_dim), dt),
+        "w_uk": _dense_init(ks[4], (c.kv_lora_rank, H * c.qk_nope_head_dim),
+                            dt),
+        "w_uv": _dense_init(ks[5], (c.kv_lora_rank, H * c.v_head_dim), dt),
+        "wo": _dense_init(ks[6], (H * c.v_head_dim, d), dt),
+    }
+    s |= {
+        "w_dkv": P(None, None), "kv_norm": P(None), "w_kr": P(None, None),
+        "w_uk": P(None, "model"), "w_uv": P(None, "model"),
+        "wo": P("model", None),
+    }
+    return p, s
+
+
+def _rms(x: Array, scale: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+            * scale).astype(x.dtype)
+
+
+def _queries(p, x: Array, pos: Array, cfg: ModelConfig):
+    c = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_head = c.qk_nope_head_dim + c.qk_rope_head_dim
+    if c.q_lora_rank:
+        q = _rms(x @ p["w_dq"], p["q_norm"], cfg.norm_eps) @ p["w_uq"]
+    else:
+        q = x @ p["w_q"]
+    q = q.reshape(B, S, H, qk_head)
+    q_nope = q[..., : c.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., c.qk_nope_head_dim:], pos, cfg.rope_theta)
+    return shard(q_nope, BATCH, None, MODEL, None), \
+        shard(q_rope, BATCH, None, MODEL, None)
+
+
+def _latents(p, x: Array, pos: Array, cfg: ModelConfig):
+    """The tall-skinny KV path: (B,S,r) latent + (B,S,r_rope) shared key."""
+    ckv = _rms(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)
+    kr = apply_rope((x @ p["w_kr"])[:, :, None, :], pos,
+                    cfg.rope_theta)[:, :, 0]
+    return ckv, kr
+
+
+def mla_attention(p, x: Array, pos: Array, cfg: ModelConfig, *,
+                  cache: dict | None = None, cache_pos: Array | None = None,
+                  decode_mode: str = "absorbed"):
+    """Returns (out, new_cache); cache = {"ckv": (B,T,r), "kr": (B,T,r_r)}."""
+    c = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    scale = 1.0 / np.sqrt(c.qk_nope_head_dim + c.qk_rope_head_dim)
+
+    q_nope, q_rope = _queries(p, x, pos, cfg)
+    ckv, kr = _latents(p, x, pos, cfg)
+
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv,
+                                                  cache_pos, 1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr,
+                                                 cache_pos, 1)
+        new_cache = {"ckv": ckv, "kr": kr}
+        T = ckv.shape[1]
+        valid = jnp.arange(T)[None, :] < (cache_pos + S)
+        q_offset = cache_pos
+    else:
+        new_cache = None
+        T = S
+        valid = None
+        q_offset = 0
+
+    use_absorbed = (cache is not None) and decode_mode == "absorbed"
+    w_uk = p["w_uk"].reshape(c.kv_lora_rank, H, c.qk_nope_head_dim)
+    w_uv = p["w_uv"].reshape(c.kv_lora_rank, H, c.v_head_dim)
+    if not use_absorbed:
+        k_nope = jnp.einsum("btr,rhn->bthn", ckv, w_uk)
+        v = jnp.einsum("btr,rhv->bthv", ckv, w_uv)
+
+    def attend(qn, qr, off):
+        """One query chunk against the full latent cache."""
+        Sc = qn.shape[1]
+        if use_absorbed:
+            q_lat = jnp.einsum("bshn,rhn->bshr", qn, w_uk)
+            logits = (jnp.einsum("bshr,btr->bhst", q_lat, ckv) +
+                      jnp.einsum("bshn,btn->bhst", qr, kr)) * scale
+        else:
+            logits = (jnp.einsum("bshn,bthn->bhst", qn, k_nope) +
+                      jnp.einsum("bshn,btn->bhst", qr, kr)) * scale
+        logits = logits.astype(jnp.float32)
+        qpos = off + jnp.arange(Sc)[:, None]
+        cmask = qpos >= jnp.arange(T)[None, :]
+        logits = jnp.where(cmask[None, None], logits, -1e30)
+        if valid is not None:
+            logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        if use_absorbed:
+            # attn ∘ latent, then the per-head V up-projection on the output
+            o_lat = jnp.einsum("bhst,btr->bshr", w.astype(ckv.dtype), ckv)
+            return jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)
+        return jnp.einsum("bhst,bthv->bshv", w.astype(v.dtype), v)
+
+    qc = cfg.attn_q_chunk
+    if qc and S > qc and S % qc == 0:
+        nc = S // qc
+        qns = jnp.moveaxis(q_nope.reshape(B, nc, qc, H, -1), 1, 0)
+        qrs = jnp.moveaxis(q_rope.reshape(B, nc, qc, H, -1), 1, 0)
+        offs = q_offset + jnp.arange(nc) * qc
+        if cfg.scan_unroll:
+            out = jnp.concatenate(
+                [attend(qns[i], qrs[i], offs[i]) for i in range(nc)], 1)
+        else:
+            _, outs = jax.lax.scan(
+                lambda cr, xx: (cr, attend(*xx)), None, (qns, qrs, offs))
+            out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, c.v_head_dim)
+    else:
+        out = attend(q_nope, q_rope, q_offset)
+
+    out = shard(out, BATCH, None, MODEL, None)
+    out = out.reshape(B, S, H * c.v_head_dim) @ p["wo"]
+    return shard(out, BATCH, None, None), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    c = cfg.mla
+    dt = dtype or pdtype(cfg)
+    from .sharding import batch_axes
+    cache = {"ckv": jnp.zeros((batch, max_len, c.kv_lora_rank), dt),
+             "kr": jnp.zeros((batch, max_len, c.qk_rope_head_dim), dt)}
+    # sequence-sharded latent cache (see layers.init_attention_cache)
+    spec = {"ckv": P(batch_axes(), "model", None),
+            "kr": P(batch_axes(), "model", None)}
+    return cache, spec

@@ -1,0 +1,64 @@
+"""Uniform model interface over all families."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as TF
+from . import encdec as ED
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable                    # key -> params
+    specs: Callable                   # () -> (param_shapes, param_specs)
+    train_loss: Callable              # (params, batch) -> (loss, metrics)
+    init_caches: Callable             # (batch, max_len) -> (caches, specs)
+    prefill: Callable                 # (params, batch, caches) -> (logits, caches)
+    decode_step: Callable             # (params, tokens, caches, pos) -> ...
+    has_decoder: bool = True
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        def init(key):
+            return ED.init_encdec(key, cfg)[0]
+
+        def prefill(params, batch, caches):
+            return ED.prefill(params, batch["tokens"],
+                              batch["frontend_embeds"], caches, cfg)
+
+        return Model(
+            cfg=cfg,
+            init=init,
+            specs=lambda: ED.encdec_specs(cfg),
+            train_loss=lambda p, b: ED.train_loss(p, b, cfg),
+            init_caches=lambda batch, max_len, enc_len=None: ED.init_caches(
+                cfg, batch, max_len, enc_len or max_len),
+            prefill=prefill,
+            decode_step=lambda p, t, c, pos: ED.decode_step(p, t, c, pos,
+                                                            cfg),
+        )
+
+    def init(key):
+        return TF.init_lm(key, cfg)[0]
+
+    def prefill(params, batch, caches):
+        return TF.prefill(params, batch["tokens"], caches, cfg,
+                          frontend_embeds=batch.get("frontend_embeds"))
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        specs=lambda: TF.lm_specs(cfg),
+        train_loss=lambda p, b: TF.train_loss(p, b, cfg),
+        init_caches=lambda batch, max_len: TF.init_caches(cfg, batch,
+                                                          max_len),
+        prefill=prefill,
+        decode_step=lambda p, t, c, pos: TF.decode_step(p, t, c, pos, cfg),
+    )

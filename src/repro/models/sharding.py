@@ -1,0 +1,66 @@
+"""Logical→physical sharding resolution for model code.
+
+Model code annotates activations with *logical* axes ("batch", "seq",
+"model", None); this module resolves them against whatever mesh is active —
+single-pod ('data','model'), multi-pod ('pod','data','model'), or no mesh at
+all (CPU smoke tests → constraints become no-ops).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+BATCH = "batch"     # resolves to all non-model axes, e.g. ('pod','data')
+MODEL = "model"
+EXPERT = "expert"   # resolves to the model axis (EP shares the TP axis)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def batch_axes(mesh: Mesh | None = None) -> tuple[str, ...]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return ("data",)
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def resolve(*logical, mesh: Mesh | None = None) -> P:
+    """Map logical axis names to a PartitionSpec for the active mesh."""
+    mesh = mesh or current_mesh()
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+        elif ax == BATCH:
+            out.append(batch_axes(mesh))
+        elif ax in (MODEL, EXPERT):
+            out.append("model")
+        else:
+            raise ValueError(f"unknown logical axis {ax!r}")
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(*logical, mesh=mesh)))

@@ -1,0 +1,375 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba-7b) and Mamba2/SSD
+(zamba2).  TPU adaptation (DESIGN.md): the recurrence is evaluated in
+*chunks* — parallel associative math inside a chunk (Mamba1: associative
+scan; Mamba2: the SSD matmul formulation, which is MXU-native), sequential
+`lax.scan` across chunks carrying the (B, …, N) state.  This bounds the
+transient memory to O(B·Q·d·N / tp) per step instead of O(B·S·d·N).
+
+TP: the channel dimension (d_inner / heads) is sharded over 'model'; the
+state recurrence is elementwise across channels, so the scan needs no
+collectives at all — only the in/out projections communicate (row-parallel
+psum), identical to an MLP block.
+
+Decode is a single fused recurrence step with O(1) state — this is why the
+long_500k cell *runs* for the SSM architectures while quadratic-attention
+archs skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import _dense_init, pdtype
+from .sharding import shard, BATCH, MODEL
+
+Array = jax.Array
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv via shift-and-add (width ≤ 4: cheaper than a
+    conv op and trivially shardable along the channel axis)."""
+    width = w.shape[0]
+    out = x * w[-1] + b
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _conv_step(state: Array, x_t: Array, w: Array, b: Array):
+    """Single-token conv: state (B, width-1, C), x_t (B, C)."""
+    full = jnp.concatenate([state, x_t[:, None]], 1)        # (B, width, C)
+    y = (full * w[None]).sum(1) + b                          # w: (width, C)
+    return full[:, 1:], y
+
+
+# ================================================================ Mamba 1 ==
+def init_mamba1(key, cfg: ModelConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.expand * D
+    N = s.state_dim
+    dt_rank = s.dt_rank or -(-D // 16)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_in": _dense_init(ks[0], (D, 2 * di), dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, di)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (di, dt_rank + 2 * N), dt),
+        "dt_proj": _dense_init(ks[3], (dt_rank, di), jnp.float32,
+                               scale=dt_rank ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,)) * 0.099 + 0.001,
+                     1e-4, None))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": _dense_init(ks[5], (di, D), dt),
+    }
+    spec = {
+        "w_in": P(None, "model"), "conv_w": P(None, "model"),
+        "conv_b": P("model"), "x_proj": P("model", None),
+        "dt_proj": P(None, "model"), "dt_bias": P("model"),
+        "A_log": P("model", None), "D": P("model"),
+        "w_out": P("model", None),
+    }
+    return p, spec
+
+
+def _mamba1_inner(p, x: Array, dt_rank: int, N: int, h0: Array,
+                  chunk: int, unroll: bool = False,
+                  shard_scan: bool = False, scan_dtype: str = "float32"):
+    """x: (B,S,di) post-conv activations; returns (y, h_final)."""
+    B, S, di = x.shape
+    dtBC = x @ p["x_proj"].astype(x.dtype)
+    dtr, Bm, Cm = jnp.split(dtBC.astype(jnp.float32),
+                            [dt_rank, dt_rank + N], -1)
+    dt = jax.nn.softplus(dtr @ p["dt_proj"] + p["dt_bias"])   # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                  # (di, N)
+
+    nc = S // chunk
+    xs = x.astype(jnp.float32).reshape(B, nc, chunk, di)
+    dts = dt.reshape(B, nc, chunk, di)
+    Bs = Bm.reshape(B, nc, chunk, N)
+    Cs = Cm.reshape(B, nc, chunk, N)
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp                        # (B,Q,di) ... (B,Q,N)
+        la = dtc[..., None] * A                      # (B,Q,di,N)
+        bu = (dtc * xc)[..., None] * Bc[:, :, None, :]
+        if shard_scan:
+            # §Perf lever 1 (measured: no-op — GSPMD already shards di;
+            # kept for the record, see EXPERIMENTS.md §Perf A)
+            la = shard(la, BATCH, None, MODEL, None)
+            bu = shard(bu, BATCH, None, MODEL, None)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        # §Perf lever 2: run the associative scan in bf16 (the recurrence
+        # factors are exp(dt·A) ∈ (0,1]; products stay in range, relative
+        # error ~1e-2 over a 256-chunk — acceptable for training forward
+        # with f32 carry, validated in tests).
+        sdt = jnp.dtype(scan_dtype)
+        Acum, Bcum = jax.lax.associative_scan(
+            combine, (jnp.exp(la).astype(sdt), bu.astype(sdt)), axis=1)
+        hseq = Acum.astype(jnp.float32) * h[:, None] + \
+            Bcum.astype(jnp.float32)                 # (B,Q,di,N)
+        y = jnp.einsum("bqdn,bqn->bqd", hseq, Cc)
+        return hseq[:, -1], y
+
+    # scan over chunks (sequential), chunk tensors moved to leading axis
+    inp = (xs.transpose(1, 0, 2, 3), dts.transpose(1, 0, 2, 3),
+           Bs.transpose(1, 0, 2, 3), Cs.transpose(1, 0, 2, 3))
+    if unroll:
+        h_fin, ys_l = h0, []
+        for c in range(nc):
+            h_fin, yc = chunk_step(h_fin, jax.tree.map(lambda a: a[c], inp))
+            ys_l.append(yc)
+        ys = jnp.stack(ys_l)
+    else:
+        h_fin, ys = jax.lax.scan(chunk_step, h0, inp)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y + x.astype(jnp.float32) * p["D"]
+    return y, h_fin
+
+
+def mamba1_block(p, x: Array, cfg: ModelConfig, *, cache=None):
+    """x: (B,S,D). cache: {"conv": (B,w-1,di), "h": (B,di,N)} for decode."""
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.expand * D
+    N = s.state_dim
+    dt_rank = s.dt_rank or -(-D // 16)
+    B, S, _ = x.shape
+
+    xz = x @ p["w_in"]
+    xr, z = jnp.split(xz, 2, -1)
+    xr = shard(xr, BATCH, None, MODEL)
+
+    if cache is None or S > 1:
+        # train forward, or prefill-into-cache (chunked scan + final state)
+        xc = jax.nn.silu(_causal_conv(xr.astype(jnp.float32), p["conv_w"],
+                                      p["conv_b"])).astype(x.dtype)
+        h0 = (cache["h"] if cache is not None
+              else jnp.zeros((B, di, N), jnp.float32))
+        chunk = s.chunk if S % s.chunk == 0 else max(
+            q for q in range(1, min(s.chunk, S) + 1) if S % q == 0)
+        y, h_fin = _mamba1_inner(p, xc, dt_rank, N, h0, chunk,
+                                 unroll=cfg.scan_unroll,
+                                 shard_scan=cfg.ssm_shard_scan,
+                                 scan_dtype=cfg.ssm_scan_dtype)
+        y = y[:, :S]
+        if cache is None:
+            new_cache = None
+        else:
+            w = s.conv_dim - 1
+            conv_state = xr[:, S - w:].astype(jnp.float32)
+            new_cache = {"conv": conv_state, "h": h_fin}
+    else:
+        conv_state, h = cache["conv"], cache["h"]
+        conv_state, xc = _conv_step(conv_state, xr[:, 0].astype(jnp.float32),
+                                    p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc)                                   # (B, di)
+        dtBC = xc.astype(x.dtype) @ p["x_proj"].astype(x.dtype)
+        dtr, Bm, Cm = jnp.split(dtBC.astype(jnp.float32),
+                                [dt_rank, dt_rank + N], -1)
+        dt = jax.nn.softplus(dtr @ p["dt_proj"] + p["dt_bias"])  # (B, di)
+        A = -jnp.exp(p["A_log"])
+        h = jnp.exp(dt[..., None] * A) * h + \
+            (dt * xc)[..., None] * Bm[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Cm) + xc * p["D"]
+        y = y[:, None]
+        new_cache = {"conv": conv_state, "h": h}
+
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["w_out"]
+    return shard(out, BATCH, None, None), new_cache
+
+
+def init_mamba1_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    from .sharding import batch_axes
+    ba = batch_axes()
+    cache = {"conv": jnp.zeros((batch, s.conv_dim - 1, di), jnp.float32),
+             "h": jnp.zeros((batch, di, s.state_dim), jnp.float32)}
+    spec = {"conv": P(ba, None, "model"), "h": P(ba, "model", None)}
+    return cache, spec
+
+
+# ================================================================ Mamba 2 ==
+def init_mamba2(key, cfg: ModelConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.expand * D
+    N = s.state_dim
+    H = di // s.head_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 10)
+    p = {
+        "w_z": _dense_init(ks[0], (D, di), dt),
+        "w_x": _dense_init(ks[1], (D, di), dt),
+        "w_B": _dense_init(ks[2], (D, N), dt),
+        "w_C": _dense_init(ks[3], (D, N), dt),
+        "w_dt": _dense_init(ks[4], (D, H), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (s.conv_dim, di)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "convB_w": (jax.random.normal(ks[6], (s.conv_dim, N)) * 0.1
+                    ).astype(jnp.float32),
+        "convB_b": jnp.zeros((N,), jnp.float32),
+        "convC_w": (jax.random.normal(ks[7], (s.conv_dim, N)) * 0.1
+                    ).astype(jnp.float32),
+        "convC_b": jnp.zeros((N,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "w_out": _dense_init(ks[8], (di, D), dt),
+    }
+    spec = {
+        "w_z": P(None, "model"), "w_x": P(None, "model"),
+        "w_B": P(None, None), "w_C": P(None, None),
+        "w_dt": P(None, "model"), "dt_bias": P("model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "convB_w": P(None, None), "convB_b": P(None),
+        "convC_w": P(None, None), "convC_b": P(None),
+        "A_log": P("model"), "D": P("model"),
+        "norm_scale": P("model"), "w_out": P("model", None),
+    }
+    return p, spec
+
+
+def _gated_norm(y: Array, z: Array, scale: Array, eps: float) -> Array:
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = (g * g).mean(-1, keepdims=True)
+    return g * jax.lax.rsqrt(var + eps) * scale
+
+
+def mamba2_block(p, x: Array, cfg: ModelConfig, *, cache=None):
+    """SSD block. cache: {"conv","convB","convC","h"} for decode."""
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.expand * D
+    N, Pd = s.state_dim, s.head_dim
+    H = di // Pd
+    B, S, _ = x.shape
+
+    z = x @ p["w_z"]
+    xr = shard(x @ p["w_x"], BATCH, None, MODEL)
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["w_dt"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                 # (H,)
+
+    if cache is None or S > 1:
+        xc = jax.nn.silu(_causal_conv(xr.astype(jnp.float32), p["conv_w"],
+                                      p["conv_b"]))
+        Bc = jax.nn.silu(_causal_conv(Br.astype(jnp.float32), p["convB_w"],
+                                      p["convB_b"]))
+        Cc = jax.nn.silu(_causal_conv(Cr.astype(jnp.float32), p["convC_w"],
+                                      p["convC_b"]))
+        Q = s.chunk if S % s.chunk == 0 else max(
+            q for q in range(1, min(s.chunk, S) + 1) if S % q == 0)
+        nc = S // Q
+        xh = xc.reshape(B, nc, Q, H, Pd)
+        dtc = dt.reshape(B, nc, Q, H)
+        Bch = Bc.reshape(B, nc, Q, N)
+        Cch = Cc.reshape(B, nc, Q, N)
+        la = dtc * A                                         # (B,nc,Q,H)
+        cs = jnp.cumsum(la, axis=2)                          # inclusive
+        x_disc = xh * dtc[..., None]
+
+        # intra-chunk (attention-like, MXU-native)
+        csh = cs.transpose(0, 1, 3, 2)                       # (B,nc,H,Q)
+        diff = csh[..., :, None] - csh[..., None, :]         # (B,nc,H,Q,Q)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(tri, jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bcqn,bckn->bcqk", Cch, Bch)
+        M = scores[:, :, None] * L                           # (B,nc,H,Q,Q)
+        y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, x_disc)
+
+        # chunk states + inter-chunk scan
+        last = cs[:, :, -1:, :]                              # (B,nc,1,H)
+        decay_end = jnp.exp(last - cs)                       # (B,nc,Q,H)
+        S_c = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bch, decay_end, x_disc)
+        chunk_decay = jnp.exp(last[:, :, 0])                 # (B,nc,H)
+
+        def step(h, inp):
+            sc, cd = inp
+            h_new = cd[..., None, None] * h + sc
+            return h_new, h
+
+        h0 = (cache["h"] if cache is not None
+              else jnp.zeros((B, H, N, Pd), jnp.float32))
+        inp2 = (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+        if cfg.scan_unroll:
+            h_fin, hs = h0, []
+            for c in range(nc):
+                h_fin, hp = step(h_fin, jax.tree.map(lambda a: a[c], inp2))
+                hs.append(hp)
+            H_prev = jnp.stack(hs)
+        else:
+            h_fin, H_prev = jax.lax.scan(step, h0, inp2)
+        H_prev = H_prev.transpose(1, 0, 2, 3, 4)             # (B,nc,H,N,P)
+        y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cch,
+                             jnp.exp(cs), H_prev)
+        y = (y_intra + y_inter).reshape(B, S, H, Pd)
+        y = y + p["D"][None, None, :, None] * xc.reshape(B, S, H, Pd)
+        y = y.reshape(B, S, di)
+        z_full = z
+        if cache is None:
+            new_cache = None
+        else:
+            w = s.conv_dim - 1
+            new_cache = {"conv": xr[:, S - w:].astype(jnp.float32),
+                         "convB": Br[:, S - w:].astype(jnp.float32),
+                         "convC": Cr[:, S - w:].astype(jnp.float32),
+                         "h": h_fin}
+    else:
+        cs_x, xc1 = _conv_step(cache["conv"], xr[:, 0].astype(jnp.float32),
+                               p["conv_w"], p["conv_b"])
+        cs_B, Bc1 = _conv_step(cache["convB"], Br[:, 0].astype(jnp.float32),
+                               p["convB_w"], p["convB_b"])
+        cs_C, Cc1 = _conv_step(cache["convC"], Cr[:, 0].astype(jnp.float32),
+                               p["convC_w"], p["convC_b"])
+        xc1, Bc1, Cc1 = map(jax.nn.silu, (xc1, Bc1, Cc1))
+        dt1 = dt[:, 0]                                       # (B,H)
+        xh = xc1.reshape(B, H, Pd)
+        h = cache["h"]
+        h = jnp.exp(dt1 * A)[..., None, None] * h + \
+            jnp.einsum("bn,bh,bhp->bhnp", Bc1, dt1, xh)
+        y = jnp.einsum("bn,bhnp->bhp", Cc1, h) + \
+            p["D"][None, :, None] * xh
+        y = y.reshape(B, 1, di)
+        z_full = z
+        new_cache = {"conv": cs_x, "convB": cs_B, "convC": cs_C, "h": h}
+
+    y = _gated_norm(y, z_full, p["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = y @ p["w_out"]
+    return shard(out, BATCH, None, None), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = di // s.head_dim
+    from .sharding import batch_axes
+    ba = batch_axes()
+    cache = {
+        "conv": jnp.zeros((batch, s.conv_dim - 1, di), jnp.float32),
+        "convB": jnp.zeros((batch, s.conv_dim - 1, s.state_dim), jnp.float32),
+        "convC": jnp.zeros((batch, s.conv_dim - 1, s.state_dim), jnp.float32),
+        "h": jnp.zeros((batch, H, s.state_dim, s.head_dim), jnp.float32),
+    }
+    spec = {"conv": P(ba, None, "model"), "convB": P(ba, None, None),
+            "convC": P(ba, None, None),
+            "h": P(ba, "model", None, None)}
+    return cache, spec

@@ -1,0 +1,422 @@
+"""Decoder-only LM assembly: scan-over-layers, remat, caches, MTP.
+
+Covers families: dense (llama/qwen + vlm backbone), moe (DeepSeek MLA+MoE
+with dense prefix + MTP), ssm (falcon-mamba), hybrid (zamba2: mamba2
+backbone + one *shared-weight* attention block applied every `attn_every`
+layers, each application with its own KV cache).
+
+Layers are stacked and driven by `lax.scan` so the HLO (and compile time on
+the 512-device dry-run) is depth-independent.  Specs are collected by the
+`eval_shape` capture trick — `lm_specs(cfg)` never allocates, which is what
+lets the 671B config lower on this CPU-only container.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from . import layers as L
+from . import mla as MLA
+from . import moe as MOE
+from . import ssm as SSM
+from .sharding import shard, BATCH, MODEL, batch_axes
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------- layer kinds ----
+def _init_attn(key, cfg):
+    if cfg.mla:
+        return MLA.init_mla(key, cfg)
+    return L.init_attention(key, cfg)
+
+
+def _apply_attn(p, x, pos, cfg, cache=None, cache_pos=None):
+    if cfg.mla:
+        return MLA.mla_attention(p, x, pos, cfg, cache=cache,
+                                 cache_pos=cache_pos,
+                                 decode_mode=cfg.mla_decode_mode)
+    return L.attention(p, x, pos, cfg, cache=cache, cache_pos=cache_pos)
+
+
+def _attn_cache(cfg, batch, max_len):
+    if cfg.mla:
+        return MLA.init_mla_cache(cfg, batch, max_len)
+    return L.init_attention_cache(cfg, batch, max_len)
+
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    """kind ∈ {dense, moe_ffn, mamba1, mamba2}.  Returns (params, specs)."""
+    ks = jax.random.split(key, 4)
+    if kind in ("dense", "moe_ffn"):
+        n1, s1 = L.init_norm(cfg)
+        at, sa = _init_attn(ks[0], cfg)
+        n2, s2 = L.init_norm(cfg)
+        if kind == "moe_ffn":
+            ff, sf = MOE.init_moe(ks[1], cfg)
+        else:
+            d_ff = (cfg.moe.dense_d_ff or cfg.d_ff) if cfg.moe else cfg.d_ff
+            ff, sf = L.init_mlp(ks[1], cfg, d_ff=d_ff)
+        return ({"norm1": n1, "attn": at, "norm2": n2, "ffn": ff},
+                {"norm1": s1, "attn": sa, "norm2": s2, "ffn": sf})
+    if kind == "mamba1":
+        n1, s1 = L.init_norm(cfg)
+        mx, sm = SSM.init_mamba1(ks[0], cfg)
+        return {"norm1": n1, "mixer": mx}, {"norm1": s1, "mixer": sm}
+    if kind == "mamba2":
+        n1, s1 = L.init_norm(cfg)
+        mx, sm = SSM.init_mamba2(ks[0], cfg)
+        return {"norm1": n1, "mixer": mx}, {"norm1": s1, "mixer": sm}
+    raise ValueError(kind)
+
+
+def apply_block(p, x, pos, cfg: ModelConfig, kind: str, *,
+                cache=None, cache_pos=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0)
+    if kind in ("dense", "moe_ffn"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        a, new_cache = _apply_attn(p["attn"], h, pos, cfg, cache=cache,
+                                   cache_pos=cache_pos)
+        x = x + a
+        h = L.apply_norm(p["norm2"], x, cfg)
+        if kind == "moe_ffn":
+            f, aux = MOE.apply_moe(p["ffn"], h, cfg)
+        else:
+            f = L.apply_mlp(p["ffn"], h, cfg)
+        x = x + f
+        return x, new_cache, aux
+    if kind in ("mamba1", "mamba2"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        fn = SSM.mamba1_block if kind == "mamba1" else SSM.mamba2_block
+        a, new_cache = fn(p["mixer"], h, cfg, cache=cache)
+        return x + a, new_cache, aux
+    raise ValueError(kind)
+
+
+def block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("dense", "moe_ffn"):
+        return _attn_cache(cfg, batch, max_len)
+    if kind == "mamba1":
+        return SSM.init_mamba1_cache(cfg, batch)
+    if kind == "mamba2":
+        return SSM.init_mamba2_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------ structure ----
+def lm_structure(cfg: ModelConfig) -> list[tuple[str, int, str]]:
+    """[(stack_name, n_layers, kind)] per family."""
+    if cfg.family in ("dense", "vlm"):
+        return [("blocks", cfg.num_layers, "dense")]
+    if cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        return [("dense_prefix", fk, "dense"),
+                ("moe_blocks", cfg.num_layers - fk, "moe_ffn")]
+    if cfg.family == "ssm":
+        return [("blocks", cfg.num_layers, "mamba1")]
+    if cfg.family == "hybrid":
+        per = cfg.ssm.attn_every or cfg.num_layers
+        n_groups = cfg.num_layers // per
+        rem = cfg.num_layers - n_groups * per
+        out = [("groups", n_groups, "hybrid_group")]
+        if rem:
+            out.append(("tail", rem, "mamba2"))
+        return out
+    raise ValueError(cfg.family)
+
+
+_CAPTURE: dict = {}
+
+
+def _stack_init(key, cfg, kind: str, n: int):
+    """vmap-stacked per-layer init; captures specs as a tracing side effect."""
+    tag = f"{cfg.name}/{kind}"
+
+    def one(k):
+        if kind == "hybrid_group":
+            p, s = _init_hybrid_group(k, cfg)
+        else:
+            p, s = init_block(k, cfg, kind)
+        _CAPTURE[tag] = s
+        return p
+
+    params = jax.vmap(one)(jax.random.split(key, n))
+    specs = jax.tree.map(lambda sp: P(None, *sp), _CAPTURE[tag],
+                         is_leaf=lambda v: isinstance(v, P))
+    return params, specs
+
+
+def _init_hybrid_group(key, cfg):
+    """One zamba2 super-block: `attn_every` mamba2 layers (the shared
+    attention weights live OUTSIDE the scan — see init_lm)."""
+    per = cfg.ssm.attn_every
+
+    def one(k):
+        p, s = init_block(k, cfg, "mamba2")
+        _CAPTURE["_hg"] = s
+        return p
+
+    params = jax.vmap(one)(jax.random.split(key, per))
+    specs = jax.tree.map(lambda sp: P(None, *sp), _CAPTURE["_hg"],
+                         is_leaf=lambda v: isinstance(v, P))
+    return {"mamba": params}, {"mamba": specs}
+
+
+def init_lm(key, cfg: ModelConfig):
+    """Returns (params, specs). Traceable (use under jax.eval_shape for the
+    dry-run); call `lm_specs(cfg)` for specs without allocation."""
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["embed"], specs["embed"] = L.init_embedding(ks[0], cfg)
+    params["final_norm"], specs["final_norm"] = L.init_norm(cfg)
+    for i, (name, n, kind) in enumerate(lm_structure(cfg)):
+        params[name], specs[name] = _stack_init(ks[1 + i], cfg, kind, n)
+    if cfg.family == "hybrid":
+        params["shared_attn"], specs["shared_attn"] = \
+            init_block(ks[5], cfg, "dense")
+    if cfg.mtp_depth:
+        p_m, s_m = init_block(ks[6], cfg, "moe_ffn" if cfg.moe else "dense")
+        proj = L._dense_init(ks[7], (2 * cfg.d_model, cfg.d_model),
+                             L.pdtype(cfg))
+        nrm, snrm = L.init_norm(cfg)
+        params["mtp"] = {"proj": proj, "block": p_m, "norm": nrm}
+        specs["mtp"] = {"proj": P(None, None), "block": s_m, "norm": snrm}
+    return params, specs
+
+
+def lm_specs(cfg: ModelConfig):
+    """PartitionSpec pytree without allocating parameters."""
+    box = {}
+
+    def f(key):
+        p, s = init_lm(key, cfg)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["s"]
+
+
+# ------------------------------------------------------------- forward -----
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _at(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _restack(items):
+    if items and items[0] is None:
+        return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *items)
+
+
+def _scan_stack(params, x, pos, cfg, kind, *, caches=None, cache_pos=None):
+    """Scan a stacked layer group.  Returns (x, new_caches, aux_sum)."""
+
+    def body(carry, xs):
+        x, aux = carry
+        if caches is None:
+            lp = xs
+            x, _, a = apply_block(lp, x, pos, cfg, kind)
+            return (x, aux + a), None
+        lp, c = xs
+        x, nc, a = apply_block(lp, x, pos, cfg, kind, cache=c,
+                               cache_pos=cache_pos)
+        return (x, aux + a), nc
+
+    body = _remat(body, cfg)
+    if cfg.scan_unroll:
+        L = jax.tree.leaves(params)[0].shape[0]
+        carry, ncs = (x, jnp.float32(0)), []
+        for i in range(L):
+            xs = _at(params, i) if caches is None else (_at(params, i),
+                                                        _at(caches, i))
+            carry, nc = body(carry, xs)
+            ncs.append(nc)
+        (x, aux) = carry
+        return x, _restack(ncs), aux
+    xs = params if caches is None else (params, caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, new_caches, aux
+
+
+def _scan_hybrid(params, shared_p, x, pos, cfg, *, caches=None,
+                 cache_pos=None):
+    """Zamba2 groups: shared attention block + `per` mamba2 layers.
+    caches = {"attn": stacked-per-group attn cache, "mamba": nested}."""
+
+    def body(carry, xs):
+        x, aux = carry
+        if caches is None:
+            gp = xs
+            h, _, _ = apply_block(shared_p, x, pos, cfg, "dense")
+
+            def inner(c2, lp):
+                y, _, _ = apply_block(lp, c2, pos, cfg, "mamba2")
+                return y, None
+
+            if cfg.scan_unroll:
+                for i in range(jax.tree.leaves(gp["mamba"])[0].shape[0]):
+                    h, _ = inner(h, _at(gp["mamba"], i))
+            else:
+                h, _ = jax.lax.scan(inner, h, gp["mamba"])
+            return (h, aux), None
+        gp, c = xs
+        h, nac, _ = apply_block(shared_p, x, pos, cfg, "dense",
+                                cache=c["attn"], cache_pos=cache_pos)
+
+        def inner(c2, xs2):
+            lp, mc = xs2
+            y, nmc, _ = apply_block(lp, c2, pos, cfg, "mamba2", cache=mc)
+            return y, nmc
+
+        if cfg.scan_unroll:
+            nmcs = []
+            for i in range(jax.tree.leaves(gp["mamba"])[0].shape[0]):
+                h, nmc_i = inner(h, (_at(gp["mamba"], i), _at(c["mamba"], i)))
+                nmcs.append(nmc_i)
+            nmc = _restack(nmcs)
+        else:
+            h, nmc = jax.lax.scan(inner, h, (gp["mamba"], c["mamba"]))
+        return (h, aux), {"attn": nac, "mamba": nmc}
+
+    body = _remat(body, cfg)
+    if cfg.scan_unroll:
+        G = jax.tree.leaves(params)[0].shape[0]
+        carry, ncs = (x, jnp.float32(0)), []
+        for i in range(G):
+            xs = _at(params, i) if caches is None else (_at(params, i),
+                                                        _at(caches, i))
+            carry, nc = body(carry, xs)
+            ncs.append(nc)
+        (x, aux) = carry
+        return x, _restack(ncs), aux
+    xs = params if caches is None else (params, caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, new_caches, aux
+
+
+def forward(params, tokens: Array, cfg: ModelConfig, *,
+            frontend_embeds: Array | None = None,
+            caches: dict | None = None, cache_pos: Array | None = None):
+    """Full forward.  Returns (hidden (B,S,D), new_caches, aux)."""
+    B, S = tokens.shape
+    if cache_pos is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    else:
+        pos = cache_pos + jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(params["embed"], tokens, cfg, frontend_embeds)
+    aux_total = jnp.float32(0)
+    new_caches: dict[str, Any] = {}
+    for name, n, kind in lm_structure(cfg):
+        c = caches.get(name) if caches else None
+        if kind == "hybrid_group":
+            x, nc, aux = _scan_hybrid(params[name], params["shared_attn"],
+                                      x, pos, cfg, caches=c,
+                                      cache_pos=cache_pos)
+        else:
+            x, nc, aux = _scan_stack(params[name], x, pos, cfg, kind,
+                                     caches=c, cache_pos=cache_pos)
+        aux_total = aux_total + aux
+        if caches is not None:
+            new_caches[name] = nc
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def train_loss(params, batch: dict, cfg: ModelConfig):
+    """Next-token CE (+ MoE aux + MTP aux).  batch: tokens (B,S) [+ stubs]."""
+    tokens = batch["tokens"]
+    fe = batch.get("frontend_embeds")
+    h, _, aux = forward(params, tokens, cfg, frontend_embeds=fe)
+    logits = L.lm_logits(params["embed"], h, cfg)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], 1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    if fe is not None:
+        n = fe.shape[1]
+        mask = mask.at[:, :n].set(0.0)       # no loss on stub positions
+    loss = L.softmax_xent(logits, labels, mask)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth:
+        mp = params["mtp"]
+        emb_next = L.embed(params["embed"],
+                           jnp.concatenate([tokens[:, 1:], tokens[:, :1]], 1),
+                           cfg)
+        hm = jnp.concatenate([L.apply_norm(mp["norm"], h, cfg), emb_next],
+                             -1) @ mp["proj"]
+        kind = "moe_ffn" if cfg.moe else "dense"
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                               tokens.shape)
+        mtp_block = _remat(
+            lambda hh: apply_block(mp["block"], hh, pos, cfg, kind), cfg)
+        hm, _, aux2 = mtp_block(hm)
+        hm = L.apply_norm(params["final_norm"], hm, cfg)
+        logits2 = L.lm_logits(params["embed"], hm, cfg)
+        labels2 = jnp.roll(tokens, -2, axis=1)
+        mask2 = mask.at[:, -2:].set(0.0)
+        mtp_loss = L.softmax_xent(logits2, labels2, mask2)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+        aux = aux + aux2
+    return loss + aux, metrics
+
+
+# ------------------------------------------------------------- serving -----
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    caches, specs = {}, {}
+    for name, n, kind in lm_structure(cfg):
+        if kind == "hybrid_group":
+            ac, acs = block_cache(cfg, "dense", batch, max_len)
+            mc, mcs = block_cache(cfg, "mamba2", batch, max_len)
+            per = cfg.ssm.attn_every
+            caches[name] = {
+                "attn": jax.tree.map(
+                    lambda z: jnp.broadcast_to(z, (n, *z.shape)), ac),
+                "mamba": jax.tree.map(
+                    lambda z: jnp.broadcast_to(z, (n, per, *z.shape)), mc)}
+            specs[name] = {
+                "attn": jax.tree.map(lambda s: P(None, *s), acs,
+                                     is_leaf=lambda v: isinstance(v, P)),
+                "mamba": jax.tree.map(lambda s: P(None, None, *s), mcs,
+                                      is_leaf=lambda v: isinstance(v, P))}
+        else:
+            c, cs = block_cache(cfg, kind, batch, max_len)
+            caches[name] = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (n, *z.shape)), c)
+            specs[name] = jax.tree.map(lambda s: P(None, *s), cs,
+                                       is_leaf=lambda v: isinstance(v, P))
+    return caches, specs
+
+
+def prefill(params, tokens: Array, caches: dict, cfg: ModelConfig, *,
+            frontend_embeds: Array | None = None):
+    """Fill caches from a prompt; returns (last-position logits, caches)."""
+    h, caches, _ = forward(params, tokens, cfg,
+                           frontend_embeds=frontend_embeds, caches=caches,
+                           cache_pos=jnp.int32(0))
+    logits = L.lm_logits(params["embed"], h[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params, tokens: Array, caches: dict, pos: Array,
+                cfg: ModelConfig):
+    """One token step: tokens (B,1), pos scalar int32 (current length)."""
+    h, caches, _ = forward(params, tokens, cfg, caches=caches,
+                           cache_pos=pos)
+    logits = L.lm_logits(params["embed"], h, cfg)
+    return logits, caches

@@ -1,0 +1,117 @@
+"""Gradient compression for the cross-pod data-parallel reduction.
+
+On the multi-pod mesh the once-per-step gradient all-reduce crosses the
+(much slower) inter-pod links.  Two compressors, both with error feedback:
+
+  * low-rank (PowerSGD-style) — and this is the paper's own machinery
+    applied beyond the paper: the rank-r factor pair comes from one
+    subspace iteration, i.e. a tall-skinny Gram/orthonormalization exactly
+    like core.linalg (tsqr/gram).  Compress Δ ≈ P·Qᵀ with P (m×r), Q (n×r):
+    the DP reduction then moves r(m+n) floats instead of m·n.
+  * int8 — quantize to s8 with a per-tensor scale and stochastic rounding.
+
+Both are pure pytree→pytree functions suitable for use as the
+`grad_compressor` hook of build_train_step; error feedback state is carried
+in a companion tree so compression error is re-injected next step (keeps
+SGD convergence — Karimireddy et al. 2019).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class EFState(NamedTuple):
+    residual: dict          # same structure as grads
+
+
+def init_error_feedback(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+# ------------------------------------------------------------- low-rank ----
+def _lowrank_leaf(g: Array, r: int, key) -> Array:
+    """One subspace iteration: G ≈ P Qᵀ (paper's tall-skinny algebra)."""
+    if g.ndim < 2 or min(g.shape[-2:]) <= r:
+        return g
+    shape = g.shape
+    m = int(jnp.prod(jnp.asarray(shape[:-1])))
+    G = g.reshape(m, shape[-1]).astype(jnp.float32)
+    n = shape[-1]
+    Q = jax.random.normal(key, (n, r), jnp.float32)
+    Pm = G @ Q                                   # (m, r) tall-skinny
+    # Orthonormalize via the Gram route (AᵀA is r×r — "driver" math).
+    # Rank-deficient directions (w ≈ 0, e.g. when rank(G) < r) are dropped
+    # rather than amplified.
+    gram = Pm.T @ Pm
+    w, V = jnp.linalg.eigh(gram)
+    wmax = jnp.maximum(w[-1], 1e-30)
+    inv = jnp.where(w > 1e-9 * wmax, 1.0 / jnp.sqrt(jnp.maximum(w, 1e-30)),
+                    0.0)
+    Pm = Pm @ (V * inv)
+    Qt = G.T @ Pm                                # (n, r)
+    return (Pm @ Qt.T).reshape(shape).astype(g.dtype)
+
+
+def lowrank_compressor(rank: int = 8, seed: int = 0):
+    """Returns f(grads, ef) -> (approx_grads, new_ef)."""
+
+    def compress(grads, ef: EFState):
+        leaves = jax.tree_util.tree_leaves_with_path(grads)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        flat_corr = [g.astype(jnp.float32) + res for (_, g), res in zip(
+            leaves, jax.tree_util.tree_leaves(ef.residual))]
+        approx = [_lowrank_leaf(g, rank, k)
+                  for g, k in zip(flat_corr, keys)]
+        residual = [g - a.astype(jnp.float32)
+                    for g, a in zip(flat_corr, approx)]
+        treedef = jax.tree_util.tree_structure(grads)
+        return (jax.tree_util.tree_unflatten(treedef, approx),
+                EFState(jax.tree_util.tree_unflatten(treedef, residual)))
+
+    return compress
+
+
+# ----------------------------------------------------------------- int8 ----
+def int8_compressor(seed: int = 0):
+    """Per-tensor-scale int8 quantization with stochastic rounding + EF."""
+
+    def _leaf(g: Array, res: Array, key) -> tuple[Array, Array]:
+        gf = g.astype(jnp.float32) + res
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        noise = jax.random.uniform(key, gf.shape) - 0.5
+        q = jnp.clip(jnp.round(gf / scale + noise), -127, 127)
+        deq = (q * scale).astype(g.dtype)
+        return deq, gf - deq.astype(jnp.float32)
+
+    def compress(grads, ef: EFState):
+        leaves = jax.tree_util.tree_leaves(grads)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        outs = [_leaf(g, r, k) for g, r, k in zip(
+            leaves, jax.tree_util.tree_leaves(ef.residual), keys)]
+        treedef = jax.tree_util.tree_structure(grads)
+        return (jax.tree_util.tree_unflatten(treedef,
+                                             [o[0] for o in outs]),
+                EFState(jax.tree_util.tree_unflatten(
+                    treedef, [o[1] for o in outs])))
+
+    return compress
+
+
+def compression_ratio(grads, rank: int = 8) -> float:
+    """Wire-bytes ratio of the low-rank scheme (for the §Perf napkin math)."""
+    dense = comp = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        dense += n
+        if g.ndim >= 2 and min(g.shape[-2:]) > rank:
+            m = n // g.shape[-1]
+            comp += rank * (m + g.shape[-1])
+        else:
+            comp += n
+    return comp / dense

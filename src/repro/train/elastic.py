@@ -1,0 +1,46 @@
+"""Elastic re-meshing: resume training on a different device count.
+
+Failure story on a real fleet: a pod (or host) dies mid-run → the job
+restarts on the surviving slice → `remesh` re-shards the latest checkpoint
+onto the new mesh (possible because checkpoints are stored as logical
+arrays + PartitionSpecs, not device dumps) → the data pipeline re-delivers
+from the checkpointed step (deterministic step→batch mapping, see
+data.pipeline) → training continues with an adjusted per-device batch.
+
+The global batch is kept constant across re-meshes (more grad-accum
+microbatches on fewer chips), so the optimization trajectory is unchanged
+modulo floating-point reduction order.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from . import checkpoint as ckpt_mod
+
+
+def remesh(tree, specs, new_mesh: Mesh):
+    """Re-shard a live pytree onto a new mesh (same logical values)."""
+    def leaf(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(leaf, tree, specs,
+                        is_leaf=lambda v: isinstance(v, P) or
+                        hasattr(v, "shape"))
+
+
+def resume(ckpt_dir, tree_like, specs, new_mesh: Mesh, *,
+           global_batch: int, old_microbatches: int, old_dp: int,
+           new_dp: int):
+    """Restore LATEST onto `new_mesh`; returns (tree, extra, microbatches).
+
+    Microbatch count is rescaled to keep the global batch and per-device
+    microbatch memory constant: mb_new = mb_old · old_dp / new_dp
+    (rounded up to a divisor of the global batch)."""
+    tree, extra = ckpt_mod.restore(ckpt_dir, tree_like, mesh=new_mesh,
+                                   specs=specs)
+    mb = max(1, (old_microbatches * old_dp + new_dp - 1) // new_dp)
+    while global_batch % (mb * new_dp) and mb < global_batch:
+        mb += 1
+    return tree, extra, mb

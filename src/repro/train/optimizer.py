@@ -1,0 +1,335 @@
+"""Optimizers for LM training.
+
+AdamW is the production default.  The paper's optimizer suite (L-BFGS and
+accelerated gradient with restart, §3.3) is exposed as selectable LM
+trainers through the same pure (init, update) interface — the driver/cluster
+split survives intact: `update` is replicated vector math, the gradient it
+consumes came from sharded cluster compute.
+
+ZeRO-1: `zero1_specs` turns the param spec tree into optimizer-state specs
+sharded over the data axes along each tensor's largest divisible dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | lbfgs | acc_rb | sgdm
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    lbfgs_mem: int = 8
+    momentum: float = 0.9
+    moment_dtype: str = "float32"   # bf16 halves optimizer memory (671B)
+
+
+def lr_at(cfg: OptimizerConfig, step: Array) -> Array:
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def _global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _clip(tree, max_norm: float):
+    g = _global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), g
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def make_adamw(cfg: OptimizerConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return AdamWState(step=jnp.int32(0),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        grads, gnorm = _clip(grads, cfg.clip_norm)
+        step = state.step + 1
+        lr = lr_at(cfg, step)
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+            v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+            mh, vh = m2 / b1c, v2 / b2c
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + \
+                cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                m2.astype(mdt), v2.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step, new_m, new_v), \
+            {"grad_norm": gnorm, "lr": lr}
+
+    return init, update
+
+
+class SgdmState(NamedTuple):
+    step: Array
+    m: Any
+
+
+def make_sgdm(cfg: OptimizerConfig):
+    def init(params):
+        return SgdmState(jnp.int32(0),
+                         jax.tree.map(lambda p: jnp.zeros(p.shape,
+                                                          jnp.float32),
+                                      params))
+
+    def update(grads, state, params):
+        grads, gnorm = _clip(grads, cfg.clip_norm)
+        step = state.step + 1
+        lr = lr_at(cfg, step)
+
+        def upd(p, g, m):
+            m2 = cfg.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, params, grads, state.m)
+        return (jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple)),
+                SgdmState(step, jax.tree.map(
+                    lambda t: t[1], out,
+                    is_leaf=lambda t: isinstance(t, tuple))),
+                {"grad_norm": gnorm, "lr": lr})
+
+    return init, update
+
+
+class AccState(NamedTuple):
+    """Paper acc_rb (fixed-step variant for stochastic LM training):
+    Nesterov momentum + gradient-test restart."""
+    step: Array
+    z: Any            # accelerated point
+    theta: Array
+    prev_update: Any
+
+
+def make_acc_rb(cfg: OptimizerConfig):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AccState(jnp.int32(0), jax.tree.map(zeros, params),
+                        jnp.float32(1.0), jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        grads, gnorm = _clip(grads, cfg.clip_norm)
+        step = state.step + 1
+        lr = lr_at(cfg, step)
+        theta = state.theta
+        theta_new = 2.0 / (1.0 + jnp.sqrt(1.0 + 4.0 / (theta * theta)))
+        # Gradient test on the flattened trees: <g, Δx_prev> > 0 → restart.
+        dot = sum(jnp.vdot(g.astype(jnp.float32), d)
+                  for g, d in zip(jax.tree.leaves(grads),
+                                  jax.tree.leaves(state.prev_update)))
+        theta_new = jnp.where(dot > 0, 1.0, theta_new)
+
+        def upd(p, g, z):
+            pf = p.astype(jnp.float32)
+            z2 = jnp.where(dot > 0, pf, z) - \
+                (lr / jnp.maximum(theta_new, 1e-3)) * g.astype(jnp.float32)
+            x2 = (1 - theta_new) * pf + theta_new * z2
+            return x2.astype(p.dtype), z2, x2 - pf
+
+        out = jax.tree.map(upd, params, grads, state.z)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AccState(step, pick(1), theta_new, pick(2)), \
+            {"grad_norm": gnorm, "lr": lr, "theta": theta_new}
+
+    return init, update
+
+
+class LbfgsLMState(NamedTuple):
+    """Fixed-step L-BFGS for stochastic training (no line search — the
+    driver-side two-loop over a short history; see core.optim.lbfgs for the
+    deterministic full-batch version with line search)."""
+    step: Array
+    S: Any            # (mem, ...) per-leaf history of param deltas
+    Y: Any            # (mem, ...) per-leaf history of grad deltas
+    rho: Array        # (mem,)
+    idx: Array
+    filled: Array
+    prev_g: Any
+    prev_p: Any
+
+
+def make_lbfgs_lm(cfg: OptimizerConfig):
+    mem = cfg.lbfgs_mem
+
+    def init(params):
+        hist = lambda p: jnp.zeros((mem, *p.shape), jnp.float32)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return LbfgsLMState(jnp.int32(0), jax.tree.map(hist, params),
+                            jax.tree.map(hist, params),
+                            jnp.zeros((mem,), jnp.float32), jnp.int32(0),
+                            jnp.int32(0), jax.tree.map(zeros, params),
+                            jax.tree.map(zeros, params))
+
+    def _tree_vdot(a, b):
+        return sum(jnp.vdot(x, y) for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    def update(grads, state, params):
+        grads, gnorm = _clip(grads, cfg.clip_norm)
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        step = state.step + 1
+        lr = lr_at(cfg, step)
+
+        # two-loop recursion over tree-structured history
+        def hist_at(H, i):
+            return jax.tree.map(lambda h: h[i], H)
+
+        q = gf
+        alphas = jnp.zeros((mem,), jnp.float32)
+        for i in range(mem):
+            slot = (state.idx - 1 - i) % mem
+            valid = (i < state.filled).astype(jnp.float32)
+            a = valid * state.rho[slot] * _tree_vdot(hist_at(state.S, slot), q)
+            q = jax.tree.map(lambda qq, yy: qq - a * yy[slot], q, state.Y)
+            alphas = alphas.at[slot].set(a)
+        newest = (state.idx - 1) % mem
+        sy = _tree_vdot(hist_at(state.S, newest), hist_at(state.Y, newest))
+        yy = _tree_vdot(hist_at(state.Y, newest), hist_at(state.Y, newest))
+        gamma = jnp.where((state.filled > 0) & (yy > 0),
+                          sy / jnp.maximum(yy, 1e-30), 1.0)
+        r = jax.tree.map(lambda x: gamma * x, q)
+        for i in range(mem):
+            slot = (state.idx - state.filled + i) % mem
+            valid = (i < state.filled).astype(jnp.float32)
+            beta = valid * state.rho[slot] * _tree_vdot(
+                hist_at(state.Y, slot), r)
+            coef = alphas[slot] - beta
+            r = jax.tree.map(lambda rr, ss: rr + coef * ss[slot], r, state.S)
+
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) - lr * d).astype(p.dtype),
+            params, r)
+        s_new = jax.tree.map(
+            lambda pn, po: pn.astype(jnp.float32) - po.astype(jnp.float32),
+            new_params, params)
+        y_new = jax.tree.map(lambda g, pg: g - pg, gf, state.prev_g)
+        sy_new = _tree_vdot(s_new, y_new)
+        keep = (state.step > 0) & (sy_new > 1e-10)
+
+        def store(H, new):
+            return jax.tree.map(
+                lambda h, n: jnp.where(
+                    keep, h.at[state.idx].set(n), h), H, new)
+
+        S2, Y2 = store(state.S, s_new), store(state.Y, y_new)
+        rho2 = jnp.where(keep, state.rho.at[state.idx].set(
+            1.0 / jnp.maximum(sy_new, 1e-30)), state.rho)
+        idx2 = jnp.where(keep, (state.idx + 1) % mem, state.idx)
+        filled2 = jnp.where(keep, jnp.minimum(state.filled + 1, mem),
+                            state.filled)
+        return new_params, LbfgsLMState(step, S2, Y2, rho2, idx2, filled2,
+                                        gf, jax.tree.map(
+                                            lambda p: p.astype(jnp.float32),
+                                            params)), \
+            {"grad_norm": gnorm, "lr": lr}
+
+    return init, update
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    return {"adamw": make_adamw, "sgdm": make_sgdm, "acc_rb": make_acc_rb,
+            "lbfgs": make_lbfgs_lm}[cfg.name](cfg)
+
+
+# ------------------------------------------------------------- sharding ----
+def make_opt_specs(init_fn, param_shapes, param_specs, *,
+                   zero1: bool = False, mesh=None):
+    """Build the optimizer-state spec tree by structural correspondence:
+    any state leaf whose shape ends with a param leaf's shape inherits that
+    spec (prefixed with None for history dims); everything else replicates."""
+    from repro.models.sharding import batch_axes
+    state_shapes = jax.eval_shape(init_fn, param_shapes)
+    spec_of = {}
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+            param_specs, is_leaf=lambda v: isinstance(v, P))[0]:
+        shape_leaf = _get_path(param_shapes, path)
+        spec_of[tuple(shape_leaf.shape)] = spec
+    ba = batch_axes(mesh)
+    dp = 1
+    if mesh is not None:
+        for a in ba:
+            dp *= mesh.shape[a]
+
+    def leaf(leafshape):
+        shape = tuple(leafshape.shape)
+        spec = None
+        # longest suffix first: an exact-rank match must beat a 1-D norm
+        for pshape in sorted(spec_of, key=len, reverse=True):
+            if len(pshape) and len(shape) >= len(pshape) and \
+                    shape[len(shape) - len(pshape):] == pshape:
+                spec = P(*([None] * (len(shape) - len(pshape)) +
+                           list(spec_of[pshape])))
+                break
+        if spec is None:
+            spec = P(*([None] * len(shape)))
+        if zero1 and mesh is not None:
+            full = tuple(spec)
+            used = set()
+            for s in full:
+                for a in (s if isinstance(s, tuple) else (s,)):
+                    if a is not None:
+                        used.add(a)
+            # FSDP-sharded params already consume the data axes
+            if not any(a in used for a in ba):
+                for i, (dim, sp) in enumerate(zip(shape, full)):
+                    if sp is None and dim % dp == 0 and dim >= dp:
+                        full = full[:i] + (ba,) + full[i + 1:]
+                        return P(*full)
+        return spec
+
+    return state_shapes, jax.tree.map(leaf, state_shapes)
+
+
+def _get_path(tree, path):
+    node = tree
+    for p in path:
+        if hasattr(p, "key"):
+            node = node[p.key]
+        elif hasattr(p, "idx"):
+            node = node[p.idx]
+        elif hasattr(p, "name"):
+            node = getattr(node, p.name)
+        else:
+            raise TypeError(p)
+    return node

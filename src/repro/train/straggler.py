@@ -1,0 +1,90 @@
+"""Straggler detection and mitigation hooks (launcher level).
+
+Synchronous SPMD training has no per-task speculative execution (the Spark
+notion doesn't transfer: every chip participates in every collective), so
+production mitigation happens at the *step* granularity:
+
+  * StepMonitor keeps an EMA of step wall time and flags steps slower than
+    `threshold`× the EMA — the signal that a host is thermally throttling,
+    a link is degraded, or a preemption notice landed;
+  * on `trip_limit` consecutive flags the policy callback fires; the default
+    policy checkpoints and requests an elastic re-mesh (drop the slow host's
+    pod and resume on the survivors — see train.elastic), which is what
+    actual TPU fleets do;
+  * `deadline_s` turns a hung collective (dead host) into a detectable
+    failure instead of an infinite stall.
+
+This is simulation-tested (tests/test_fault_tolerance.py) since the
+container has one host; the monitor math is host-count independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ema_alpha: float = 0.1
+    threshold: float = 2.0          # × EMA → flagged
+    trip_limit: int = 3             # consecutive flags → policy fires
+    warmup_steps: int = 5           # ignore compile/first-step noise
+    deadline_s: float | None = None
+
+
+class StepMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 on_straggler: Callable[[dict], None] | None = None):
+        self.cfg = cfg
+        self.on_straggler = on_straggler
+        self.ema: float | None = None
+        self.steps = 0
+        self.trips = 0
+        self.flags: list[int] = []
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> dict:
+        assert self._t0 is not None, "start() not called"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> dict:
+        """Feed one step duration; returns the monitor verdict."""
+        self.steps += 1
+        verdict = {"step": self.steps, "dt": dt, "flagged": False,
+                   "tripped": False, "deadline_exceeded": False}
+        if self.cfg.deadline_s is not None and dt > self.cfg.deadline_s:
+            # a blown deadline (hung collective / dead host) trips
+            # immediately — no EMA evidence needed
+            verdict["deadline_exceeded"] = True
+            verdict["tripped"] = True
+            if self.on_straggler is not None:
+                self.on_straggler(dict(verdict, ema=self.ema))
+            return verdict
+        if self.steps <= self.cfg.warmup_steps:
+            self.ema = dt if self.ema is None else self.ema
+            return verdict
+        if self.ema is None:
+            self.ema = dt
+            return verdict
+        if dt > self.cfg.threshold * self.ema:
+            verdict["flagged"] = True
+            self.flags.append(self.steps)
+            self.trips += 1
+        else:
+            self.trips = 0
+        # only fold non-outliers into the EMA (don't learn the pathology)
+        if not verdict["flagged"]:
+            self.ema = (1 - self.cfg.ema_alpha) * self.ema \
+                + self.cfg.ema_alpha * dt
+        if self.trips >= self.cfg.trip_limit or verdict["deadline_exceeded"]:
+            verdict["tripped"] = True
+            self.trips = 0
+            if self.on_straggler is not None:
+                self.on_straggler(dict(verdict, ema=self.ema))
+        return verdict

@@ -1,0 +1,67 @@
+"""Train-step builder: grad accumulation, mixed precision, sharding glue.
+
+`build_train_step` closes over (model, optimizer) and returns a pure
+function suitable for jit with donated (params, opt_state).  Microbatching
+runs as a `lax.scan` over the leading split of the batch; gradients are
+accumulated in f32 and the collective all-reduce over the data axes is
+deferred to the (single) optimizer application — the GSPMD partitioner
+therefore emits ONE gradient reduce per step regardless of microbatch
+count, which is the overlap-friendly schedule (§Perf discusses the
+psum_scatter/ZeRO-1 variant)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def build_train_step(model, opt_update, *, microbatches: int = 1,
+                     grad_compressor=None,
+                     accum_dtype=jnp.float32) -> Callable:
+    """Returns f(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_compressor: optional (compress, decompress) pair applied to the
+    accumulated gradient before the optimizer — the cross-pod DP reduction
+    hook (see train.compression).
+    accum_dtype: gradient accumulation buffer dtype (bf16 halves the
+    accumulator footprint for ≳0.5T-param models)."""
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+
+            def micro(carry, mb):
+                acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(accum_dtype), acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            grads, (losses, mets) = jax.lax.scan(micro, zeros, mbatch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), mets)
+
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+
+        params, opt_state, opt_metrics = opt_update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return step

@@ -1,0 +1,6 @@
+# NOTE: deliberately NO --xla_force_host_platform_device_count here —
+# unit/smoke tests must see the real (single) device; only the dry-run and
+# the dedicated multi-device subprocess tests pin a device count.
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,156 @@
+"""Distributed matrix representations vs dense numpy oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distmat import (RowMatrix, IndexedRowMatrix,
+                                CoordinateMatrix, BlockMatrix,
+                                SparseMatrixCSC, SparseVector)
+
+RNG = np.random.default_rng(0)
+
+
+def rand(m, n):
+    return RNG.normal(size=(m, n)).astype(np.float32)
+
+
+class TestRowMatrix:
+    def test_gram(self):
+        A = rand(33, 7)
+        np.testing.assert_allclose(RowMatrix.create(A).gram(), A.T @ A,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_matvec_roundtrip(self):
+        A = rand(19, 5)
+        v = RNG.normal(size=5).astype(np.float32)
+        rm = RowMatrix.create(A)
+        u = rm.matvec(jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(u)[:19], A @ v, rtol=1e-4)
+        np.testing.assert_allclose(rm.rmatvec(u), A.T @ (A @ v), rtol=1e-3,
+                                   atol=1e-4)
+
+    def test_column_stats(self):
+        A = rand(40, 6)
+        A[A < -1.0] = 0.0            # some sparsity for nnz
+        st_ = RowMatrix.create(A).column_stats()
+        np.testing.assert_allclose(st_["mean"], A.mean(0), rtol=1e-4,
+                                   atol=1e-5)
+        np.testing.assert_allclose(st_["variance"], A.var(0, ddof=1),
+                                   rtol=1e-3, atol=1e-5)
+        np.testing.assert_allclose(st_["min"], A.min(0), rtol=1e-5)
+        np.testing.assert_allclose(st_["max"], A.max(0), rtol=1e-5)
+        np.testing.assert_allclose(st_["num_nonzeros"], (A != 0).sum(0))
+
+    def test_column_similarities(self):
+        A = rand(50, 4)
+        sim = np.asarray(RowMatrix.create(A).column_similarities())
+        norms = np.linalg.norm(A, axis=0)
+        want = (A.T @ A) / np.outer(norms, norms)
+        np.testing.assert_allclose(sim, want, rtol=1e-3, atol=1e-4)
+
+    def test_multiply_local(self):
+        A, B = rand(21, 6), rand(6, 3)
+        out = RowMatrix.create(A).multiply_local(jnp.asarray(B)).to_local()
+        np.testing.assert_allclose(out, A @ B, rtol=1e-4)
+
+    @given(st.integers(1, 40), st.integers(1, 12))
+    @settings(max_examples=10, deadline=None)
+    def test_frobenius_property(self, m, n):
+        A = np.random.default_rng(m * 100 + n).normal(
+            size=(m, n)).astype(np.float32)
+        got = float(RowMatrix.create(A).frobenius_norm())
+        assert got == pytest.approx(float(np.linalg.norm(A)), rel=1e-4)
+
+    def test_indexed(self):
+        idx = np.array([4, 0, 2], np.int64)
+        A = rand(3, 5)
+        im = IndexedRowMatrix.create(jnp.asarray(idx), jnp.asarray(A))
+        out = np.asarray(im.to_local())
+        assert out.shape[0] == 5
+        np.testing.assert_allclose(out[idx], A, rtol=1e-6)
+
+
+class TestCoordinateMatrix:
+    def _make(self, m=15, n=9, nnz=40, seed=1):
+        rng = np.random.default_rng(seed)
+        ri = rng.integers(0, m, nnz)
+        ci = rng.integers(0, n, nnz)
+        va = rng.normal(size=nnz).astype(np.float32)
+        D = np.zeros((m, n), np.float32)
+        np.add.at(D, (ri, ci), va)
+        cm = CoordinateMatrix.create(jnp.asarray(ri), jnp.asarray(ci),
+                                     jnp.asarray(va), (m, n))
+        return cm, D
+
+    def test_matvec(self):
+        cm, D = self._make()
+        x = np.random.default_rng(2).normal(size=9).astype(np.float32)
+        np.testing.assert_allclose(cm.matvec(jnp.asarray(x)), D @ x,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_rmatvec(self):
+        cm, D = self._make()
+        y = np.random.default_rng(3).normal(size=15).astype(np.float32)
+        np.testing.assert_allclose(cm.rmatvec(jnp.asarray(y)), D.T @ y,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_conversions(self):
+        cm, D = self._make()
+        np.testing.assert_allclose(cm.to_local(), D, rtol=1e-6)
+        irm = cm.to_indexed_row_matrix()
+        np.testing.assert_allclose(np.asarray(irm.to_local())[:15], D,
+                                   rtol=1e-5, atol=1e-6)
+        bm = cm.to_block_matrix(4, 4)
+        np.testing.assert_allclose(bm.to_local(), D, rtol=1e-6)
+
+
+class TestBlockMatrix:
+    def test_multiply_add_validate(self):
+        A, B = rand(14, 10), rand(10, 6)
+        ba, bb = BlockMatrix.create(A), BlockMatrix.create(B)
+        ba.validate()
+        np.testing.assert_allclose(ba.multiply(bb).to_local(), A @ B,
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(ba.add(ba).to_local(), 2 * A, rtol=1e-6)
+
+    def test_matvec_both_modes(self):
+        A = rand(12, 8)
+        bm = BlockMatrix.create(A)
+        v = RNG.normal(size=8).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(bm.matvec(jnp.asarray(v)))[:12], A @ v, rtol=1e-4)
+        w = jnp.asarray(np.pad(v, (0, bm.data.shape[1] - 8)))
+        np.testing.assert_allclose(
+            np.asarray(bm.matvec_model_sharded(w))[:12], A @ v, rtol=1e-4)
+
+    def test_dim_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            BlockMatrix.create(rand(4, 4)).multiply(
+                BlockMatrix.create(rand(5, 4)))
+
+
+class TestLocalSparse:
+    def test_csc_roundtrip_and_ops(self):
+        rng = np.random.default_rng(5)
+        S = ((rng.random((9, 7)) < 0.4) * rng.normal(size=(9, 7))
+             ).astype(np.float32)
+        sp = SparseMatrixCSC.from_dense(S)
+        np.testing.assert_allclose(sp.to_dense(), S, rtol=1e-6)
+        x = rng.normal(size=7).astype(np.float32)
+        np.testing.assert_allclose(sp.matvec(jnp.asarray(x)), S @ x,
+                                   rtol=1e-4, atol=1e-5)
+        y = rng.normal(size=9).astype(np.float32)
+        np.testing.assert_allclose(sp.matvec(jnp.asarray(y), transpose=True),
+                                   S.T @ y, rtol=1e-4, atol=1e-5)
+        B = rng.normal(size=(7, 3)).astype(np.float32)
+        np.testing.assert_allclose(sp.matmat(jnp.asarray(B)), S @ B,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_sparse_vector(self):
+        v = np.array([1.0, 0.0, 3.0], np.float32)
+        sv = SparseVector.from_dense(v)
+        assert sv.size == 3 and list(np.asarray(sv.indices)) == [0, 2]
+        np.testing.assert_allclose(sv.to_dense(), v)
+        assert float(sv.dot(jnp.asarray([2.0, 5.0, 1.0]))) == \
+            pytest.approx(5.0)

@@ -1,0 +1,148 @@
+"""Fault tolerance: checkpoint/restart, elastic re-mesh, straggler
+monitor, deterministic data pipeline, failure-recovery integration."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import pipeline as dp
+from repro.models import build, smoke_config
+from repro.models.sharding import use_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train.elastic import remesh, resume
+from repro.train.straggler import StepMonitor, StragglerConfig
+from repro.train.train_step import build_train_step
+
+
+def _tiny_setup():
+    cfg = smoke_config(configs.get("llama3.2-3b")).scaled(num_layers=2)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = opt_mod.OptimizerConfig(lr=1e-2, warmup_steps=1, total_steps=50)
+    opt_init, opt_update = opt_mod.make_optimizer(ocfg)
+    step = jax.jit(build_train_step(model, opt_update))
+    dc = dp.from_model(cfg, global_batch=4, seq_len=16)
+    return cfg, model, params, opt_init, step, dc
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, model, params, opt_init, step, dc = _tiny_setup()
+    opt_state = opt_init(params)
+    batch = jax.jit(lambda s: dp.in_graph_batch(dc, s))(0)
+    params, opt_state, _ = step(params, opt_state, batch)
+    d = ckpt.save(tmp_path, 1, (params, opt_state),
+                  extra={"data_step": 1})
+    assert (d / "manifest.json").exists()
+    assert ckpt.latest_step(tmp_path) == 1
+    (p2, o2), extra = ckpt.restore(tmp_path, (params, opt_state))
+    assert extra["data_step"] == 1
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint(tmp_path):
+    cfg, model, params, opt_init, *_ = _tiny_setup()
+    saver = ckpt.AsyncCheckpointer(tmp_path)
+    saver.save_async(5, params, extra={"data_step": 5})
+    saver.wait()
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_failure_recovery_resumes_identically(tmp_path):
+    """Train 4 steps; 'crash'; restore at 2; replay → identical params."""
+    cfg, model, params0, opt_init, step, dc = _tiny_setup()
+    batch_fn = jax.jit(lambda s: dp.in_graph_batch(dc, s))
+
+    params, opt = params0, opt_init(params0)
+    snap = None
+    for s in range(4):
+        params, opt, _ = step(params, opt, batch_fn(s))
+        if s == 1:
+            ckpt.save(tmp_path, 2, (params, opt), extra={"data_step": 2})
+    ref = jax.tree.leaves(params)
+
+    # crash + restore
+    params_r, opt_r = params0, opt_init(params0)
+    (params_r, opt_r), extra = ckpt.restore(tmp_path, (params_r, opt_r))
+    for s in range(extra["data_step"], 4):
+        params_r, opt_r, _ = step(params_r, opt_r, batch_fn(s))
+    for a, b in zip(ref, jax.tree.leaves(params_r)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_elastic_remesh_changes_sharding(tmp_path):
+    """Restore a checkpoint onto a different mesh (elastic downscale)."""
+    cfg, model, params, opt_init, *_ = _tiny_setup()
+    _, specs = model.specs()
+    ckpt.save(tmp_path, 1, params, specs, extra={})
+    new_mesh = make_host_mesh(1, 1)      # the "surviving slice"
+    with new_mesh, use_mesh(new_mesh):
+        restored, _ = ckpt.restore(tmp_path, params, mesh=new_mesh,
+                                   specs=specs)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_microbatch_rescale(tmp_path):
+    cfg, model, params, opt_init, *_ = _tiny_setup()
+    _, specs = model.specs()
+    ckpt.save(tmp_path, 3, params, specs, extra={"data_step": 3})
+    mesh = make_host_mesh(1, 1)
+    with mesh, use_mesh(mesh):
+        tree, extra, mb = resume(tmp_path, params, specs, mesh,
+                                 global_batch=256, old_microbatches=8,
+                                 old_dp=32, new_dp=16)
+    assert mb == 16            # half the chips → double the microbatches
+    assert extra["data_step"] == 3
+
+
+def test_straggler_monitor():
+    mon = StepMonitor(StragglerConfig(warmup_steps=2, threshold=2.0,
+                                      trip_limit=2))
+    fired = []
+    mon.on_straggler = fired.append
+    for _ in range(6):
+        mon.observe(0.10)
+    v = mon.observe(0.50)                 # 5× EMA → flagged
+    assert v["flagged"] and not v["tripped"]
+    v = mon.observe(0.50)                 # second consecutive → tripped
+    assert v["tripped"] and fired
+    # EMA not polluted by the outliers
+    assert mon.ema == pytest.approx(0.10, rel=0.05)
+
+
+def test_straggler_deadline():
+    mon = StepMonitor(StragglerConfig(deadline_s=0.2, warmup_steps=0,
+                                      trip_limit=99))
+    v = mon.observe(0.5)
+    assert v["deadline_exceeded"] and v["tripped"]
+
+
+def test_data_pipeline_determinism():
+    dc = dp.DataConfig(vocab_size=100, global_batch=4, seq_len=8)
+    it1 = dp.HostIterator(dc)
+    b1 = [next(it1) for _ in range(3)]
+    it2 = dp.HostIterator.restore(dc, {"step": 1, "seed": dc.seed})
+    b2 = next(it2)
+    np.testing.assert_array_equal(b1[1]["tokens"], b2["tokens"])
+    # in-graph batch is also deterministic
+    g1 = dp.in_graph_batch(dc, 2)
+    g2 = dp.in_graph_batch(dc, 2)
+    np.testing.assert_array_equal(np.asarray(g1["tokens"]),
+                                  np.asarray(g2["tokens"]))
+
+
+def test_data_pipeline_host_sharding():
+    dc = dp.DataConfig(vocab_size=100, global_batch=8, seq_len=4)
+    full = next(dp.HostIterator(dc))
+    sh0 = next(dp.HostIterator(dc).shard_for(0, 2))
+    sh1 = next(dp.HostIterator(dc).shard_for(1, 2))
+    np.testing.assert_array_equal(
+        np.concatenate([sh0["tokens"], sh1["tokens"]]), full["tokens"])

@@ -1,0 +1,81 @@
+"""Spectral solvers vs numpy oracles (paper §3.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distmat import RowMatrix, CoordinateMatrix
+from repro.core.linalg import (compute_svd, compute_pca, tsqr,
+                               lanczos_eigsh)
+
+
+def test_tall_skinny_svd_gram_path():
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(300, 16)).astype(np.float32)
+    res = compute_svd(RowMatrix.create(A), 6)
+    assert res.info["mode"] == "gram"
+    s_np = np.linalg.svd(A, compute_uv=False)
+    np.testing.assert_allclose(res.s, s_np[:6], rtol=1e-3)
+    U = np.asarray(res.U.to_local())
+    recon = U @ np.diag(np.asarray(res.s)) @ np.asarray(res.V).T
+    u, s, vt = np.linalg.svd(A, full_matrices=False)
+    best = u[:, :6] @ np.diag(s[:6]) @ vt[:6]
+    np.testing.assert_allclose(recon, best, atol=5e-3)
+
+
+def test_square_svd_lanczos_path():
+    rng = np.random.default_rng(1)
+    m = n = 80
+    D = ((rng.random((m, n)) < 0.2) * rng.normal(size=(m, n))
+         ).astype(np.float32)
+    ri, ci = np.nonzero(D)
+    cm = CoordinateMatrix.create(jnp.asarray(ri), jnp.asarray(ci),
+                                 jnp.asarray(D[ri, ci]), (m, n))
+    res = compute_svd(cm, 5, mode="lanczos", tol=3e-6, max_restarts=300)
+    s_np = np.linalg.svd(D, compute_uv=False)
+    np.testing.assert_allclose(res.s, s_np[:5], rtol=2e-3)
+    assert bool(res.info["converged"])
+
+
+def test_lanczos_known_spectrum():
+    # diagonal operator → exact eigenvalues
+    d = jnp.asarray(np.linspace(1.0, 50.0, 64), jnp.float32)
+    vals, vecs, info = lanczos_eigsh(lambda v: d * v, 64, 4, tol=1e-9,
+                                     max_restarts=100)
+    np.testing.assert_allclose(vals, [50.0, 49.2222, 48.4444, 47.6667],
+                               rtol=1e-4)
+    # eigenvectors of a diagonal matrix are coordinate vectors
+    top = np.abs(np.asarray(vecs[:, 0]))
+    assert top.argmax() == 63 and top.max() > 0.999
+
+
+def test_auto_dispatch():
+    rng = np.random.default_rng(3)
+    A = rng.normal(size=(64, 8)).astype(np.float32)
+    res = compute_svd(RowMatrix.create(A), 3, mode="auto")
+    assert res.info["mode"] == "gram"
+
+
+@given(st.integers(20, 100), st.integers(2, 10))
+@settings(max_examples=8, deadline=None)
+def test_tsqr_property(m, n):
+    A = np.random.default_rng(m + n).normal(size=(m, n)).astype(np.float32)
+    Q, R = tsqr(RowMatrix.create(A))
+    Ql, Rl = np.asarray(Q.to_local()), np.asarray(R)
+    np.testing.assert_allclose(Ql @ Rl, A, atol=5e-4)
+    np.testing.assert_allclose(Ql.T @ Ql, np.eye(n), atol=5e-4)
+    assert np.all(np.diag(Rl) >= -1e-6)
+    assert np.allclose(Rl, np.triu(Rl), atol=1e-5)
+
+
+def test_pca_matches_numpy():
+    rng = np.random.default_rng(4)
+    A = (rng.normal(size=(200, 10)) @ np.diag(np.linspace(3, 0.1, 10))
+         ).astype(np.float32) + 5.0
+    comps, ev = compute_pca(RowMatrix.create(A), 3)
+    C = np.cov(A.T)
+    w, V = np.linalg.eigh(C)
+    w, V = w[::-1][:3], V[:, ::-1][:, :3]
+    np.testing.assert_allclose(ev, w, rtol=1e-3)
+    for i in range(3):
+        assert abs(np.dot(np.asarray(comps)[:, i], V[:, i])) > 0.99

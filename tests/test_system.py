@@ -1,0 +1,102 @@
+"""End-to-end system behaviour: the full train driver path (data →
+grad-accum step → optimizer → checkpoint → resume) and the serve path
+(prefill → decode), on CPU-scale configs — exactly the code paths the
+dry-run lowers at production scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import pipeline as dp
+from repro.models import build, smoke_config
+from repro.models.sharding import use_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import build_train_step
+
+
+@pytest.mark.parametrize("optimizer", ["adamw", "acc_rb", "lbfgs"])
+def test_train_loss_decreases(optimizer):
+    """Train a small model for a few dozen steps on a FIXED batch with
+    each selectable optimizer (incl. the paper's) — loss must descend."""
+    cfg = smoke_config(configs.get("llama3.2-3b")).scaled(num_layers=2)
+    mesh = make_host_mesh()
+    with mesh, use_mesh(mesh):
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        ocfg = opt_mod.OptimizerConfig(name=optimizer, lr=5e-3,
+                                       warmup_steps=2, total_steps=40)
+        opt_init, opt_update = opt_mod.make_optimizer(ocfg)
+        step = jax.jit(build_train_step(model, opt_update, microbatches=2))
+        dc = dp.from_model(cfg, global_batch=4, seq_len=16)
+        batch = jax.jit(lambda s: dp.in_graph_batch(dc, s))(0)
+        opt_state = opt_init(params)
+        losses = []
+        for _ in range(25):
+            params, opt_state, m = step(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+        assert np.isfinite(losses).all()
+        # monotone-ish descent; adamw is much faster but all must descend
+        min_drop = 0.5 if optimizer == "adamw" else 0.1
+        assert losses[-1] < losses[0] - min_drop, (optimizer, losses[:3],
+                                                   losses[-3:])
+
+
+def test_serve_generates_tokens():
+    cfg = smoke_config(configs.get("qwen3-4b"))
+    mesh = make_host_mesh()
+    rng = np.random.default_rng(0)
+    with mesh, use_mesh(mesh):
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, S, G = 2, 12, 5
+        caches, _ = model.init_caches(B, S + G)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                           jnp.int32)
+        logits, caches = jax.jit(model.prefill)(params, {"tokens": toks},
+                                                caches)
+        decode = jax.jit(model.decode_step)
+        outs = [jnp.argmax(logits[:, -1], -1)[:, None]]
+        pos = jnp.int32(S)
+        for _ in range(G - 1):
+            lg, caches = decode(params, outs[-1], caches, pos)
+            outs.append(jnp.argmax(lg[:, -1], -1)[:, None])
+            pos = pos + 1
+        gen = np.asarray(jnp.concatenate(outs, 1))
+        assert gen.shape == (B, G)
+        assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
+
+
+def test_full_driver_with_checkpoint_resume(tmp_path):
+    """The launch.train path: run 6 steps w/ checkpoint at 4, kill, resume,
+    verify the final params match an uninterrupted 6-step run."""
+    cfg = smoke_config(configs.get("qwen3-4b")).scaled(num_layers=2)
+    mesh = make_host_mesh()
+    with mesh, use_mesh(mesh):
+        model = build(cfg)
+        ocfg = opt_mod.OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                       total_steps=10)
+        opt_init, opt_update = opt_mod.make_optimizer(ocfg)
+        step = jax.jit(build_train_step(model, opt_update))
+        dc = dp.from_model(cfg, global_batch=2, seq_len=16)
+        batch_fn = jax.jit(lambda s: dp.in_graph_batch(dc, s))
+
+        params = model.init(jax.random.PRNGKey(0))
+        opt = opt_init(params)
+        for s in range(6):
+            params, opt, _ = step(params, opt, batch_fn(s))
+            if s == 3:
+                ckpt.save(tmp_path, 4, (params, opt),
+                          extra={"data_step": 4})
+        want = [np.asarray(x, np.float32) for x in jax.tree.leaves(params)]
+
+        p2 = model.init(jax.random.PRNGKey(0))
+        o2 = opt_init(p2)
+        (p2, o2), extra = ckpt.restore(tmp_path, (p2, o2))
+        for s in range(extra["data_step"], 6):
+            p2, o2, _ = step(p2, o2, batch_fn(s))
+        got = [np.asarray(x, np.float32) for x in jax.tree.leaves(p2)]
+        for a, b in zip(want, got):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
