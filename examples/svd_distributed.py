@@ -1,5 +1,6 @@
 """Paper §3.1 / Table 1 — distributed SVD at Netflix-prize-like aspect
-ratios (scaled to this machine), via both code paths.
+ratios (scaled to this machine), via all three code paths (Gram,
+matrix-free Lanczos, and the randomized range finder).
 
     PYTHONPATH=src python examples/svd_distributed.py
 """
@@ -33,3 +34,15 @@ res = compute_svd(cm, k=5, mode="lanczos", tol=1e-4)
 print(f"square sparse ({m}x{n}, nnz={nnz}): "
       f"σ={np.round(np.asarray(res.s), 3)} "
       f"restarts={int(res.info['restarts'])}  [{time.time()-t0:.2f}s]")
+
+# moderately-rectangular dense path — randomized range finder: too wide for
+# a comfortable driver-side Gram, dense enough that Lanczos pays one full
+# pass over A per extracted direction; the sketch needs 2+2q passes total.
+W = rng.normal(size=(30_000, 2048)).astype(np.float32)
+W[:, :16] *= np.linspace(40.0, 8.0, 16)[None, :]     # plant a signal
+t0 = time.time()
+res = compute_svd(RowMatrix.create(W), k=8, mode="randomized")
+print(f"wide dense ({W.shape}): mode={res.info['mode']} "
+      f"passes={res.info['passes_over_A']} "
+      f"tail_ratio={float(res.info['tail_ratio']):.3f} "
+      f"σ={np.round(np.asarray(res.s), 2)}  [{time.time()-t0:.2f}s]")

@@ -1,0 +1,68 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+The repo targets the current jax API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``pltpu.CompilerParams``) but must also run on
+the pinned jax 0.4.37 toolchain baked into the CI/container image, where:
+
+  * ``jax.sharding.AxisType`` does not exist and ``jax.make_mesh`` takes no
+    ``axis_types`` keyword (explicit-sharding axis types landed later);
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` only;
+  * the Pallas TPU compiler-params dataclass is ``TPUCompilerParams``.
+
+Everything below is a getattr-with-fallback — no version parsing — so the
+same code path keeps working when either side of the fence changes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.experimental.pallas.tpu as pltpu
+
+# -- shard_map ---------------------------------------------------------------
+if hasattr(jax, "shard_map"):
+    _shard_map, _relax_kw = jax.shard_map, "check_vma"
+else:  # jax <= 0.4.x: experimental module, and check_vma was check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _relax_kw = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    kw = {} if check_vma is None else {_relax_kw: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+def axis_size(name: str):
+    """``jax.lax.axis_size`` inside shard_map; psum(1) on older jax."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+# -- mesh construction -------------------------------------------------------
+# AxisType.Auto is the default behaviour on old jax, so the fallback is
+# simply to drop the argument.
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    shape, names = tuple(shape), tuple(names)
+    if AxisType is not None:
+        return jax.make_mesh(shape, names,
+                             axis_types=(AxisType.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
+
+
+def cost_analysis(compiled) -> dict:
+    """Compiled-executable cost analysis as a flat dict on every jax version
+    (jax <= 0.4.x returns a one-element list of per-device dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+# -- Pallas TPU compiler params ----------------------------------------------
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

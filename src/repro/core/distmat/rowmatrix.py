@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from . import types as T
 
 Array = jax.Array
@@ -30,7 +31,7 @@ def _shard_index(axes: Sequence[str]) -> Array:
     """Flat index of this shard along the given (major→minor) mesh axes."""
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -61,8 +62,8 @@ class RowMatrix(T.DistMatrix):
         return P(self.row_axes, None)
 
     def _smap(self, f, in_specs, out_specs):
-        return jax.shard_map(f, mesh=self.mesh, in_specs=in_specs,
-                             out_specs=out_specs)
+        return compat.shard_map(f, mesh=self.mesh, in_specs=in_specs,
+                                out_specs=out_specs)
 
     def _row_mask(self) -> Array:
         """Row-sharded {0,1} mask of true (non-padding) rows."""
@@ -120,6 +121,39 @@ class RowMatrix(T.DistMatrix):
         out = self._smap(body, in_specs=(self._spec, P()),
                          out_specs=self._spec)(self.rows, B)
         return replace(self, rows=out)
+
+    def sketch(self, r: int, *, seed: int = 0) -> "RowMatrix":
+        """Y = A Ω for an (n × r) Gaussian test matrix Ω (randomized
+        range finder).  Ω is generated *inside* each shard from the shared
+        seed — every chip derives the identical Ω locally, so the sketch
+        matrix is never materialized on (or broadcast from) the driver;
+        the only HBM traffic is one pass over A."""
+        n = self.rows.shape[1]
+
+        def body(a):
+            key = jax.random.PRNGKey(seed)       # same key ⇒ same Ω per shard
+            omega = jax.random.normal(key, (n, r), a.dtype)
+            return a @ omega
+
+        out = self._smap(body, in_specs=(self._spec,),
+                         out_specs=self._spec)(self.rows)
+        return replace(self, rows=out)
+
+    def project(self, Q: "RowMatrix", *, out_dtype=jnp.float32) -> Array:
+        """B = AᵀQ for a row-conforming Q, replicated — the randomized-SVD
+        projection: per-shard streaming cross-Gram (Pallas randsketch
+        kernel) then a tree all-reduce over the row axes.  Padding rows are
+        zero in both operands so they do not contribute."""
+        from repro.kernels import ops as _ops
+        axes = self.row_axes
+
+        def body(a, q):
+            partial = _ops.randsketch(a, q, out_dtype=jnp.float32)
+            return jax.lax.psum(partial, axes)
+
+        out = self._smap(body, in_specs=(self._spec, self._spec),
+                         out_specs=P())(self.rows, Q.rows)
+        return out.astype(out_dtype)
 
     def scale_columns(self, d: Array) -> "RowMatrix":
         """A · diag(d) with replicated d (DIMSUM column scaling)."""

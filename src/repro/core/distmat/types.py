@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 Array = jax.Array
 
 # Default logical axis names.  Row-sharding uses the batch-like axes; column /
@@ -31,17 +33,11 @@ COL_AXIS = "model"
 @functools.cache
 def single_device_mesh() -> Mesh:
     """A (1, 1) mesh so the same shard_map code path runs on one CPU."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def make_mesh(shape: Sequence[int], names: Sequence[str]) -> Mesh:
-    return jax.make_mesh(
-        tuple(shape), tuple(names),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(names),
-    )
+    return compat.make_mesh(shape, names)
 
 
 def row_axes_for(mesh: Mesh) -> tuple[str, ...]:

@@ -1,6 +1,9 @@
 from .lanczos import lanczos_eigsh, svd_via_lanczos
-from .svd import compute_svd, compute_pca, SVDResult, GRAM_THRESHOLD
+from .randsvd import randomized_svd
+from .svd import (compute_svd, compute_pca, SVDResult, GRAM_THRESHOLD,
+                  RANDOMIZED_K_THRESHOLD)
 from .tsqr import tsqr
 
-__all__ = ["lanczos_eigsh", "svd_via_lanczos", "compute_svd", "compute_pca",
-           "SVDResult", "GRAM_THRESHOLD", "tsqr"]
+__all__ = ["lanczos_eigsh", "svd_via_lanczos", "randomized_svd",
+           "compute_svd", "compute_pca", "SVDResult", "GRAM_THRESHOLD",
+           "RANDOMIZED_K_THRESHOLD", "tsqr"]

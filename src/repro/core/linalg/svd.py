@@ -1,10 +1,24 @@
-"""computeSVD / computePCA — paper §3.1.
+"""computeSVD / computePCA — paper §3.1, plus a randomized third path.
 
 Dispatch mirrors MLlib's RowMatrix.computeSVD: the *user does not choose* —
-tall-and-skinny matrices (n small enough that the n×n Gram fits "on the
-driver", i.e. replicated per chip) take the Gram path (§3.1.2); otherwise the
-ARPACK-analogue matrix-free Lanczos path (§3.1.1).  Wide-and-short inputs are
-handled through their transpose, as in the paper.
+`mode="auto"` picks among three paths by (n, k):
+
+  * ``gram``        — n ≤ GRAM_THRESHOLD (=8192): the n×n Gram fits "on the
+    driver" (replicated per chip); one all-reduce, then a local eigh
+    (§3.1.2 tall-and-skinny).
+  * ``randomized``  — n > GRAM_THRESHOLD and k ≤ RANDOMIZED_K_THRESHOLD
+    (=128), RowMatrix only: blocked Gaussian range finder with TSQR
+    re-orthonormalization and 2+2q passes over A (Li–Kluger–Tygert; see
+    randsvd.py).  Wins when A is too wide for Gram but dense enough that
+    Lanczos' one-direction-per-matvec iteration is the bottleneck.
+  * ``lanczos``     — everything else: ARPACK-analogue matrix-free
+    thick-restart Lanczos (§3.1.1); the right tool for very sparse
+    operators and for k too large for a sketch to be cheap.
+
+Transpose dispatch for wide-and-short inputs (the paper handles those via
+Aᵀ) is not implemented yet — callers pass m ≥ n layouts (ROADMAP open item).
+All modes report their convergence evidence in ``SVDResult.info`` (gram:
+exact; randomized: ``tail_ratio``; lanczos: restarts/residuals).
 """
 from __future__ import annotations
 
@@ -16,12 +30,18 @@ import jax.numpy as jnp
 
 from repro.core.distmat.rowmatrix import RowMatrix
 from . import lanczos as _lanczos
+from . import randsvd as _randsvd
 
 Array = jax.Array
 
 # n at which an n×n float32 Gram stops being a comfortable "driver" object.
 # 16 GB HBM chip → reserve ≲ 1 GB for the replicated Gram → n ≈ 16384.
 GRAM_THRESHOLD = 8192
+
+# Largest k for which the (k+p)-wide sketch beats Lanczos' k sequential
+# directions: past this, sketch passes stop amortizing the extra flops and
+# the (n × k+p) projections crowd VMEM in the streaming kernel.
+RANDOMIZED_K_THRESHOLD = 128
 
 
 @dataclass(frozen=True)
@@ -40,14 +60,26 @@ def _recover_u(A: RowMatrix, s: Array, V: Array, rcond: float) -> RowMatrix:
 
 
 def compute_svd(A, k: int, *, compute_u: bool = True,
-                mode: Literal["auto", "gram", "lanczos"] = "auto",
+                mode: Literal["auto", "gram", "lanczos",
+                              "randomized"] = "auto",
                 gram_threshold: int = GRAM_THRESHOLD,
-                rcond: float = 1e-9, **lanczos_kw) -> SVDResult:
+                randomized_k_threshold: int = RANDOMIZED_K_THRESHOLD,
+                oversampling: int = _randsvd.OVERSAMPLING,
+                power_iters: int = _randsvd.POWER_ITERS,
+                rcond: float = 1e-9, seed: int = 0,
+                **lanczos_kw) -> SVDResult:
     m, n = A.shape
     k = min(k, min(m, n))
+    if mode not in ("auto", "gram", "lanczos", "randomized"):
+        raise ValueError(f"unknown mode {mode!r}; expected auto | gram | "
+                         "lanczos | randomized")
     if mode == "auto":
-        mode = "gram" if (isinstance(A, RowMatrix) and n <= gram_threshold) \
-            else "lanczos"
+        if isinstance(A, RowMatrix) and n <= gram_threshold:
+            mode = "gram"
+        elif isinstance(A, RowMatrix) and k <= randomized_k_threshold:
+            mode = "randomized"
+        else:
+            mode = "lanczos"
 
     if mode == "gram":
         # §3.1.2 tall-and-skinny: one all-reduce builds AᵀA, the
@@ -57,9 +89,19 @@ def compute_svd(A, k: int, *, compute_u: bool = True,
         w, V = w[::-1][:k], V[:, ::-1][:, :k]
         s = jnp.sqrt(jnp.maximum(w, 0.0))
         info = {"mode": "gram"}
+    elif mode == "randomized":
+        # Few-pass sketch path: U falls out of the range basis for free, so
+        # recover it there instead of paying _recover_u's extra pass.
+        if not isinstance(A, RowMatrix):
+            raise ValueError("mode='randomized' needs a RowMatrix "
+                             "(row-sharded sketch/project primitives)")
+        U, s, V, info = _randsvd.randomized_svd(
+            A, k, oversampling=oversampling, power_iters=power_iters,
+            seed=seed, compute_u=compute_u)
+        return SVDResult(U=U, s=s, V=V, info=info)
     else:
         # §3.1.1 square/sparse: ARPACK-analogue matrix-free Lanczos.
-        s, V, info = _lanczos.svd_via_lanczos(A, k, **lanczos_kw)
+        s, V, info = _lanczos.svd_via_lanczos(A, k, seed=seed, **lanczos_kw)
         info = dict(info, mode="lanczos")
 
     U = _recover_u(A, s, V, rcond) if (compute_u and

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.distmat import types as T
 from repro.core.distmat.rowmatrix import RowMatrix
 
@@ -38,8 +39,8 @@ def tsqr(A: RowMatrix) -> tuple[RowMatrix, Array]:
         r = jnp.linalg.qr(a, mode="r")
         return _nonneg_diag(r)
 
-    Rs = jax.shard_map(local_r, mesh=mesh, in_specs=(spec,),
-                       out_specs=spec)(A.rows)       # (P·n, n) row-sharded
+    Rs = compat.shard_map(local_r, mesh=mesh, in_specs=(spec,),
+                          out_specs=spec)(A.rows)    # (P·n, n) row-sharded
     # Reduce step: replicated second-level QR of the stacked R factors.
     R = _nonneg_diag(jnp.linalg.qr(
         T.put(Rs, T.replicated(mesh)), mode="r"))
@@ -48,7 +49,7 @@ def tsqr(A: RowMatrix) -> tuple[RowMatrix, Array]:
     def solve(a, r):
         return jax.scipy.linalg.solve_triangular(r.T, a.T, lower=True).T
 
-    Q = jax.shard_map(solve, mesh=mesh, in_specs=(spec, P()),
-                      out_specs=spec)(A.rows, R)
+    Q = compat.shard_map(solve, mesh=mesh, in_specs=(spec, P()),
+                         out_specs=spec)(A.rows, R)
     from dataclasses import replace
     return replace(A, rows=Q), R

@@ -11,7 +11,7 @@ per-example weighting).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Protocol
 
 import jax

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots (§4 of the paper):
 GEMM (the BLAS benchmark), tall-skinny Gram (the SVD/DIMSUM hotspot),
-block-sparse matmul (§4.2 sparse kernels, adapted CCS→BSR for the MXU),
-and fused flash attention (the LM-architecture hotspot).
+streaming cross-Gram (the randomized-SVD sketch projection), block-sparse
+matmul (§4.2 sparse kernels, adapted CCS→BSR for the MXU), and fused flash
+attention (the LM-architecture hotspot).
 
 Import `repro.kernels.ops` for the padded/dispatching public wrappers;
 `repro.kernels.ref` holds the pure-jnp oracles."""

@@ -22,6 +22,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro import compat
+
 Array = jax.Array
 
 
@@ -114,7 +116,7 @@ def bsr_matmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
         functools.partial(_bsr_kernel, ell=ell),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nx), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="repro_bsr_matmul",

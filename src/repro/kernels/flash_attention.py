@@ -25,6 +25,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro import compat
+
 Array = jax.Array
 
 MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
@@ -109,7 +111,7 @@ def flash_attention(q: Array, k: Array, v: Array, *, scale: float | None = None,
             pltpu.VMEM((bq, LANES), jnp.float32),
             pltpu.VMEM((bq, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="repro_flash_attention",

@@ -7,13 +7,12 @@ kernels on this CPU-only container.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from . import gemm as _gemm
 from . import tsgram as _tsgram
+from . import randsketch as _randsketch
 from . import bsr as _bsr
 from . import flash_attention as _fa
 from . import selective_scan as _ss
@@ -62,6 +61,24 @@ def tsgram(a: Array, *, bm: int = 512, out_dtype=None,
     out = _tsgram.tsgram(ap, bm=bm_, out_dtype=out_dtype,
                          interpret=not _on_tpu())
     return out[:n, :n]
+
+
+def randsketch(a: Array, q: Array, *, bm: int = 512, bn: int = 512,
+               out_dtype=None, force_pallas: bool = False) -> Array:
+    """B = AᵀQ for conforming tall-skinny A (m×n), Q (m×r) — the
+    randomized-SVD projection.  Output is tiled in bn-wide strips so
+    arbitrary n fits VMEM; n, r padded to tiles internally."""
+    if not (_on_tpu() or force_pallas):
+        return _ref.randsketch_ref(a, q, out_dtype)
+    m, n = a.shape
+    _, r = q.shape
+    bm_ = min(bm, _rup(m, 8))
+    bn_ = min(bn, _rup(n, 128))
+    ap = _pad_to(_pad_to(a, 0, bm_), 1, bn_)
+    qp = _pad_to(_pad_to(q, 0, bm_), 1, 128)
+    out = _randsketch.randsketch(ap, qp, bm=bm_, bn=bn_, out_dtype=out_dtype,
+                                 interpret=not _on_tpu())
+    return out[:n, :r]
 
 
 def bsr_matmul(a: "_bsr.BlockELL", x: Array, *,

@@ -18,6 +18,11 @@ def tsgram_ref(a: Array, out_dtype=None) -> Array:
     return jnp.dot(a.T, a, preferred_element_type=jnp.float32).astype(out_dtype)
 
 
+def randsketch_ref(a: Array, q: Array, out_dtype=None) -> Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.T, q, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
 def bsr_matmul_ref(a, x: Array) -> Array:
     """Oracle via densification of the BlockELL operand."""
     dense = a.to_dense().astype(jnp.float32)

@@ -17,7 +17,7 @@ Sharding policy (defaults; §Perf iterates on these):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.configs.shapes import SHAPES, applicable
 from repro.models import build
 from repro.models.sharding import use_mesh, batch_axes
 from repro.data import pipeline as data_pipeline

@@ -11,17 +11,14 @@ monitoring, and the paper's optimizers as selectable trainers.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
-from repro.configs.shapes import SHAPES
 from repro.data import pipeline as dp
 from repro.launch.mesh import make_host_mesh
 from repro.models import build, smoke_config
-from repro.models.sharding import use_mesh, batch_axes
+from repro.models.sharding import use_mesh
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt_mod
 from repro.train.straggler import StepMonitor, StragglerConfig

@@ -3,7 +3,7 @@ architectures (dense GQA / enc-dec / hybrid / MoE+MLA / SSM / VLM-backbone).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal
 
 

@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
 from . import layers as L
-from .sharding import shard, BATCH, MODEL, batch_axes
+from .sharding import shard, BATCH, batch_axes
 
 Array = jax.Array
 

@@ -9,7 +9,6 @@ data axes; only 'model' appears in param specs.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -20,8 +20,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from .config import ModelConfig
 from .layers import _dense_init, pdtype
 from .sharding import batch_axes, current_mesh
@@ -170,7 +171,7 @@ def apply_moe(p, x: Array, cfg: ModelConfig):
 
             g_spec = P("model", None, dp)
             d_spec = P("model", dp, None)
-            out, aux = jax.shard_map(
+            out, aux = compat.shard_map(
                 body2, mesh=mesh,
                 in_specs=(P(dp, None, None), P(None, None), g_spec, g_spec,
                           d_spec),
@@ -189,7 +190,7 @@ def apply_moe(p, x: Array, cfg: ModelConfig):
                 return out.reshape(x_loc.shape), aux
 
             espec = P("model", None, None)
-            out, aux = jax.shard_map(
+            out, aux = compat.shard_map(
                 body, mesh=mesh,
                 in_specs=(P(dp, None, None), P(None, None), espec, espec,
                           espec),

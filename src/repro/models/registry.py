@@ -2,10 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
-
-import jax
-import jax.numpy as jnp
+from typing import Callable
 
 from .config import ModelConfig
 from . import transformer as TF

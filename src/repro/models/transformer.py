@@ -12,8 +12,7 @@ lets the 671B config lower on this CPU-only container.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ from . import layers as L
 from . import mla as MLA
 from . import moe as MOE
 from . import ssm as SSM
-from .sharding import shard, BATCH, MODEL, batch_axes
+from .sharding import shard
 
 Array = jax.Array
 

@@ -12,7 +12,7 @@ sharded over the data axes along each tensor's largest divisible dimension.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

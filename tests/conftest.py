@@ -4,3 +4,12 @@
 import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property-based modules need hypothesis (a [test] extra, installed in CI).
+# On bare containers without it, skip those modules at collection instead of
+# erroring out the whole run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover
+    collect_ignore = ["test_distmat.py", "test_kernels.py",
+                      "test_linalg.py", "test_moe_properties.py"]

@@ -1,9 +1,7 @@
 """Fault tolerance: checkpoint/restart, elastic re-mesh, straggler
 monitor, deterministic data pipeline, failure-recovery integration."""
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -33,6 +33,17 @@ def test_tsgram_sweep(m, n):
                                atol=1e-3)
 
 
+@given(st.integers(10, 200), st.integers(2, 40), st.integers(1, 24))
+@settings(max_examples=8, deadline=None)
+def test_randsketch_property(m, n, r):
+    rng = np.random.default_rng(m * 1000 + n * 10 + r)
+    a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    got = ops.randsketch(a, q, bm=16, force_pallas=True)
+    np.testing.assert_allclose(got, ref.randsketch_ref(a, q), rtol=1e-4,
+                               atol=1e-3)
+
+
 @given(st.integers(1, 6), st.integers(1, 6), st.floats(0.1, 0.9))
 @settings(max_examples=8, deadline=None)
 def test_bsr_property(bm, bn, density):

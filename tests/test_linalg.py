@@ -1,7 +1,6 @@
 """Spectral solvers vs numpy oracles (paper §3.1)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.distmat import RowMatrix, CoordinateMatrix

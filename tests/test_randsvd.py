@@ -1,0 +1,135 @@
+"""Randomized SVD path (core/linalg/randsvd.py) vs dense oracles, plus
+interpret-mode parity for the Pallas randsketch kernel.
+
+Deliberately hypothesis-free so the whole file runs on bare containers
+where only the pinned jax toolchain exists."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distmat import RowMatrix
+from repro.core.linalg import compute_svd, randomized_svd
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _low_rank_plus_noise(m, n, rank, noise=0.01, decay_from=50.0, decay_to=5.0):
+    U = np.linalg.qr(RNG.normal(size=(m, rank)))[0]
+    V = np.linalg.qr(RNG.normal(size=(n, rank)))[0]
+    s = np.linspace(decay_from, decay_to, rank)
+    return ((U * s) @ V.T + noise * RNG.normal(size=(m, n))).astype(np.float32)
+
+
+def test_randomized_matches_dense_on_low_rank_plus_noise():
+    A = _low_rank_plus_noise(2000, 300, rank=20)
+    res = compute_svd(RowMatrix.create(A), 10, mode="randomized")
+    assert res.info["mode"] == "randomized"
+    s_ref = np.linalg.svd(A, compute_uv=False)[:10]
+    rel = np.abs(np.asarray(res.s) - s_ref) / s_ref
+    assert rel.max() <= 1e-2, rel
+
+    # Truncated reconstruction should match the optimal rank-10 approximant.
+    U = np.asarray(res.U.to_local())
+    recon = U @ np.diag(np.asarray(res.s)) @ np.asarray(res.V).T
+    u, s, vt = np.linalg.svd(A, full_matrices=False)
+    best = u[:, :10] @ np.diag(s[:10]) @ vt[:10]
+    assert (np.linalg.norm(recon - best, 2) /
+            np.linalg.norm(best, 2)) <= 1e-2
+    # Left factor is orthonormal (range basis rotated, not A·VΣ⁻¹ recovery).
+    np.testing.assert_allclose(U.T @ U, np.eye(10), atol=1e-4)
+
+
+def test_randomized_agrees_with_gram_on_tall_skinny():
+    n = 40
+    Q = np.linalg.qr(RNG.normal(size=(500, n)))[0]
+    W = np.linalg.qr(RNG.normal(size=(n, n)))[0]
+    A = ((Q * np.geomspace(30.0, 0.1, n)) @ W).astype(np.float32)
+    rm = RowMatrix.create(A)
+    s_gram = np.asarray(compute_svd(rm, 8, mode="gram").s)
+    s_rand = np.asarray(compute_svd(rm, 8, mode="randomized").s)
+    np.testing.assert_allclose(s_rand, s_gram, rtol=1e-3)
+
+
+def test_auto_dispatch_three_way():
+    A = _low_rank_plus_noise(600, 96, rank=8)
+    rm = RowMatrix.create(A)
+    # n below the gram threshold → gram wins regardless of k
+    assert compute_svd(rm, 4, mode="auto").info["mode"] == "gram"
+    # n above the (shrunk) threshold + low k → randomized
+    res = compute_svd(rm, 4, mode="auto", gram_threshold=64)
+    assert res.info["mode"] == "randomized"
+    # n above the threshold + k above the sketch ceiling → lanczos
+    res = compute_svd(rm, 24, mode="auto", gram_threshold=64,
+                      randomized_k_threshold=16, tol=1e-5, max_restarts=100)
+    assert res.info["mode"] == "lanczos"
+
+
+def test_info_reports_convergence_evidence():
+    A = _low_rank_plus_noise(800, 200, rank=10)
+    res = compute_svd(RowMatrix.create(A), 5, mode="randomized",
+                      oversampling=8, power_iters=3)
+    info = res.info
+    assert info["rank"] == 13
+    assert info["passes_over_A"] == 2 + 2 * 3
+    # rank-10 signal, k=5: the oversampled tail still holds real spectrum
+    assert 0.0 < float(info["tail_ratio"]) < 1.0
+
+
+def test_compute_u_false_skips_u():
+    A = _low_rank_plus_noise(400, 150, rank=6)
+    res = compute_svd(RowMatrix.create(A), 3, mode="randomized",
+                      compute_u=False)
+    assert res.U is None and res.s.shape == (3,) and res.V.shape == (150, 3)
+
+
+def test_rowmatrix_sketch_project_shapes_and_seed():
+    A = RNG.normal(size=(123, 37)).astype(np.float32)
+    rm = RowMatrix.create(A)
+    Y1, Y2 = rm.sketch(9, seed=7), rm.sketch(9, seed=7)
+    np.testing.assert_array_equal(Y1.to_local(), Y2.to_local())
+    assert Y1.shape == (123, 9)
+    assert not np.allclose(Y1.to_local(), rm.sketch(9, seed=8).to_local())
+    # project(Q) == AᵀQ
+    B = rm.project(Y1)
+    want = A.T @ np.asarray(Y1.to_local())
+    np.testing.assert_allclose(B, want, rtol=1e-4, atol=1e-3)
+
+
+def test_randomized_svd_direct_api():
+    A = _low_rank_plus_noise(500, 120, rank=8)
+    U, s, V, info = randomized_svd(RowMatrix.create(A), 4, oversampling=6,
+                                   power_iters=2, seed=3)
+    s_ref = np.linalg.svd(A, compute_uv=False)[:4]
+    np.testing.assert_allclose(np.asarray(s), s_ref, rtol=1e-2)
+    assert U.shape == (500, 4) and V.shape == (120, 4)
+    assert info["seed"] == 3
+
+
+@pytest.mark.parametrize("m,n,r", [(64, 16, 8), (100, 20, 12),
+                                   (256, 130, 24), (33, 7, 3)])
+def test_randsketch_kernel_parity(m, n, r):
+    a = jnp.asarray(RNG.normal(size=(m, n)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(m, r)), jnp.float32)
+    got = ops.randsketch(a, q, bm=16, force_pallas=True)
+    want = ref.randsketch_ref(a, q)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_randsketch_kernel_wide_n_tiling():
+    # n much wider than one VMEM strip: bn=128 forces multiple output tiles
+    # (the n > GRAM_THRESHOLD regime the randomized mode dispatches to).
+    a = jnp.asarray(RNG.normal(size=(64, 1000)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(64, 12)), jnp.float32)
+    got = ops.randsketch(a, q, bm=16, bn=128, force_pallas=True)
+    want = ref.randsketch_ref(a, q)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_randsketch_kernel_bf16():
+    a = jnp.asarray(RNG.normal(size=(96, 24)), jnp.bfloat16)
+    q = jnp.asarray(RNG.normal(size=(96, 8)), jnp.bfloat16)
+    got = ops.randsketch(a, q, bm=16, out_dtype=jnp.float32,
+                         force_pallas=True)
+    want = ref.randsketch_ref(a, q, jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-1)
