@@ -7,6 +7,20 @@ matrix sizes.  The analogues here:
     — whichever dominates), the number the Pallas kernel targets; the
     kernel itself is validated against the oracle in tests (interpret mode
     is not a timing proxy).
+
+Autotuner: the Pallas GEMM no longer uses hand-picked 256×256×512 tiles.
+`ops.gemm(..., tune="auto")` (the default) resolves `bm/bn/bk` per
+(backend, dtype, shape-bucket) via `repro.kernels.autotune` — persistent
+cache first ($REPRO_AUTOTUNE_CACHE or ~/.cache/repro/autotune.json, JSON
+{"entries": {key: {"blocks": ...}}}; shipped v5e defaults in
+kernels/autotune_v5e.json), roofline cost-model ranking otherwise.  On new
+hardware, re-sweep offline with
+
+    PYTHONPATH=src python -m benchmarks.bench_autotune
+
+which times the top model-ranked candidates per shape (median-of-k) and
+writes the winners into the cache; explicit `bm=`/`bn=`/`bk=` kwargs
+always override, and `tune="off"` restores the legacy constants.
 """
 from __future__ import annotations
 

@@ -4,7 +4,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (paper artifacts:
 Table 1 = bench_svd, Figure 1 = bench_optim, Figure 2 = bench_gemm,
-§4.2 = bench_sparse).
+§4.2 = bench_sparse; autotune = the kernel block-size sweep, which also
+emits ``BENCH {json}`` lines and refreshes the persistent config cache).
 """
 from __future__ import annotations
 
@@ -18,15 +19,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-size problems (slow on one core)")
     ap.add_argument("--only", default=None,
-                    help="run a single suite: svd|optim|gemm|sparse")
+                    help="run a single suite: svd|optim|gemm|sparse|autotune")
     args = ap.parse_args()
 
-    from benchmarks import bench_svd, bench_optim, bench_gemm, bench_sparse
+    from benchmarks import (bench_svd, bench_optim, bench_gemm, bench_sparse,
+                            bench_autotune)
     suites = {
         "svd": lambda: bench_svd.run(),
         "optim": lambda: bench_optim.run(full=args.full),
         "gemm": lambda: bench_gemm.run(),
         "sparse": lambda: bench_sparse.run(),
+        "autotune": lambda: bench_autotune.run(),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -14,7 +14,8 @@ from repro.core.tfocs import (LinopMatrix, SmoothQuad, ProxL1, tfocs,
 rng = np.random.default_rng(1)
 m, n = 2000, 256
 A = rng.normal(size=(m, n)).astype(np.float32)
-xt = np.zeros(n, np.float32); xt[:10] = rng.normal(size=10) * 2
+xt = np.zeros(n, np.float32)
+xt[:10] = rng.normal(size=10) * 2
 b = (A @ xt + 0.05 * rng.normal(size=m)).astype(np.float32)
 lam = 1.0
 

@@ -11,11 +11,13 @@ rng = np.random.default_rng(3)
 m, n = 20, 60
 
 # LP with a known optimum (constructed via strict complementarity)
-xstar = np.zeros(n, np.float32); xstar[:m // 2] = rng.random(m // 2) + 0.5
+xstar = np.zeros(n, np.float32)
+xstar[:m // 2] = rng.random(m // 2) + 0.5
 A = rng.normal(size=(m, n)).astype(np.float32)
 b = A @ xstar
 y = rng.normal(size=m).astype(np.float32)
-s = np.zeros(n, np.float32); s[m // 2:] = rng.random(n - m // 2) + 0.1
+s = np.zeros(n, np.float32)
+s[m // 2:] = rng.random(n - m // 2) + 0.1
 c = A.T @ y + s
 
 

@@ -43,7 +43,8 @@ print("TSQR ‖QᵀQ − I‖:",
                             @ jnp.asarray(Q.to_local()) - jnp.eye(64))))
 
 # --- LASSO via the TFOCS port ---------------------------------------------
-xt = np.zeros(64, np.float32); xt[:6] = rng.normal(size=6) * 3
+xt = np.zeros(64, np.float32)
+xt[:6] = rng.normal(size=6) * 3
 b = (A @ xt + 0.1 * rng.normal(size=10_000)).astype(np.float32)
 x, info = solve_lasso(rm, jnp.asarray(b), lam=2.0,
                       opts=TfocsOptions(max_iters=200, restart=True))

@@ -3,6 +3,14 @@ ratios (scaled to this machine), via all three code paths (Gram,
 matrix-free Lanczos, and the randomized range finder).
 
     PYTHONPATH=src python examples/svd_distributed.py
+
+On TPU the per-shard hotspots (Gram reduction, randomized-SVD projection,
+U recovery) run through the Pallas kernels with `tune="auto"` block sizes:
+the shape-aware autotuner (repro.kernels.autotune) picks tiles per
+(backend, dtype, shape-bucket) from its persistent JSON cache
+($REPRO_AUTOTUNE_CACHE or ~/.cache/repro/autotune.json, with shipped v5e
+defaults), falling back to roofline cost-model ranking.  Re-sweep on new
+hardware with `python -m benchmarks.bench_autotune`.
 """
 import time
 

@@ -110,14 +110,17 @@ class BlockMatrix(T.DistMatrix):
             # Same logical k but different padding — re-pad other.
             other = BlockMatrix.create(other.to_local(), self.mesh,
                                        self.row_axes, self.col_axis)
+        from repro.kernels import ops as _ops
         rows, col = self.row_axes, self.col_axis
 
         def body(a, b):
-            # a: (m/R, k/C) at (r, c); b: (k/R, n/C) at (r, c)
+            # a: (m/R, k/C) at (r, c); b: (k/R, n/C) at (r, c).  The local
+            # panel product is the autotuned Pallas GEMM on TPU (jnp
+            # reference on CPU, identical f32-accumulated semantics).
             a_row = jax.lax.all_gather(a, col, axis=1, tiled=True)   # (m/R, k)
             b_col = jax.lax.all_gather(b, rows, axis=0, tiled=True)  # (k, n/C)
-            return jnp.dot(a_row, b_col,
-                           preferred_element_type=jnp.float32).astype(a.dtype)
+            return _ops.gemm(a_row, b_col,
+                             out_dtype=jnp.float32).astype(a.dtype)
 
         out = self._smap(body, in_specs=(self._spec, self._spec),
                          out_specs=self._spec)(self.data, other.data)

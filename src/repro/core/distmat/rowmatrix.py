@@ -82,13 +82,16 @@ class RowMatrix(T.DistMatrix):
         """AᵀA, replicated — the paper's one-all-to-one DIMSUM reduction.
 
         Per-shard partial Gram then a tree all-reduce over the row axes.
-        Padding rows are zero so they do not contribute.
+        The shard reduction is the Pallas tsgram kernel (autotuned block
+        sizes) on TPU; on CPU `ops.tsgram` dispatches to the jnp reference,
+        which stays the ground truth.  Padding rows are zero so they do not
+        contribute.
         """
+        from repro.kernels import ops as _ops
         axes = self.row_axes
 
         def body(a):
-            g = jnp.einsum("ij,ik->jk", a, a,
-                           preferred_element_type=jnp.float32)
+            g = _ops.tsgram(a, out_dtype=jnp.float32)
             return jax.lax.psum(g, axes)
 
         out = self._smap(body, in_specs=(self._spec,), out_specs=P())(self.rows)
@@ -114,9 +117,12 @@ class RowMatrix(T.DistMatrix):
 
     def multiply_local(self, B: Array) -> "RowMatrix":
         """A @ B for a small replicated B — the `U = A (VΣ⁻¹)` pattern:
-        broadcast the small factor, then embarrassingly parallel."""
+        broadcast the small factor, then embarrassingly parallel (autotuned
+        Pallas GEMM per shard on TPU, jnp reference on CPU)."""
+        from repro.kernels import ops as _ops
+
         def body(a, b):
-            return a @ b
+            return _ops.gemm(a, b, out_dtype=a.dtype)
 
         out = self._smap(body, in_specs=(self._spec, P()),
                          out_specs=self._spec)(self.rows, B)
@@ -197,7 +203,7 @@ class RowMatrix(T.DistMatrix):
         compute cos(i,j) = (AᵀA)ij / (‖aᵢ‖‖aⱼ‖) exactly (adaptation noted in
         DESIGN.md).
         """
-        norms = jnp.sqrt(self.column_stats()["norm_l2"] ** 2)
+        norms = self.column_stats()["norm_l2"]
         inv = jnp.where(norms > 0, 1.0 / jnp.maximum(norms, 1e-30), 0.0)
         return self.scale_columns(inv).gram()
 

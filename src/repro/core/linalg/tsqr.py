@@ -45,11 +45,22 @@ def tsqr(A: RowMatrix) -> tuple[RowMatrix, Array]:
     R = _nonneg_diag(jnp.linalg.qr(
         T.put(Rs, T.replicated(mesh)), mode="r"))
 
-    # Q = A R⁻¹ — broadcast R, triangular solve per row shard.
-    def solve(a, r):
-        return jax.scipy.linalg.solve_triangular(r.T, a.T, lower=True).T
+    # Q = A R⁻¹ — form R⁻¹ once (replicated n×n triangular solve), then
+    # broadcast it and recover Q with a per-shard autotuned GEMM — the same
+    # "broadcast the small factor" pattern as U-recovery in the SVD, now
+    # inheriting tuned block sizes from kernels/autotune.py on TPU.
+    # Orthogonality of the recovered Q degrades as cond(R)·eps either way
+    # (explicit-inverse multiply and per-shard back-substitution share that
+    # bound); callers needing better than that for severely ill-conditioned
+    # inputs should re-run tsqr on Q (one extra pass halves the defect).
+    from repro.kernels import ops as _ops
+    r_inv = jax.scipy.linalg.solve_triangular(
+        R, jnp.eye(n, dtype=R.dtype), lower=False)
 
-    Q = compat.shard_map(solve, mesh=mesh, in_specs=(spec, P()),
-                         out_specs=spec)(A.rows, R)
+    def recover_q(a, ri):
+        return _ops.gemm(a, ri, out_dtype=a.dtype)
+
+    Q = compat.shard_map(recover_q, mesh=mesh, in_specs=(spec, P()),
+                         out_specs=spec)(A.rows, r_inv)
     from dataclasses import replace
     return replace(A, rows=Q), R

@@ -46,8 +46,10 @@ class TfocsOptions:
 
 
 class TfocsState(NamedTuple):
-    x: Array;  Ax: Array
-    z: Array;  Az: Array
+    x: Array
+    Ax: Array
+    z: Array
+    Az: Array
     theta: Array
     L: Array
     k: Array
@@ -60,8 +62,12 @@ class TfocsState(NamedTuple):
 class _Attempt(NamedTuple):
     L: Array
     theta: Array
-    x: Array; Ax: Array; z: Array; Az: Array
-    fy: Array; gy: Array         # data-space gradient at y
+    x: Array
+    Ax: Array
+    z: Array
+    Az: Array
+    fy: Array
+    gy: Array                    # data-space gradient at y
     Ay: Array
     ok: Array
     tries: Array

@@ -1,0 +1,476 @@
+"""Shape-aware kernel autotuner: block-size search with a persistent cache.
+
+The Pallas kernels used to answer the paper's §4 question ("how close to
+hand-tuned hardware GEMM can a managed runtime get?") with hand-picked
+`bm/bn/bk` constants that are only right for one shape regime.  This module
+replaces those magic numbers with a three-stage, shape-aware search:
+
+  1. **Candidate generation** — enumerate tile configs that satisfy the TPU
+     layout rules (last dim a multiple of 128 lanes; second-to-last a
+     multiple of the dtype sublane count: 8 for f32, 16 for bf16, 32 for
+     int8/fp8) and whose double-buffered VMEM working set fits the budget
+     (`VMEM_BUDGET`, a headroom fraction of the 16 MB/core VMEM).
+
+  2. **Analytical roofline pre-ranking** — order candidates by a cost model:
+     max(MXU time at the tile's utilization, HBM bytes / bandwidth) computed
+     on the *padded* shape (so padding waste for the actual shape is priced
+     in), plus a per-grid-step overhead that breaks ties toward larger
+     tiles.  On CPU / interpret mode this ranking is the **sole selector**
+     — no timing, fully deterministic, cheap enough to run at trace time.
+
+  3. **On-device timing sweep** — `sweep()` times the top-N ranked
+     candidates (median of k reps) on real hardware; winners are persisted
+     via `record()`.  The sweep never runs implicitly inside an op dispatch
+     (dispatch may happen mid-trace where timing is impossible); it is
+     driven offline by `benchmarks/bench_autotune.py`.
+
+Selected configs are memoized per (kernel, backend, dtype, shape-bucket)
+and backed by a persistent JSON cache: the user cache (``$REPRO_AUTOTUNE_CACHE``
+or ``~/.cache/repro/autotune.json``, written by the sweep CLI) takes
+priority over the pre-swept v5e defaults shipped in ``autotune_v5e.json``.
+A second lookup with the same shape bucket is a dict hit — no re-ranking,
+no re-timing.
+
+Shape buckets round every dimension up to the next power of two, so e.g.
+(1000, 1000, 1000) and (1024, 1024, 1024) GEMMs share one cache entry.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# -- TPU layout / machine constants (v5e) ------------------------------------
+LANE = 128
+_SUBLANE_BY_ITEMSIZE = {8: 8, 4: 8, 2: 16, 1: 32}
+
+VMEM_BYTES = 16 * 2**20
+VMEM_BUDGET = int(VMEM_BYTES * 0.85)       # headroom for semaphores/spills
+
+HBM_BW = 819e9                             # bytes/s per chip
+MXU_FLOPS = {2: 197e12, 4: 98.5e12}        # peak FLOP/s by itemsize
+STEP_OVERHEAD_S = 2e-7                     # per-grid-step issue cost
+
+
+def sublane(dtype) -> int:
+    """Minimum second-to-last-dim multiple for this dtype's tiled layout."""
+    return _SUBLANE_BY_ITEMSIZE[jnp.dtype(dtype).itemsize]
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _peak_flops(dtype) -> float:
+    return MXU_FLOPS.get(_itemsize(dtype), MXU_FLOPS[4])
+
+
+def _util(b: int) -> float:
+    """MXU utilization factor for a tile dim feeding the 128-wide array."""
+    return min(b, LANE) / LANE
+
+
+def _steps(dim: int, mult: int, choices: Sequence[int]) -> list[int]:
+    """Candidate block sizes for one dim: the given choices (multiples of
+    `mult` only), each clamped to the dim rounded up to `mult`."""
+    cap = _rup(max(dim, 1), mult)
+    return sorted({min(c, cap) for c in choices if c % mult == 0})
+
+
+# -- per-kernel candidate generation / VMEM / cost ---------------------------
+#
+# Each kernel declares: the tunable knobs, the ordered logical dims that form
+# the shape bucket, the legacy hand-picked constants (kept as a ranked
+# candidate so the tuner can never regress past them), a generator of
+# layout-legal + VMEM-feasible candidates, the double-buffered VMEM
+# working-set estimate, and the roofline cost model.
+
+@dataclass(frozen=True)
+class KernelSpec:
+    knobs: tuple[str, ...]
+    dims: tuple[str, ...]
+    legacy: Mapping[str, int]
+    gen: Callable
+    vmem: Callable
+    cost: Callable
+
+
+def _gemm_vmem(b, d, dtype):
+    db = _itemsize(dtype)
+    return (2 * (b["bm"] * b["bk"] + b["bk"] * b["bn"]) * db   # A, B streams
+            + b["bm"] * b["bn"] * 4                            # f32 acc
+            + 2 * b["bm"] * b["bn"] * db)                      # out tile
+
+
+def _gemm_gen(d, dtype):
+    sub = sublane(dtype)
+    out = []
+    for bm in _steps(d["m"], sub, (sub, 64, 128, 256, 512)):
+        for bn in _steps(d["n"], LANE, (128, 256, 512)):
+            for bk in _steps(d["k"], LANE, (128, 256, 512, 1024)):
+                b = {"bm": bm, "bn": bn, "bk": bk}
+                if _gemm_vmem(b, d, dtype) <= VMEM_BUDGET:
+                    out.append(b)
+    return out
+
+
+def _gemm_cost(b, d, dtype):
+    db = _itemsize(dtype)
+    mp, kp = _rup(d["m"], b["bm"]), _rup(d["k"], b["bk"])
+    np_ = _rup(d["n"], b["bn"])
+    compute = 2.0 * mp * np_ * kp / (_peak_flops(dtype) * _util(b["bm"]))
+    hbm = (mp * kp * db * (np_ // b["bn"])      # A re-read per output column
+           + kp * np_ * db * (mp // b["bm"])    # B re-read per output row
+           + mp * np_ * db)                     # C written once
+    steps = (mp // b["bm"]) * (np_ // b["bn"]) * (kp // b["bk"])
+    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+
+
+def _tsgram_vmem(b, d, dtype):
+    db = _itemsize(dtype)
+    np_ = _rup(d["n"], LANE)
+    return 2 * b["bm"] * np_ * db + np_ * np_ * 4 + np_ * np_ * db
+
+
+def _tsgram_gen(d, dtype):
+    sub = sublane(dtype)
+    out = []
+    for bm in _steps(d["m"], sub, (sub, 64, 128, 256, 512, 1024)):
+        b = {"bm": bm}
+        if _tsgram_vmem(b, d, dtype) <= VMEM_BUDGET:
+            out.append(b)
+    return out
+
+
+def _tsgram_cost(b, d, dtype):
+    db = _itemsize(dtype)
+    mp, np_ = _rup(d["m"], b["bm"]), _rup(d["n"], LANE)
+    compute = 2.0 * mp * np_ * np_ / (_peak_flops(dtype) * _util(b["bm"]))
+    hbm = mp * np_ * db + np_ * np_ * db        # one pass over A + G out
+    steps = mp // b["bm"]
+    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+
+
+def _randsketch_vmem(b, d, dtype):
+    db = _itemsize(dtype)
+    rp = _rup(d["r"], LANE)
+    return (2 * (b["bm"] * b["bn"] + b["bm"] * rp) * db
+            + b["bn"] * rp * 4 + b["bn"] * rp * db)
+
+
+def _randsketch_gen(d, dtype):
+    sub = sublane(dtype)
+    out = []
+    for bm in _steps(d["m"], sub, (sub, 64, 128, 256, 512, 1024)):
+        for bn in _steps(d["n"], LANE, (128, 256, 512, 1024)):
+            b = {"bm": bm, "bn": bn}
+            if _randsketch_vmem(b, d, dtype) <= VMEM_BUDGET:
+                out.append(b)
+    return out
+
+
+def _randsketch_cost(b, d, dtype):
+    db = _itemsize(dtype)
+    mp, np_ = _rup(d["m"], b["bm"]), _rup(d["n"], b["bn"])
+    rp = _rup(d["r"], LANE)
+    compute = 2.0 * mp * np_ * rp / (_peak_flops(dtype) * _util(b["bm"]))
+    hbm = (mp * np_ * db                        # one pass over A
+           + mp * rp * db * (np_ // b["bn"])    # Q re-streamed per n-strip
+           + np_ * rp * db)
+    steps = (np_ // b["bn"]) * (mp // b["bm"])
+    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+
+
+def _flash_vmem(b, d, dtype):
+    db = _itemsize(dtype)
+    dp = _rup(d["d"], LANE)
+    return (2 * b["bq"] * dp * db + 4 * b["bk"] * dp * db     # Q + K,V streams
+            + b["bq"] * dp * 4 + 2 * b["bq"] * LANE * 4       # acc + (m, l)
+            + 2 * b["bq"] * dp * db)                          # out tile
+
+
+def _flash_gen(d, dtype):
+    sub = sublane(dtype)
+    out = []
+    for bq in _steps(d["sq"], sub, (sub, 64, 128, 256, 512)):
+        for bk in _steps(d["sk"], LANE, (128, 256, 512)):
+            b = {"bq": bq, "bk": bk}
+            if _flash_vmem(b, d, dtype) <= VMEM_BUDGET:
+                out.append(b)
+    return out
+
+
+def _flash_cost(b, d, dtype):
+    db = _itemsize(dtype)
+    sqp, skp = _rup(d["sq"], b["bq"]), _rup(d["sk"], b["bk"])
+    dp = _rup(d["d"], LANE)
+    frac = 0.5 if d.get("causal", 1) else 1.0   # live fraction of KV blocks
+    compute = 4.0 * sqp * skp * dp * frac / (_peak_flops(dtype)
+                                             * _util(b["bq"]))
+    hbm = (2 * sqp * dp * db                              # Q in + O out
+           + 2 * skp * dp * db * (sqp // b["bq"]) * frac)  # K, V per q-row
+    steps = (sqp // b["bq"]) * (skp // b["bk"])
+    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+
+
+def _scan_vmem(b, d, dtype):
+    db = _itemsize(dtype)
+    bd = min(LANE, _rup(d["d"], LANE))
+    np_ = _rup(d["n"], 8)
+    return (6 * b["q"] * bd * db                # x, dt, y double-buffered
+            + 4 * b["q"] * np_ * db             # B, C double-buffered
+            + np_ * bd * (db + 4))              # A block + h scratch
+
+
+def _scan_gen(d, dtype):
+    sub = sublane(dtype)
+    out = []
+    for q in _steps(d["s"], sub, (sub, 64, 128, 256, 512)):
+        b = {"q": q}
+        if _scan_vmem(b, d, dtype) <= VMEM_BUDGET:
+            out.append(b)
+    return out
+
+
+def _scan_cost(b, d, dtype):
+    # VPU/memory-bound: one HBM pass over x/dt/y/B/C per d-block; the model
+    # only has to order q choices (padding waste + grid-step overhead).
+    db = _itemsize(dtype)
+    sp = _rup(d["s"], b["q"])
+    bd = min(LANE, _rup(d["d"], LANE))
+    dblocks = max(1, _rup(d["d"], bd) // bd)
+    hbm = sp * (3 * bd + 2 * d["n"]) * db * dblocks
+    steps = (sp // b["q"]) * dblocks
+    return hbm / HBM_BW + steps * STEP_OVERHEAD_S
+
+
+KERNELS: dict[str, KernelSpec] = {
+    "gemm": KernelSpec(("bm", "bn", "bk"), ("m", "k", "n"),
+                       {"bm": 256, "bn": 256, "bk": 512},
+                       _gemm_gen, _gemm_vmem, _gemm_cost),
+    "tsgram": KernelSpec(("bm",), ("m", "n"), {"bm": 512},
+                         _tsgram_gen, _tsgram_vmem, _tsgram_cost),
+    "randsketch": KernelSpec(("bm", "bn"), ("m", "n", "r"),
+                             {"bm": 512, "bn": 512},
+                             _randsketch_gen, _randsketch_vmem,
+                             _randsketch_cost),
+    "flash_attention": KernelSpec(("bq", "bk"), ("sq", "sk", "d", "causal"),
+                                  {"bq": 256, "bk": 256},
+                                  _flash_gen, _flash_vmem, _flash_cost),
+    "selective_scan": KernelSpec(("q",), ("s", "d", "n"), {"q": 256},
+                                 _scan_gen, _scan_vmem, _scan_cost),
+}
+
+
+# -- candidate enumeration + ranking -----------------------------------------
+
+def candidates(kernel: str, dims: Mapping[str, int], dtype) -> list[dict]:
+    """Layout-legal candidates whose VMEM working set fits the budget."""
+    return KERNELS[kernel].gen(dims, dtype)
+
+
+def estimate_vmem(kernel: str, blocks: Mapping[str, int],
+                  dims: Mapping[str, int], dtype) -> int:
+    """Double-buffered VMEM working-set estimate in bytes."""
+    return KERNELS[kernel].vmem(blocks, dims, dtype)
+
+
+def model_time(kernel: str, blocks: Mapping[str, int],
+               dims: Mapping[str, int], dtype) -> float:
+    """Roofline cost-model time in seconds (lower is better)."""
+    return KERNELS[kernel].cost(blocks, dims, dtype)
+
+
+def rank(kernel: str, dims: Mapping[str, int], dtype
+         ) -> list[tuple[float, dict]]:
+    """(score, blocks) ascending by model time; deterministic tie-break.
+
+    The legacy hand-picked config is always in the pool (even when the VMEM
+    estimate is conservative enough to exclude it), so the selected config
+    can never score worse than the old constants.
+    """
+    pool = candidates(kernel, dims, dtype)
+    legacy = dict(KERNELS[kernel].legacy)
+    if legacy not in pool:
+        pool = pool + [legacy]
+    scored = [(model_time(kernel, b, dims, dtype), b) for b in pool]
+    scored.sort(key=lambda t: (t[0], sorted(t[1].items())))
+    return scored
+
+
+# -- shape buckets + persistent cache ----------------------------------------
+
+def bucket(x: int) -> int:
+    """Next power of two (0 stays 0) — the shape-bucket granularity."""
+    return 0 if x <= 0 else 1 << (x - 1).bit_length()
+
+
+def cache_key(kernel: str, backend: str, dtype,
+              dims: Mapping[str, int]) -> str:
+    spec = KERNELS[kernel]
+    shape = "x".join(str(bucket(int(dims[k]))) for k in spec.dims)
+    return f"{kernel}|{backend}|{jnp.dtype(dtype).name}|{shape}"
+
+
+DEFAULTS_PATH = Path(__file__).with_name("autotune_v5e.json")
+
+
+def user_cache_path() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+class ConfigCache:
+    """One JSON file of {key: {"blocks": ..., "source": ..., "us": ...}}."""
+
+    def __init__(self, path: Path):
+        self.path = Path(path)
+        self.entries: dict[str, dict] = {}
+        self._loaded = False
+
+    def load(self) -> "ConfigCache":
+        if not self._loaded:
+            self._loaded = True
+            try:
+                data = json.loads(self.path.read_text())
+                self.entries = dict(data.get("entries", {}))
+            except (OSError, ValueError):
+                self.entries = {}
+        return self
+
+    def lookup(self, key: str) -> dict | None:
+        return self.load().entries.get(key)
+
+    def put(self, key: str, blocks: Mapping[str, int], *,
+            source: str = "swept", us: float | None = None) -> None:
+        entry = {"blocks": dict(blocks), "source": source}
+        if us is not None:
+            entry["us"] = round(float(us), 3)
+        self.load().entries[key] = entry
+
+    def save(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(
+            {"version": 1, "entries": self.entries}, indent=1, sort_keys=True))
+        tmp.replace(self.path)
+
+
+_memo: dict[str, dict] = {}
+_caches: dict[Path, ConfigCache] = {}
+stats = {"memo_hits": 0, "cache_hits": 0, "ranked": 0, "swept": 0}
+
+
+def _cache_at(path: Path) -> ConfigCache:
+    if path not in _caches:
+        _caches[path] = ConfigCache(path)
+    return _caches[path]
+
+
+def reset() -> None:
+    """Forget memoized configs, cache handles, and counters (tests)."""
+    _memo.clear()
+    _caches.clear()
+    for k in stats:
+        stats[k] = 0
+
+
+def get_config(kernel: str, dims: Mapping[str, int], dtype, *,
+               backend: str | None = None) -> dict:
+    """Resolve the block config for a shape: memo → user cache → shipped
+    v5e defaults → roofline ranking.  Never times anything."""
+    backend = backend or jax.default_backend()
+    key = cache_key(kernel, backend, dtype, dims)
+    if key in _memo:
+        stats["memo_hits"] += 1
+        return dict(_memo[key])
+    entry = (_cache_at(user_cache_path()).lookup(key)
+             or _cache_at(DEFAULTS_PATH).lookup(key))
+    if entry is not None:
+        stats["cache_hits"] += 1
+        blocks = dict(entry["blocks"])
+    else:
+        stats["ranked"] += 1
+        # Rank on the bucket's representative shape (each dim rounded up to
+        # its power-of-two bucket), not the exact dims: the result is cached
+        # under the bucket key, so it must not depend on which bucket member
+        # arrived first.  Dispatch clamps blocks to the exact shape anyway.
+        bdims = {k: bucket(int(v)) for k, v in dims.items()}
+        blocks = rank(kernel, bdims, dtype)[0][1]
+    _memo[key] = dict(blocks)
+    return dict(blocks)
+
+
+def resolve(kernel: str, dims: Mapping[str, int], dtype,
+            overrides: Mapping[str, int | None] | None = None, *,
+            tune: str = "auto", backend: str | None = None) -> dict:
+    """Config the ops wrappers dispatch with: explicit block kwargs always
+    win; missing knobs come from the autotuner (`tune="auto"`) or the
+    legacy constants (`tune="off"`)."""
+    spec = KERNELS[kernel]
+    ov = {k: v for k, v in (overrides or {}).items() if v is not None}
+    if len(ov) == len(spec.knobs):
+        return ov
+    if tune == "auto":
+        base = get_config(kernel, dims, dtype, backend=backend)
+    elif tune == "off":
+        base = dict(spec.legacy)
+    else:
+        raise ValueError(f"tune must be 'auto' or 'off', got {tune!r}")
+    base.update(ov)
+    return base
+
+
+# -- on-device timing sweep ---------------------------------------------------
+
+def sweep(kernel: str, dims: Mapping[str, int], dtype,
+          run_fn: Callable[[Mapping[str, int]], None], *,
+          top_n: int = 3, reps: int = 5,
+          include_legacy: bool = True) -> list[tuple[float, dict]]:
+    """Time the top-N model-ranked candidates (plus the legacy constants)
+    with `run_fn(blocks)` — which must block until the device is done —
+    and return (median_seconds, blocks) ascending.  Offline use only
+    (`benchmarks/bench_autotune.py`); dispatch never calls this."""
+    ranked = rank(kernel, dims, dtype)
+    pool = [blocks for _, blocks in ranked[:top_n]]
+    legacy = dict(KERNELS[kernel].legacy)
+    if include_legacy and legacy not in pool:
+        pool.append(legacy)
+    stats["swept"] += 1
+    timed = []
+    for blocks in pool:
+        run_fn(blocks)                       # warm-up eats compile time
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_fn(blocks)
+            times.append(time.perf_counter() - t0)
+        timed.append((statistics.median(times), blocks))
+    timed.sort(key=lambda t: (t[0], sorted(t[1].items())))
+    return timed
+
+
+def record(kernel: str, dims: Mapping[str, int], dtype,
+           blocks: Mapping[str, int], *, backend: str | None = None,
+           source: str = "swept", us: float | None = None) -> str:
+    """Persist a winner into the user cache (and the in-memory memo)."""
+    backend = backend or jax.default_backend()
+    key = cache_key(kernel, backend, dtype, dims)
+    cache = _cache_at(user_cache_path())
+    cache.put(key, blocks, source=source, us=us)
+    cache.save()
+    _memo[key] = dict(blocks)
+    return key

@@ -70,14 +70,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(ki == nk - 1)
     def _flush():
-        l = l_ref[:, :1]
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        lsum = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(lsum, 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "scale",
                                              "interpret", "q_heads_per_kv"))
 def flash_attention(q: Array, k: Array, v: Array, *, scale: float | None = None,
-                    causal: bool = True, bq: int = 256, bk: int = 256,
+                    causal: bool = True, bq: int, bk: int,
                     q_heads_per_kv: int = 1,
                     interpret: bool = False) -> Array:
     """q: (BHq, S, D) flattened batch·q-heads; k, v: (BHkv, S, D).
@@ -93,7 +93,8 @@ def flash_attention(q: Array, k: Array, v: Array, *, scale: float | None = None,
     nq, nk = sq // bq, sk // bk
     g = q_heads_per_kv
 
-    kv_map = lambda bh, qi, ki: (bh // g, ki, 0)
+    def kv_map(bh, qi, ki):
+        return (bh // g, ki, 0)
 
     return pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk, nk=nk,

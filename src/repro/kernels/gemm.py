@@ -9,8 +9,10 @@ through in (bm × bk)·(bk × bn) MXU-aligned chunks.
 Tiling rules (TPU v5e):
   * last dim multiples of 128 (lane), second-to-last multiples of 8
     (sublane; 16 for bf16) — callers pad via ops.gemm.
-  * default tiles 256×256×512 → VMEM working set
-    256·512·2 + 512·256·2 + 256·256·4 ≈ 0.8 MB ≪ 16 MB VMEM, double-buffered.
+  * bm/bn/bk have no baked-in default: ops.gemm resolves them through the
+    shape-aware autotuner (kernels/autotune.py), which enumerates
+    layout-legal tiles under the double-buffered VMEM budget and ranks
+    them by roofline cost (cached winners on real hardware).
 """
 from __future__ import annotations
 
@@ -41,7 +43,7 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
                                              "out_dtype"))
-def gemm(a: Array, b: Array, *, bm: int = 256, bn: int = 256, bk: int = 512,
+def gemm(a: Array, b: Array, *, bm: int, bn: int, bk: int,
          out_dtype=None, interpret: bool = False) -> Array:
     """C = A @ B with explicit VMEM tiling.  Shapes must be multiples of the
     tile sizes — `ops.gemm` pads arbitrary shapes."""

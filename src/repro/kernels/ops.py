@@ -4,12 +4,21 @@ On TPU these call the Pallas kernels; on CPU they dispatch to the jnp
 reference (identical semantics) unless `force_pallas=True`, which runs the
 kernel body in interpret mode — that is how the test suite validates the
 kernels on this CPU-only container.
+
+Block sizes default to `tune="auto"`: the shape-aware autotuner
+(`kernels/autotune.py`) resolves them per (kernel, backend, dtype,
+shape-bucket) — persistent-cache winners when a sweep has run, roofline
+cost-model ranking otherwise.  Explicit `bm=`/`bn=`/`bk=` kwargs always
+override the tuner; `tune="off"` restores the legacy hand-picked constants.
+Resolution is pure Python over static shapes, so it is trace-safe (the
+distmat shard_map bodies call these wrappers mid-trace).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from . import autotune as _tune
 from . import gemm as _gemm
 from . import tsgram as _tsgram
 from . import randsketch as _randsketch
@@ -34,15 +43,18 @@ def _pad_to(x: Array, axis: int, multiple: int) -> Array:
     return jnp.pad(x, pads)
 
 
-def gemm(a: Array, b: Array, *, bm: int = 256, bn: int = 256, bk: int = 512,
-         out_dtype=None, force_pallas: bool = False) -> Array:
+def gemm(a: Array, b: Array, *, bm: int | None = None, bn: int | None = None,
+         bk: int | None = None, tune: str = "auto", out_dtype=None,
+         force_pallas: bool = False) -> Array:
     """C = A @ B, arbitrary shapes (padded up to tiles internally)."""
     if not (_on_tpu() or force_pallas):
         return _ref.gemm_ref(a, b, out_dtype)
     m, k = a.shape
     _, n = b.shape
-    bm_, bn_, bk_ = (min(bm, _rup(m, 8)), min(bn, _rup(n, 128)),
-                     min(bk, _rup(k, 128)))
+    cfg = _tune.resolve("gemm", {"m": m, "k": k, "n": n}, a.dtype,
+                        {"bm": bm, "bn": bn, "bk": bk}, tune=tune)
+    bm_, bn_, bk_ = (min(cfg["bm"], _rup(m, 8)), min(cfg["bn"], _rup(n, 128)),
+                     min(cfg["bk"], _rup(k, 128)))
     ap = _pad_to(_pad_to(a, 0, bm_), 1, bk_)
     bp = _pad_to(_pad_to(b, 0, bk_), 1, bn_)
     out = _gemm.gemm(ap, bp, bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype,
@@ -50,21 +62,24 @@ def gemm(a: Array, b: Array, *, bm: int = 256, bn: int = 256, bk: int = 512,
     return out[:m, :n]
 
 
-def tsgram(a: Array, *, bm: int = 512, out_dtype=None,
-           force_pallas: bool = False) -> Array:
+def tsgram(a: Array, *, bm: int | None = None, tune: str = "auto",
+           out_dtype=None, force_pallas: bool = False) -> Array:
     """G = AᵀA for tall-skinny A (n padded to lanes internally)."""
     if not (_on_tpu() or force_pallas):
         return _ref.tsgram_ref(a, out_dtype)
     m, n = a.shape
-    bm_ = min(bm, _rup(m, 8))
+    cfg = _tune.resolve("tsgram", {"m": m, "n": n}, a.dtype, {"bm": bm},
+                        tune=tune)
+    bm_ = min(cfg["bm"], _rup(m, 8))
     ap = _pad_to(_pad_to(a, 0, bm_), 1, 128)
     out = _tsgram.tsgram(ap, bm=bm_, out_dtype=out_dtype,
                          interpret=not _on_tpu())
     return out[:n, :n]
 
 
-def randsketch(a: Array, q: Array, *, bm: int = 512, bn: int = 512,
-               out_dtype=None, force_pallas: bool = False) -> Array:
+def randsketch(a: Array, q: Array, *, bm: int | None = None,
+               bn: int | None = None, tune: str = "auto", out_dtype=None,
+               force_pallas: bool = False) -> Array:
     """B = AᵀQ for conforming tall-skinny A (m×n), Q (m×r) — the
     randomized-SVD projection.  Output is tiled in bn-wide strips so
     arbitrary n fits VMEM; n, r padded to tiles internally."""
@@ -72,8 +87,10 @@ def randsketch(a: Array, q: Array, *, bm: int = 512, bn: int = 512,
         return _ref.randsketch_ref(a, q, out_dtype)
     m, n = a.shape
     _, r = q.shape
-    bm_ = min(bm, _rup(m, 8))
-    bn_ = min(bn, _rup(n, 128))
+    cfg = _tune.resolve("randsketch", {"m": m, "n": n, "r": r}, a.dtype,
+                        {"bm": bm, "bn": bn}, tune=tune)
+    bm_ = min(cfg["bm"], _rup(m, 8))
+    bn_ = min(cfg["bn"], _rup(n, 128))
     ap = _pad_to(_pad_to(a, 0, bm_), 1, bn_)
     qp = _pad_to(_pad_to(q, 0, bm_), 1, 128)
     out = _randsketch.randsketch(ap, qp, bm=bm_, bn=bn_, out_dtype=out_dtype,
@@ -93,7 +110,8 @@ def bsr_matmul(a: "_bsr.BlockELL", x: Array, *,
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
-                    scale: float | None = None, bq: int = 256, bk: int = 256,
+                    scale: float | None = None, bq: int | None = None,
+                    bk: int | None = None, tune: str = "auto",
                     force_pallas: bool = False) -> Array:
     """q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq a multiple of Hkv.
     Returns (B, Hq, S, D)."""
@@ -106,8 +124,12 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
             v.reshape(B * hkv, sk, d), scale=scale, causal=causal,
             q_heads_per_kv=group)
         return out.reshape(B, hq, sq, d)
-    bq_ = min(bq, _rup(sq, 8))
-    bk_ = min(bk, _rup(sk, 128))
+    cfg = _tune.resolve(
+        "flash_attention",
+        {"sq": sq, "sk": sk, "d": d, "causal": int(causal)}, q.dtype,
+        {"bq": bq, "bk": bk}, tune=tune)
+    bq_ = min(cfg["bq"], _rup(sq, 8))
+    bk_ = min(cfg["bk"], _rup(sk, 128))
     qp = _pad_to(q.reshape(B * hq, sq, d), 1, bq_)
     kp = _pad_to(k.reshape(B * hkv, sk, d), 1, bk_)
     vp = _pad_to(v.reshape(B * hkv, sk, d), 1, bk_)
@@ -122,13 +144,16 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     return out[:, :sq].reshape(B, hq, sq, d)
 
 
-def selective_scan(x, dt, A, B, C, D, *, q: int = 256,
-                   force_pallas: bool = False):
+def selective_scan(x, dt, A, B, C, D, *, q: int | None = None,
+                   tune: str = "auto", force_pallas: bool = False):
     """Fused Mamba1 scan; pads S to q and d to 128 internally."""
     if not (_on_tpu() or force_pallas):
         return _ref.selective_scan_ref(x, dt, A, B, C, D)
     Bt, S, d = x.shape
-    q_ = min(q, _rup(S, 8))
+    N = A.shape[1]
+    cfg = _tune.resolve("selective_scan", {"s": S, "d": d, "n": N}, x.dtype,
+                        {"q": q}, tune=tune)
+    q_ = min(cfg["q"], _rup(S, 8))
     xp = _pad_to(_pad_to(x, 1, q_), 2, 128)
     dtp = _pad_to(_pad_to(dt, 1, q_), 2, 128)
     Bp = _pad_to(B, 1, q_)

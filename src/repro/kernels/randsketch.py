@@ -49,11 +49,11 @@ def _randsketch_kernel(a_ref, q_ref, o_ref, acc_ref, *, m_steps: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("bm", "bn", "interpret", "out_dtype"))
-def randsketch(a: Array, q: Array, *, bm: int = 512, bn: int = 512,
+def randsketch(a: Array, q: Array, *, bm: int, bn: int,
                out_dtype=None, interpret: bool = False) -> Array:
     """B = AᵀQ streaming over conforming (bm)-row blocks, output tiled in
-    (bn)-column strips.  m % bm == 0, n % bn == 0, r % 128 == 0
-    (ops.randsketch pads)."""
+    (bn)-column strips (both autotuned by ops.randsketch).
+    m % bm == 0, n % bn == 0, r % 128 == 0 (ops.randsketch pads)."""
     m, n = a.shape
     mq, r = q.shape
     assert m == mq, (m, mq)

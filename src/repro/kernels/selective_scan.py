@@ -56,7 +56,7 @@ def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref,
 
 @functools.partial(jax.jit, static_argnames=("q", "bd", "interpret"))
 def selective_scan(x: Array, dt: Array, A: Array, B: Array, C: Array,
-                   D: Array, *, q: int = 256, bd: int = 128,
+                   D: Array, *, q: int, bd: int = 128,
                    interpret: bool = False) -> Array:
     """y[b,t,d] for h_t = exp(dt·A)∘h_{t-1} + dt·B_t·x_t, y_t = C_t·h_t + D·x_t.
 

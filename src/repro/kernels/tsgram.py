@@ -38,10 +38,11 @@ def _tsgram_kernel(a_ref, o_ref, acc_ref, *, m_steps: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret", "out_dtype"))
-def tsgram(a: Array, *, bm: int = 512, out_dtype=None,
+def tsgram(a: Array, *, bm: int, out_dtype=None,
            interpret: bool = False) -> Array:
-    """G = AᵀA streaming over row blocks of size `bm`.
-    m must be a multiple of bm and n a multiple of 128 (ops.tsgram pads)."""
+    """G = AᵀA streaming over row blocks of size `bm` (autotuned by
+    ops.tsgram).  m must be a multiple of bm and n a multiple of 128
+    (ops.tsgram pads)."""
     m, n = a.shape
     assert m % bm == 0, (m, bm)
     out_dtype = out_dtype or a.dtype

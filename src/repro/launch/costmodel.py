@@ -41,9 +41,9 @@ def depth_variants(cfg) -> tuple[list[dict], list[dict], dict]:
     if fam == "moe":
         fk = cfg.moe.first_k_dense
         full = {"dense_prefix": fk, "moe_blocks": cfg.num_layers - fk}
-        mk = lambda d, m: {"num_layers": d + m,
-                           "moe": dataclasses.replace(cfg.moe,
-                                                      first_k_dense=d)}
+        def mk(d, m):
+            return {"num_layers": d + m,
+                    "moe": dataclasses.replace(cfg.moe, first_k_dense=d)}
         return ([mk(1, 1), mk(2, 1), mk(1, 2)],
                 [{"dense_prefix": 1, "moe_blocks": 1},
                  {"dense_prefix": 2, "moe_blocks": 1},

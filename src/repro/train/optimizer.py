@@ -65,7 +65,8 @@ def make_adamw(cfg: OptimizerConfig):
     mdt = jnp.dtype(cfg.moment_dtype)
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        def zeros(p):
+            return jnp.zeros(p.shape, mdt)
         return AdamWState(step=jnp.int32(0),
                           m=jax.tree.map(zeros, params),
                           v=jax.tree.map(zeros, params))
@@ -143,7 +144,8 @@ class AccState(NamedTuple):
 
 def make_acc_rb(cfg: OptimizerConfig):
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return AccState(jnp.int32(0), jax.tree.map(zeros, params),
                         jnp.float32(1.0), jax.tree.map(zeros, params))
 
@@ -167,8 +169,9 @@ def make_acc_rb(cfg: OptimizerConfig):
             return x2.astype(p.dtype), z2, x2 - pf
 
         out = jax.tree.map(upd, params, grads, state.z)
-        pick = lambda i: jax.tree.map(lambda t: t[i], out,
-                                      is_leaf=lambda t: isinstance(t, tuple))
+        def pick(i):
+            return jax.tree.map(lambda t: t[i], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
         return pick(0), AccState(step, pick(1), theta_new, pick(2)), \
             {"grad_norm": gnorm, "lr": lr, "theta": theta_new}
 
@@ -193,8 +196,11 @@ def make_lbfgs_lm(cfg: OptimizerConfig):
     mem = cfg.lbfgs_mem
 
     def init(params):
-        hist = lambda p: jnp.zeros((mem, *p.shape), jnp.float32)
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def hist(p):
+            return jnp.zeros((mem, *p.shape), jnp.float32)
+
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return LbfgsLMState(jnp.int32(0), jax.tree.map(hist, params),
                             jax.tree.map(hist, params),
                             jnp.zeros((mem,), jnp.float32), jnp.int32(0),

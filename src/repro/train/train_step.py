@@ -45,11 +45,11 @@ def build_train_step(model, opt_update, *, microbatches: int = 1,
 
             def micro(carry, mb):
                 acc = carry
-                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                (lo, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, mb)
                 acc = jax.tree.map(
                     lambda a, gg: a + gg.astype(accum_dtype), acc, g)
-                return acc, (l, m)
+                return acc, (lo, met)
 
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, accum_dtype), params)

@@ -15,20 +15,31 @@ RNG = np.random.default_rng(0)
 @pytest.mark.parametrize("m,k,n", [(16, 128, 128), (40, 70, 50),
                                    (128, 256, 128), (8, 130, 129)])
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
-def test_gemm_sweep(m, k, n, dtype):
+@pytest.mark.parametrize("bm,bn,bk", [(16, 128, 128), (32, 256, 256)])
+def test_gemm_sweep(m, k, n, dtype, bm, bn, bk):
     a = jnp.asarray(RNG.normal(size=(m, k)), dtype)
     b = jnp.asarray(RNG.normal(size=(k, n)), dtype)
-    got = ops.gemm(a, b, bm=16, bn=128, bk=128, force_pallas=True,
+    got = ops.gemm(a, b, bm=bm, bn=bn, bk=bk, force_pallas=True,
                    out_dtype=jnp.float32)
     want = ref.gemm_ref(a, b, jnp.float32)
     tol = 1e-4 if dtype == np.float32 else 2e-2
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol * k)
 
 
+def test_gemm_autotuned_default_parity():
+    """tune="auto" (no explicit tiles) matches the oracle too."""
+    a = jnp.asarray(RNG.normal(size=(72, 130)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(130, 66)), jnp.float32)
+    got = ops.gemm(a, b, force_pallas=True, out_dtype=jnp.float32)
+    np.testing.assert_allclose(got, ref.gemm_ref(a, b, jnp.float32),
+                               rtol=1e-4, atol=1e-2)
+
+
 @pytest.mark.parametrize("m,n", [(64, 16), (100, 20), (256, 32), (33, 7)])
-def test_tsgram_sweep(m, n):
+@pytest.mark.parametrize("bm", [16, 64])
+def test_tsgram_sweep(m, n, bm):
     a = jnp.asarray(RNG.normal(size=(m, n)), jnp.float32)
-    got = ops.tsgram(a, bm=16, force_pallas=True)
+    got = ops.tsgram(a, bm=bm, force_pallas=True)
     np.testing.assert_allclose(got, ref.tsgram_ref(a), rtol=1e-4,
                                atol=1e-3)
 
@@ -40,6 +51,16 @@ def test_randsketch_property(m, n, r):
     a = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
     q = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
     got = ops.randsketch(a, q, bm=16, force_pallas=True)
+    np.testing.assert_allclose(got, ref.randsketch_ref(a, q), rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("bm,bn", [(16, 128), (40, 256)])
+def test_randsketch_tile_configs(bm, bn):
+    rng = np.random.default_rng(42)
+    a = jnp.asarray(rng.normal(size=(120, 150)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(120, 11)), jnp.float32)
+    got = ops.randsketch(a, q, bm=bm, bn=bn, force_pallas=True)
     np.testing.assert_allclose(got, ref.randsketch_ref(a, q), rtol=1e-4,
                                atol=1e-3)
 
@@ -63,11 +84,12 @@ def test_bsr_property(bm, bn, density):
     (2, 4, 2, 64, 16),        # GQA 2:1
     (1, 8, 2, 128, 32),       # GQA 4:1
 ])
-def test_flash_attention_sweep(B, hq, hkv, S, D):
+@pytest.mark.parametrize("bq,bk", [(16, 128), (32, 256)])
+def test_flash_attention_sweep(B, hq, hkv, S, D, bq, bk):
     q = jnp.asarray(RNG.normal(size=(B, hq, S, D)), jnp.float32)
     k = jnp.asarray(RNG.normal(size=(B, hkv, S, D)), jnp.float32)
     v = jnp.asarray(RNG.normal(size=(B, hkv, S, D)), jnp.float32)
-    got = ops.flash_attention(q, k, v, causal=True, bq=16, bk=128,
+    got = ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
                               force_pallas=True)
     want = ref.flash_attention_ref(
         q.reshape(B * hq, S, D), k.reshape(B * hkv, S, D),
@@ -108,6 +130,7 @@ def test_cpu_dispatch_no_force():
 
 @pytest.mark.parametrize("Bt,S,d,N,q", [(1, 32, 128, 16, 16),
                                         (2, 64, 96, 16, 16),
+                                        (2, 64, 96, 16, 32),
                                         (1, 50, 70, 8, 16)])
 def test_selective_scan_sweep(Bt, S, d, N, q):
     """Fused Mamba1 scan kernel (the §Perf-A kernel) vs sequential oracle."""

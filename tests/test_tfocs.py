@@ -90,7 +90,7 @@ def test_smoothed_lp_kkt():
         in_shape = (nc,)
         out_shape = (mc,)
         apply = staticmethod(lambda x: jnp.asarray(Ac) @ x)
-        adjoint = staticmethod(lambda l: jnp.asarray(Ac).T @ l)
+        adjoint = staticmethod(lambda u: jnp.asarray(Ac).T @ u)
 
     x, lam, info = solve_smoothed_lp(
         jnp.asarray(c), Op, jnp.asarray(bc), mu=1e-2, continuations=6,
