@@ -68,6 +68,13 @@ SWEEP: dict[str, list[dict[str, int]]] = {
         {"s": 2048, "d": 768, "n": 16},
         {"s": 4096, "d": 1024, "n": 16},
     ],
+    # SparseRowMatrix shard shapes (ROADMAP: "sweep the BSR block size too").
+    # nnz sets the entry density the cost model turns into an expected ELL
+    # width per candidate block size.
+    "bsr": [
+        {"m": 4096, "n": 2048, "nnz": 4096 * 2048 // 20, "nx": 128},
+        {"m": 8192, "n": 4096, "nnz": 8192 * 4096 // 100, "nx": 128},
+    ],
 }
 
 DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
@@ -96,6 +103,23 @@ def _make_runner(kernel: str, dims: dict, dtype):
         v = arr(1, 1, dims["sk"], dims["d"])
         return lambda blk: ops.flash_attention(
             q, k, v, causal=bool(dims["causal"]), **blk).block_until_ready()
+    if kernel == "bsr":
+        # The knob is a *format* parameter: rebuild the BlockELL per block
+        # size (cached across reps) and time the SpMM through the wrapper.
+        from repro.kernels.bsr import BlockELL
+        dense = (rng.random((dims["m"], dims["n"]))
+                 < dims["nnz"] / (dims["m"] * dims["n"])
+                 ) * rng.normal(size=(dims["m"], dims["n"]))
+        dense = np.asarray(jnp.asarray(dense, dtype))   # swept dtype, as arr()
+        x = arr(dims["n"], dims["nx"])
+        cache: dict[int, BlockELL] = {}
+
+        def run_bsr(blk):
+            bs = blk["bs"]
+            if bs not in cache:
+                cache[bs] = BlockELL.from_dense(dense, bs)
+            ops.bsr_matmul(cache[bs], x).block_until_ready()
+        return run_bsr
     if kernel == "selective_scan":
         x, dt = arr(1, dims["s"], dims["d"]), arr(1, dims["s"], dims["d"])
         A = arr(dims["d"], dims["n"])

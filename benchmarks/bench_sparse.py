@@ -1,19 +1,25 @@
-"""§4.2 — sparse single-core kernels.
+"""§4.2 — sparse kernels, local and distributed.
 
-MLlib's CCS SpMV/SpMM vs dense; plus the TPU-native block-sparse (BSR)
-layout, reporting the density break-even against dense GEMM — the number
-that decides when the Pallas BSR kernel pays off on the MXU.
+MLlib's CCS SpMV/SpMM vs dense; the TPU-native block-sparse (BSR) layout;
+and the distributed SparseRowMatrix vs dense RowMatrix sweep that reports
+the *density break-even* — the number the density-aware dispatch in
+launch/costmodel.py acts on.  Each distributed row also emits a ``BENCH``
+json line with the measured speedups and the cost model's own call, so the
+break-even is recorded machine-readably (run.py --only sparse).
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distmat import SparseMatrixCSC
+from repro.core.distmat import RowMatrix, SparseMatrixCSC, SparseRowMatrix
 from repro.kernels.bsr import BlockELL
+from repro.launch import costmodel
 
 
 def _time(f, *args, reps=5):
@@ -59,4 +65,63 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("s42_bsr_matmul_d0.125", us_bsr,
                  f"dense_us={us_dense:.1f};"
                  f"block_density={bell.density():.3f}"))
+    rows.extend(run_distributed())
+    return rows
+
+
+def run_distributed() -> list[tuple[str, float, str]]:
+    """SparseRowMatrix (BSR path forced) vs dense RowMatrix at several
+    block densities: where does block-sparse storage stop paying?
+
+    The matrix arrays are passed *into* the jitted functions — a zero-arg
+    closure would let XLA constant-fold the whole contraction away.
+    """
+    rows = []
+    rng = np.random.default_rng(0)
+    m, n, bs = 4096, 2048, 128
+    breakeven_ok = True
+    for density in (0.01, 0.05, 0.10):
+        mask = rng.random((m // bs, n // bs)) < density
+        dense = (np.kron(mask, np.ones((bs, bs)))
+                 * rng.normal(size=(m, n))).astype(np.float32)
+        srm = SparseRowMatrix.from_dense(dense, bs=bs)
+        rm = RowMatrix.create(dense)
+        v = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+
+        sp_mv = jax.jit(lambda data, cols, vv, _s=srm: dataclasses.replace(
+            _s, data=data, cols=cols).matvec(vv, dispatch="bsr"))
+        dn_mv = jax.jit(lambda r, vv, _r=rm: dataclasses.replace(
+            _r, rows=r).matvec(vv))
+        sp_gram = jax.jit(lambda data, cols, _s=srm: dataclasses.replace(
+            _s, data=data, cols=cols).gram(dispatch="bsr"))
+        dn_gram = jax.jit(lambda r, _r=rm: dataclasses.replace(
+            _r, rows=r).gram())
+
+        us_sp_mv = _time(sp_mv, srm.data, srm.cols, v)
+        us_dn_mv = _time(dn_mv, rm.rows, v)
+        us_sp_g = _time(sp_gram, srm.data, srm.cols, reps=3)
+        us_dn_g = _time(dn_gram, rm.rows, reps=3)
+
+        decision = costmodel.sparse_dispatch(srm.m_pad, srm.n_pad, 1,
+                                             srm.ell, srm.bs)
+        if density <= 0.05:
+            breakeven_ok = breakeven_ok and us_sp_mv < us_dn_mv
+        print("BENCH", json.dumps({
+            "bench": "sparse_distributed", "m": m, "n": n, "bs": bs,
+            "block_density": density, "ell": srm.ell,
+            "matvec_bsr_us": round(us_sp_mv, 1),
+            "matvec_dense_us": round(us_dn_mv, 1),
+            "matvec_speedup": round(us_dn_mv / us_sp_mv, 3),
+            "gram_bsr_us": round(us_sp_g, 1),
+            "gram_dense_us": round(us_dn_g, 1),
+            "gram_speedup": round(us_dn_g / us_sp_g, 3),
+            "model_use_bsr": decision.use_bsr,
+            "model_bsr_s": decision.bsr_s, "model_dense_s": decision.dense_s,
+            "bsr_wins_at_low_density": breakeven_ok,
+        }))
+        rows.append((f"s42_dist_spmv_bd{density}", us_sp_mv,
+                     f"dense_us={us_dn_mv:.1f};ell={srm.ell};"
+                     f"model_use_bsr={decision.use_bsr}"))
+        rows.append((f"s42_dist_gram_bd{density}", us_sp_g,
+                     f"dense_us={us_dn_g:.1f}"))
     return rows

@@ -3,11 +3,12 @@ from .types import (DistMatrix, make_mesh, single_device_mesh, row_axes_for,
 from .rowmatrix import RowMatrix, IndexedRowMatrix
 from .coordinatematrix import CoordinateMatrix
 from .blockmatrix import BlockMatrix
+from .sparserow import SparseRowMatrix
 from .local import SparseVector, SparseMatrixCSC
 
 __all__ = [
     "DistMatrix", "make_mesh", "single_device_mesh", "row_axes_for",
     "replicated", "row_sharding", "block_sharding",
     "RowMatrix", "IndexedRowMatrix", "CoordinateMatrix", "BlockMatrix",
-    "SparseVector", "SparseMatrixCSC",
+    "SparseRowMatrix", "SparseVector", "SparseMatrixCSC",
 ]

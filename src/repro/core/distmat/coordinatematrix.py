@@ -98,6 +98,16 @@ class CoordinateMatrix(T.DistMatrix):
         return jnp.sqrt(self._smap(body, in_specs=(spec,),
                                    out_specs=P())(self.values))
 
+    def transpose(self) -> "CoordinateMatrix":
+        """Aᵀ by swapping the index arrays — entry sharding makes the
+        transpose free (no shuffle, no copy); the SVD transpose dispatch
+        for wide-and-short inputs rides on this."""
+        return CoordinateMatrix(row_idx=self.col_idx, col_idx=self.row_idx,
+                                values=self.values,
+                                dims=(self.dims[1], self.dims[0]),
+                                nnz=self.nnz, mesh=self.mesh,
+                                row_axes=self.row_axes)
+
     # -- conversions (paper: toIndexedRowMatrix; global shuffle warning) ----
     def to_indexed_row_matrix(self):
         """Densify rows (test/driver scale only — the paper warns that format
@@ -106,13 +116,24 @@ class CoordinateMatrix(T.DistMatrix):
         ri = np.asarray(jax.device_get(self.row_idx))[: self.nnz]
         ci = np.asarray(jax.device_get(self.col_idx))[: self.nnz]
         va = np.asarray(jax.device_get(self.values))[: self.nnz]
-        uniq = np.unique(ri)
+        uniq, inv = np.unique(ri, return_inverse=True)
         dense = np.zeros((len(uniq), self.dims[1]), va.dtype)
-        remap = {int(r): i for i, r in enumerate(uniq)}
-        for r, c, v in zip(ri, ci, va):
-            dense[remap[int(r)], int(c)] += v
+        np.add.at(dense, (inv, ci), va)
         return IndexedRowMatrix.create(jnp.asarray(uniq), jnp.asarray(dense),
                                        self.mesh, self.row_axes)
+
+    def to_sparse_row_matrix(self, bs: int | str = "auto"):
+        """Block-compress into the row-sharded BSR type: entries are binned
+        into (block-row, block-col) blocks in one vectorized pass and each
+        contiguous block-row strip lands whole on its shard — no all-to-all
+        (the paper's shuffle warning does not apply)."""
+        from .sparserow import SparseRowMatrix
+        ri = np.asarray(jax.device_get(self.row_idx))[: self.nnz]
+        ci = np.asarray(jax.device_get(self.col_idx))[: self.nnz]
+        va = np.asarray(jax.device_get(self.values))[: self.nnz]
+        return SparseRowMatrix.from_entries(ri, ci, va, self.dims, bs=bs,
+                                            mesh=self.mesh,
+                                            row_axes=self.row_axes)
 
     def to_block_matrix(self, block_rows: int, block_cols: int):
         from .blockmatrix import BlockMatrix

@@ -195,17 +195,55 @@ class RowMatrix(T.DistMatrix):
         return {"mean": mean, "variance": var, "num_nonzeros": nnz,
                 "min": mn, "max": mx, "norm_l2": jnp.sqrt(sq)}
 
-    def column_similarities(self) -> Array:
+    def column_similarities(self, threshold: float = 0.0, *,
+                            gamma: float | None = None,
+                            seed: int = 0) -> Array:
         """DIMSUM cosine similarity of columns (paper refs [10, 11]).
 
-        The sampling in DIMSUM exists to bound shuffle sizes on commodity
-        networks; on ICI the exact scaled Gram is bandwidth-optimal, so we
-        compute cos(i,j) = (AᵀA)ij / (‖aᵢ‖‖aⱼ‖) exactly (adaptation noted in
-        DESIGN.md).
+        threshold=0 (the default) computes cos(i,j) = (AᵀA)ij/(‖cᵢ‖‖cⱼ‖)
+        exactly via the scaled Gram — on ICI the one-all-reduce reduction is
+        bandwidth-optimal.  threshold>0 runs *sampled* DIMSUM: entries of
+        column i survive with probability pᵢ = min(1, √γ/‖cᵢ‖), so a pair
+        (i, j) is sampled with the paper's oversampling probability
+        min(1, γ/‖cᵢ‖‖cⱼ‖); kept entries are rescaled by 1/pᵢ, making the
+        estimator unbiased off the diagonal (the diagonal is written exactly
+        — its value is known).  γ defaults to 10·log(n)/threshold, which
+        preserves all similarities ≥ threshold w.h.p.  Sampling happens
+        per shard from a fold_in'd key, so no randomness crosses the
+        interconnect.
         """
+        from repro.kernels import ops as _ops
         norms = self.column_stats()["norm_l2"]
         inv = jnp.where(norms > 0, 1.0 / jnp.maximum(norms, 1e-30), 0.0)
-        return self.scale_columns(inv).gram()
+        if threshold <= 0.0:
+            return self.scale_columns(inv).gram()
+        from .sparserow import dimsum_gamma
+        n = self.shape[1]
+        g = gamma if gamma is not None else dimsum_gamma(n, threshold)
+        p = jnp.minimum(1.0, float(np.sqrt(g)) * inv)
+        scale = inv * jnp.where(p > 0, 1.0 / p, 0.0)
+        axes = self.row_axes
+
+        def body(a, p, scale):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                     _shard_index(axes))
+            keep = jax.random.uniform(key, a.shape) < p[None, :]
+            b = jnp.where(keep, a, 0.0) * scale[None, :]
+            return jax.lax.psum(_ops.tsgram(b, out_dtype=jnp.float32), axes)
+
+        sim = self._smap(body, in_specs=(self._spec, P(), P()),
+                         out_specs=P())(self.rows, p, scale)
+        sim = sim.astype(self.rows.dtype)
+        diag = (norms > 0).astype(sim.dtype)
+        return sim.at[jnp.arange(n), jnp.arange(n)].set(diag)
+
+    def to_sparse_row_matrix(self, bs: int | str = "auto"):
+        """Block-compress into the BSR-backed sparse type (driver-scale,
+        like the other format conversions)."""
+        from .sparserow import SparseRowMatrix
+        return SparseRowMatrix.from_dense(self.to_local(), bs=bs,
+                                          mesh=self.mesh,
+                                          row_axes=self.row_axes)
 
     def frobenius_norm(self) -> Array:
         def body(a):

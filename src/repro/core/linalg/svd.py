@@ -15,8 +15,19 @@ Dispatch mirrors MLlib's RowMatrix.computeSVD: the *user does not choose* —
     thick-restart Lanczos (§3.1.1); the right tool for very sparse
     operators and for k too large for a sketch to be cheap.
 
-Transpose dispatch for wide-and-short inputs (the paper handles those via
-Aᵀ) is not implemented yet — callers pass m ≥ n layouts (ROADMAP open item).
+Wide-and-short inputs (m < n) route through the transpose, exactly as the
+paper describes: SVD(Aᵀ) = U'ΣV'ᵀ gives A = V'ΣU'ᵀ, so the factors swap.
+CoordinateMatrix transposes for free (index swap); RowMatrix and
+SparseRowMatrix transpose at driver scale (the paper's format-conversion
+shuffle warning applies).  The transposed problem then picks among the same
+three modes on its own (n', k) — in particular Lanczos now iterates on the
+small AAᵀ instead of the large AᵀA.
+
+SparseRowMatrix inputs drive Lanczos through the block-sparse
+matvec/rmatvec (auto mode; the Gram path is available explicitly when n is
+small), and U is recovered by the same broadcast-V multiply — the product
+of a sparse matrix with the dense small factor is a dense RowMatrix.
+
 All modes report their convergence evidence in ``SVDResult.info`` (gram:
 exact; randomized: ``tail_ratio``; lanczos: restarts/residuals).
 """
@@ -28,7 +39,9 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.distmat.coordinatematrix import CoordinateMatrix
 from repro.core.distmat.rowmatrix import RowMatrix
+from repro.core.distmat.sparserow import SparseRowMatrix
 from . import lanczos as _lanczos
 from . import randsvd as _randsvd
 
@@ -52,11 +65,46 @@ class SVDResult:
     info: dict | None = None
 
 
-def _recover_u(A: RowMatrix, s: Array, V: Array, rcond: float) -> RowMatrix:
+def _recover_u(A, s: Array, V: Array, rcond: float) -> RowMatrix:
     """U = A (V Σ⁻¹): broadcast the small factor (paper: "embarrassingly
-    parallel"), one local GEMM per row shard, no collectives at all."""
+    parallel"), one local GEMM (or BSR SpMM) per row shard, no collectives
+    at all.  Works for any row-sharded type with multiply_local."""
     inv = jnp.where(s > rcond * jnp.max(s), 1.0 / jnp.maximum(s, 1e-30), 0.0)
     return A.multiply_local(V * inv[None, :])
+
+
+def _transpose(A):
+    """Type-specific Aᵀ for the wide-and-short dispatch; None when the type
+    has no transpose (those inputs keep the direct Lanczos-on-AᵀA path)."""
+    if isinstance(A, (CoordinateMatrix, SparseRowMatrix)):
+        return A.transpose()
+    if isinstance(A, RowMatrix):
+        return RowMatrix.create(jnp.asarray(A.to_local()).T, A.mesh,
+                                A.row_axes)
+    return None
+
+
+def _swap_transposed(A, At, res: "SVDResult", compute_u: bool,
+                     rcond: float) -> "SVDResult":
+    """Map SVD(Aᵀ) = U'ΣV'ᵀ back to A = V'ΣU'ᵀ: V of A is the distributed
+    U' (replicated on the way out — it is the paper's driver-side factor),
+    U of A is the small V', re-wrapped row-sharded."""
+    s = res.s
+    if res.U is not None:
+        V = jnp.asarray(res.U.to_local())
+    else:
+        # Generic U' = AᵀV'Σ⁻¹ via k driver-looped matvecs (CoordinateMatrix
+        # returns replicated vectors, so this is vector-scale work).
+        inv = jnp.where(s > rcond * jnp.max(s),
+                        1.0 / jnp.maximum(s, 1e-30), 0.0)
+        V = jnp.stack([At.matvec(res.V[:, i]) * inv[i]
+                       for i in range(res.V.shape[1])], axis=1)
+    U = None
+    if compute_u:
+        U = RowMatrix.create(res.V, getattr(A, "mesh", None),
+                             getattr(A, "row_axes", None))
+    return SVDResult(U=U, s=s, V=V,
+                     info=dict(res.info or {}, transposed=True))
 
 
 def compute_svd(A, k: int, *, compute_u: bool = True,
@@ -73,8 +121,24 @@ def compute_svd(A, k: int, *, compute_u: bool = True,
     if mode not in ("auto", "gram", "lanczos", "randomized"):
         raise ValueError(f"unknown mode {mode!r}; expected auto | gram | "
                          "lanczos | randomized")
+    if m < n and (At := _transpose(A)) is not None:
+        # Paper: wide-and-short inputs go through the transpose, which is
+        # tall-and-skinny and picks among the same three modes on (n', k);
+        # SVD(Aᵀ) = U'ΣV'ᵀ ⇒ A = V'ΣU'ᵀ, so the factors swap on the way out.
+        # Types without a transpose (BlockMatrix, IndexedRowMatrix) keep the
+        # direct matrix-free path below.
+        res = compute_svd(At, k, compute_u=True, mode=mode,
+                          gram_threshold=gram_threshold,
+                          randomized_k_threshold=randomized_k_threshold,
+                          oversampling=oversampling, power_iters=power_iters,
+                          rcond=rcond, seed=seed, **lanczos_kw)
+        return _swap_transposed(A, At, res, compute_u, rcond)
     if mode == "auto":
-        if isinstance(A, RowMatrix) and n <= gram_threshold:
+        if isinstance(A, SparseRowMatrix):
+            # §3.1.1: sparse operators take the matrix-free iteration — the
+            # matvec cost is ∝ nnz, and no dense Gram is ever formed.
+            mode = "lanczos"
+        elif isinstance(A, RowMatrix) and n <= gram_threshold:
             mode = "gram"
         elif isinstance(A, RowMatrix) and k <= randomized_k_threshold:
             mode = "randomized"
@@ -104,8 +168,8 @@ def compute_svd(A, k: int, *, compute_u: bool = True,
         s, V, info = _lanczos.svd_via_lanczos(A, k, seed=seed, **lanczos_kw)
         info = dict(info, mode="lanczos")
 
-    U = _recover_u(A, s, V, rcond) if (compute_u and
-                                       isinstance(A, RowMatrix)) else None
+    U = _recover_u(A, s, V, rcond) if (
+        compute_u and isinstance(A, (RowMatrix, SparseRowMatrix))) else None
     return SVDResult(U=U, s=s, V=V, info=info)
 
 

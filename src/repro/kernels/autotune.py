@@ -37,6 +37,7 @@ Shape buckets round every dimension up to the next power of two, so e.g.
 from __future__ import annotations
 
 import json
+import math
 import os
 import statistics
 import time
@@ -255,6 +256,58 @@ def _scan_cost(b, d, dtype):
     return hbm / HBM_BW + steps * STEP_OVERHEAD_S
 
 
+def _bsr_ell(bs: int, d) -> int:
+    """Expected stored blocks per block-row.  When the caller knows the
+    actual ELL width (an already-built BlockELL) it passes `ell` in the dims
+    and we use it verbatim; otherwise estimate it from the entry count under
+    a uniform-scatter model: P(block nonzero) = 1 - (1 - nnz/mn)^(bs²)."""
+    if d.get("ell"):
+        return int(d["ell"])
+    m, n = max(int(d["m"]), 1), max(int(d["n"]), 1)
+    nbc = max(n // bs, 1)
+    density = min(1.0, float(d.get("nnz", m * n)) / (m * n))
+    p_block = 1.0 - (1.0 - density) ** (bs * bs)
+    return max(1, int(math.ceil(nbc * p_block)))
+
+
+def _bsr_vmem(b, d, dtype):
+    db = _itemsize(dtype)
+    bs = b["bs"]
+    nxp = _rup(max(d.get("nx", 1), 1), LANE)
+    return (2 * bs * bs * db + 2 * bs * nxp * db     # A block + X block streams
+            + bs * nxp * 4                           # f32 acc scratch
+            + 2 * bs * nxp * db)                     # out tile
+
+
+def _bsr_gen(d, dtype):
+    sub = sublane(dtype)
+    out = []
+    for bs in _steps(min(d["m"], d["n"]), sub, (8, 16, 32, 64, 128)):
+        b = {"bs": bs}
+        if _bsr_vmem(b, d, dtype) <= VMEM_BUDGET:
+            out.append(b)
+    return out
+
+
+def _bsr_cost(b, d, dtype):
+    """BSR SpMM roofline: MXU time on *layout-padded* blocks (a bs < 128
+    block still occupies full 128-lane tiles, so small blocks pay up to a
+    16× flop inflation) vs HBM traffic ∝ stored blocks, plus the per-block
+    grid-step overhead that punishes very small blocks at high density."""
+    db = _itemsize(dtype)
+    bs = b["bs"]
+    nxp = _rup(max(d.get("nx", 1), 1), LANE)
+    mp = _rup(max(d["m"], 1), bs)
+    nbr = mp // bs
+    ell = _bsr_ell(bs, d)
+    bsl, bll = _rup(bs, sublane(dtype)), _rup(bs, LANE)
+    compute = 2.0 * nbr * ell * bsl * bll * nxp / _peak_flops(dtype)
+    hbm = (nbr * ell * (bs * bs + bs * nxp) * db    # A blocks + gathered X
+           + mp * nxp * db)                         # out written once
+    steps = nbr * ell
+    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+
+
 KERNELS: dict[str, KernelSpec] = {
     "gemm": KernelSpec(("bm", "bn", "bk"), ("m", "k", "n"),
                        {"bm": 256, "bn": 256, "bk": 512},
@@ -270,6 +323,8 @@ KERNELS: dict[str, KernelSpec] = {
                                   _flash_gen, _flash_vmem, _flash_cost),
     "selective_scan": KernelSpec(("q",), ("s", "d", "n"), {"q": 256},
                                  _scan_gen, _scan_vmem, _scan_cost),
+    "bsr": KernelSpec(("bs",), ("m", "n", "nnz", "nx"), {"bs": 8},
+                      _bsr_gen, _bsr_vmem, _bsr_cost),
 }
 
 

@@ -10,6 +10,21 @@ which removes all control flow from the kernel).
 The column indices live in SMEM via scalar prefetch, and the index_map
 *gathers the needed X block directly* — the kernel body is one dense MXU
 matmul per block, i.e. sparsity is handled entirely by the grid machinery.
+
+Three kernels share the layout:
+
+  * ``bsr_matmul``  — y = A @ X   (SpMM, gathers X blocks by column index);
+  * ``bsr_matvec``  — y = A @ x   (SpMV: x stored block-partitioned, the
+    block product is a (1 × bs)·(bs × bs) row-vector matmul on the MXU);
+  * ``bsr_rmatmul`` — y = Aᵀ @ X  (transpose-multiply: the kernel emits one
+    per-block partial product Aᵢⱼᵀ Xᵢ — all of the MXU work — and the
+    block-column scatter-add is a segment_sum outside the kernel, because
+    accumulating into an output window revisited at non-adjacent grid steps
+    is not something the Pallas pipeline supports).
+
+The ``*_jnp`` variants are structure-exploiting gather/einsum forms of the
+same contractions (flops ∝ stored blocks, not m·n) — the off-TPU dispatch
+target in kernels/ops.py.  The densifying oracles stay in kernels/ref.py.
 """
 from __future__ import annotations
 
@@ -51,17 +66,17 @@ class BlockELL:
         m, n = a.shape
         assert m % bs == 0 and n % bs == 0, (a.shape, bs)
         nbr, nbc = m // bs, n // bs
-        blocks = a.reshape(nbr, bs, nbc, bs).transpose(0, 2, 1, 3)
+        blocks = np.asarray(a).reshape(nbr, bs, nbc, bs).transpose(0, 2, 1, 3)
         nz = np.abs(blocks).sum(axis=(2, 3)) > 0          # (nbr, nbc)
         ell = max(int(nz.sum(1).max()), 1)
-        data = np.zeros((nbr, ell, bs, bs), a.dtype)
-        cols = np.zeros((nbr, ell), np.int32)
-        for i in range(nbr):
-            js = np.nonzero(nz[i])[0]
-            for slot, j in enumerate(js):
-                data[i, slot] = blocks[i, j]
-                cols[i, slot] = j
-        return BlockELL(jnp.asarray(data), jnp.asarray(cols), (m, n))
+        # Stable argsort on ~nz packs each block-row's nonzero columns into
+        # the leading slots in ascending column order (no Python loop).
+        order = np.argsort(~nz, axis=1, kind="stable")[:, :ell]
+        valid = np.take_along_axis(nz, order, axis=1)     # (nbr, ell)
+        cols = np.where(valid, order, 0).astype(np.int32)
+        data = blocks[np.arange(nbr)[:, None], order] * valid[..., None, None]
+        return BlockELL(jnp.asarray(data.astype(a.dtype)), jnp.asarray(cols),
+                        (m, n))
 
     def to_dense(self) -> Array:
         m, n = self.shape
@@ -121,3 +136,130 @@ def bsr_matmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
         interpret=interpret,
         name="repro_bsr_matmul",
     )(cols, flat, x)
+
+
+def _bsr_spmv_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, ell: int):
+    del cols_ref   # consumed by the index_map gathers
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # (1 × bs) · (bs × bs): the row-vector form of A_block @ x_block, so the
+    # contraction still lands on the MXU.
+    acc_ref[...] += jnp.dot(x_ref[...], a_ref[0].T,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == ell - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_matvec(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
+    """y = A @ x for block-ELL A (m × n) and a dense vector x (n,)."""
+    m, n = a.shape
+    assert x.shape == (n,), (a.shape, x.shape)
+    bs, ell = a.bs, a.ell
+    nbr = m // bs
+    flat = a.data.reshape(nbr * ell, bs, bs)
+    cols = a.cols.reshape(-1)
+    xb = x.reshape(n // bs, bs)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nbr, ell),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
+            pl.BlockSpec((1, bs), lambda i, j, cols: (cols[i * ell + j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda i, j, cols: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1, bs), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_bsr_spmv_kernel, ell=ell),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nbr, bs), x.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="repro_bsr_matvec",
+    )(cols, flat, xb)
+    return out.reshape(m)
+
+
+def _bsr_rmm_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[0].T, x_ref[...],
+                         preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bsr_rmatmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
+    """y = Aᵀ @ X for block-ELL A (m × n) and dense X (m × nx).
+
+    The transpose scatters: block (i, slot) contributes Aᵢⱼᵀ Xᵢ to output
+    block-row j = cols[i, slot], and several grid steps can hit the same j.
+    The kernel therefore emits the (nbr·ell, bs, nx) partial products (the
+    MXU-bound part) and the scatter-add over block columns happens as one
+    XLA segment_sum — padding slots carry zero data, so their contribution
+    to block-row 0 vanishes.
+    """
+    m, n = a.shape
+    assert x.shape[0] == m, (a.shape, x.shape)
+    nx = x.shape[1]
+    bs, ell = a.bs, a.ell
+    nbr, nbc = m // bs, n // bs
+    flat = a.data.reshape(nbr * ell, bs, bs)
+    cols = a.cols.reshape(-1)
+
+    partial = pl.pallas_call(
+        _bsr_rmm_kernel,
+        grid=(nbr, ell),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i, j: (i * ell + j, 0, 0)),
+            pl.BlockSpec((bs, nx), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, nx), lambda i, j: (i * ell + j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbr * ell, bs, nx), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="repro_bsr_rmatmul",
+    )(flat, x)
+    out = jax.ops.segment_sum(partial, cols, num_segments=nbc)
+    return out.reshape(n, nx).astype(x.dtype)
+
+
+# -- structure-exploiting jnp forms (off-TPU dispatch targets) ----------------
+
+def bsr_matmul_jnp(a: BlockELL, x: Array) -> Array:
+    """y = A @ X via gather + block einsum — flops ∝ stored blocks."""
+    bs = a.bs
+    xb = x.reshape(a.shape[1] // bs, bs, -1)              # (nbc, bs, nx)
+    gathered = xb[a.cols]                                 # (nbr, ell, bs, nx)
+    y = jnp.einsum("reij,rejn->rin", a.data, gathered,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(a.shape[0], -1).astype(x.dtype)
+
+
+def bsr_matvec_jnp(a: BlockELL, x: Array) -> Array:
+    """y = A @ x via gather + block einsum."""
+    bs = a.bs
+    xb = x.reshape(a.shape[1] // bs, bs)
+    gathered = xb[a.cols]                                 # (nbr, ell, bs)
+    y = jnp.einsum("reij,rej->ri", a.data, gathered,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(a.shape[0]).astype(x.dtype)
+
+
+def bsr_rmatmul_jnp(a: BlockELL, x: Array) -> Array:
+    """y = Aᵀ @ X: per-block partials + scatter-add over block columns."""
+    bs = a.bs
+    nbr = a.data.shape[0]
+    nbc = a.shape[1] // bs
+    xr = x.reshape(nbr, bs, -1)                           # (nbr, bs, nx)
+    partial = jnp.einsum("reij,rin->rejn", a.data, xr,
+                         preferred_element_type=jnp.float32)
+    out = jnp.zeros((nbc, bs, partial.shape[-1]), jnp.float32)
+    out = out.at[a.cols.reshape(-1)].add(
+        partial.reshape(-1, bs, partial.shape[-1]))
+    return out.reshape(a.shape[1], -1).astype(x.dtype)

@@ -100,13 +100,48 @@ def randsketch(a: Array, q: Array, *, bm: int | None = None,
 
 def bsr_matmul(a: "_bsr.BlockELL", x: Array, *,
                force_pallas: bool = False) -> Array:
-    """y = A @ X for block-sparse A."""
+    """y = A @ X for block-sparse A.  Off-TPU dispatch goes to the
+    structure-exploiting gather/einsum form (flops ∝ stored blocks), not the
+    densifying oracle — the oracle stays in kernels/ref.py for tests."""
     if not (_on_tpu() or force_pallas):
-        return _ref.bsr_matmul_ref(a, x)
+        return _bsr.bsr_matmul_jnp(a, x)
     nx = x.shape[1]
     xp = _pad_to(x, 1, 128)
     out = _bsr.bsr_matmul(a, xp, interpret=not _on_tpu())
     return out[:, :nx]
+
+
+def bsr_matvec(a: "_bsr.BlockELL", x: Array, *,
+               force_pallas: bool = False) -> Array:
+    """y = A @ x for block-sparse A and a vector x (n,)."""
+    if not (_on_tpu() or force_pallas):
+        return _bsr.bsr_matvec_jnp(a, x)
+    return _bsr.bsr_matvec(a, x, interpret=not _on_tpu())
+
+
+def bsr_rmatmul(a: "_bsr.BlockELL", x: Array, *,
+                force_pallas: bool = False) -> Array:
+    """y = Aᵀ @ X for block-sparse A and dense X (m × nx)."""
+    if not (_on_tpu() or force_pallas):
+        return _bsr.bsr_rmatmul_jnp(a, x)
+    nx = x.shape[1]
+    xp = _pad_to(x, 1, 128)
+    out = _bsr.bsr_rmatmul(a, xp, interpret=not _on_tpu())
+    return out[:, :nx]
+
+
+def bsr_block_size(m: int, n: int, nnz: int, *, nx: int = 128,
+                   dtype=jnp.float32, tune: str = "auto") -> int:
+    """Autotuned BSR block size for an (m × n) matrix with `nnz` nonzeros.
+
+    Resolved through the same persistent-cache/roofline machinery as the
+    dense kernels: the cost model prices lane/sublane padding of small
+    blocks against the extra zero-fill large blocks suffer at low density.
+    Pure Python over static shapes — safe to call at trace/format time.
+    """
+    cfg = _tune.resolve("bsr", {"m": m, "n": n, "nnz": nnz, "nx": nx},
+                        dtype, {"bs": None}, tune=tune)
+    return int(cfg["bs"])
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,

@@ -30,6 +30,20 @@ def bsr_matmul_ref(a, x: Array) -> Array:
                    preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def bsr_matvec_ref(a, x: Array) -> Array:
+    """SpMV oracle via densification of the BlockELL operand."""
+    dense = a.to_dense().astype(jnp.float32)
+    return jnp.dot(dense, x.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bsr_rmatmul_ref(a, x: Array) -> Array:
+    """Transpose-multiply (AᵀX) oracle via densification."""
+    dense = a.to_dense().astype(jnp.float32)
+    return jnp.dot(dense.T, x.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *,
                         scale: float | None = None, causal: bool = True,
                         q_heads_per_kv: int = 1) -> Array:

@@ -20,6 +20,7 @@ them for scan in the first place.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -125,3 +126,45 @@ def measure(arch: str, shape: str, mesh, make_plan_fn, plan_kw: dict,
                             [float(c[cat]["count"]) for c in coll], full),
         }
     return out
+
+
+# -- density-aware sparse dispatch (distmat SparseRowMatrix) -----------------
+#
+# A BlockELL shard only pays off while its stored-block fraction is low: the
+# BSR kernel spends MXU time on nbr·ell layout-padded blocks, a dense GEMM on
+# the full m·n — but the dense path streams with perfect MXU utilization.
+# Both sides are priced with the same roofline constants the autotuner uses
+# (kernels/autotune.py), so the break-even moves with dtype and hardware
+# generation.  Everything here is pure Python over static shapes: the
+# SparseRowMatrix shard_map bodies consult it at trace time.
+
+@dataclasses.dataclass(frozen=True)
+class SparseDispatch:
+    bsr_s: float          # modeled per-shard seconds on the BSR path
+    dense_s: float        # modeled per-shard seconds on the dense GEMM path
+    use_bsr: bool
+
+
+@functools.lru_cache(maxsize=512)
+def _sparse_dispatch_cached(m: int, n: int, nx: int, ell: int, bs: int,
+                            dtype_name: str) -> SparseDispatch:
+    import jax.numpy as jnp
+    from repro.kernels import autotune as at
+    dtype = jnp.dtype(dtype_name)
+    bsr_s = at.model_time("bsr", {"bs": bs},
+                          {"m": m, "n": n, "nx": nx, "ell": ell}, dtype)
+    # Dense comparison point: the best-ranked GEMM tile for this shard shape
+    # (matvec is priced as nx=1; the ranker clamps tiles to the shape).
+    dense_s = at.rank("gemm", {"m": m, "k": n, "n": max(nx, 1)}, dtype)[0][0]
+    return SparseDispatch(bsr_s=bsr_s, dense_s=dense_s,
+                          use_bsr=bsr_s <= dense_s)
+
+
+def sparse_dispatch(m: int, n: int, nx: int, ell: int, bs: int,
+                    dtype="float32") -> SparseDispatch:
+    """Per-shard BSR-vs-dense decision for an (m × n) BlockELL shard with
+    `ell` stored blocks per block-row of size `bs`, multiplied against an
+    (n × nx) dense operand (nx=1 for SpMV)."""
+    import jax.numpy as jnp
+    return _sparse_dispatch_cached(int(m), int(n), int(max(nx, 1)), int(ell),
+                                   int(bs), jnp.dtype(dtype).name)

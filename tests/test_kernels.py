@@ -79,6 +79,36 @@ def test_bsr_property(bm, bn, density):
     np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-3)
 
 
+@given(st.integers(1, 6), st.integers(1, 6), st.floats(0.1, 0.9))
+@settings(max_examples=8, deadline=None)
+def test_bsr_matvec_property(bm, bn, density):
+    rng = np.random.default_rng(int(bm * 90 + bn * 9 + density * 11))
+    mask = rng.random((bm, bn)) < density
+    dense = (np.kron(mask, np.ones((8, 8)))
+             * rng.normal(size=(bm * 8, bn * 8))).astype(np.float32)
+    bell = BlockELL.from_dense(dense, bs=8)
+    x = rng.normal(size=(bn * 8,)).astype(np.float32)
+    got = ops.bsr_matvec(bell, jnp.asarray(x), force_pallas=True)
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(ops.bsr_matvec(bell, jnp.asarray(x)),
+                               dense @ x, rtol=1e-4, atol=1e-3)
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(1, 20))
+@settings(max_examples=8, deadline=None)
+def test_bsr_rmatmul_property(bm, bn, nx):
+    rng = np.random.default_rng(bm * 77 + bn * 7 + nx)
+    mask = rng.random((bm, bn)) < 0.5
+    dense = (np.kron(mask, np.ones((8, 8)))
+             * rng.normal(size=(bm * 8, bn * 8))).astype(np.float32)
+    bell = BlockELL.from_dense(dense, bs=8)
+    x = rng.normal(size=(bm * 8, nx)).astype(np.float32)
+    got = ops.bsr_rmatmul(bell, jnp.asarray(x), force_pallas=True)
+    np.testing.assert_allclose(got, dense.T @ x, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(ops.bsr_rmatmul(bell, jnp.asarray(x)),
+                               dense.T @ x, rtol=1e-4, atol=1e-3)
+
+
 @pytest.mark.parametrize("B,hq,hkv,S,D", [
     (1, 2, 2, 64, 16),        # MHA
     (2, 4, 2, 64, 16),        # GQA 2:1

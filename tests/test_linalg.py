@@ -55,6 +55,17 @@ def test_auto_dispatch():
     assert res.info["mode"] == "gram"
 
 
+def test_wide_and_short_transpose_dispatch():
+    """m < n routes through Aᵀ and swaps the factors (paper §3.1)."""
+    rng = np.random.default_rng(8)
+    W = rng.normal(size=(10, 200)).astype(np.float32)
+    res = compute_svd(RowMatrix.create(W), 4)
+    assert res.info.get("transposed") is True
+    np.testing.assert_allclose(
+        res.s, np.linalg.svd(W, compute_uv=False)[:4], rtol=1e-3)
+    assert res.V.shape == (200, 4) and res.U.shape == (10, 4)
+
+
 @given(st.integers(20, 100), st.integers(2, 10))
 @settings(max_examples=8, deadline=None)
 def test_tsqr_property(m, n):

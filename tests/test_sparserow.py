@@ -1,0 +1,361 @@
+"""SparseRowMatrix subsystem: BSR kernels, conversions, density dispatch,
+sampled DIMSUM, and the sparse end-to-end SVD path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distmat import CoordinateMatrix, RowMatrix, SparseRowMatrix
+from repro.core.linalg import compute_svd
+from repro.kernels import ops, ref
+from repro.kernels import autotune as at
+from repro.kernels.bsr import BlockELL
+from repro.launch import costmodel
+
+
+def block_sparse(m, n, bs, block_density, seed=0):
+    """Dense array with genuinely block-structured sparsity."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random((m // bs, n // bs)) < block_density
+    return (np.kron(mask, np.ones((bs, bs)))
+            * rng.normal(size=(m, n))).astype(np.float32)
+
+
+class TestBsrKernels:
+    """Interpret-mode Pallas parity vs the densifying oracles."""
+
+    @pytest.mark.parametrize("bm,bn,density", [(4, 6, 0.2), (7, 3, 0.5),
+                                               (1, 1, 1.0)])
+    def test_spmv_parity(self, bm, bn, density):
+        dense = block_sparse(bm * 8, bn * 8, 8, density, seed=bm * 10 + bn)
+        bell = BlockELL.from_dense(dense, bs=8)
+        x = np.random.default_rng(1).normal(size=(bn * 8,)).astype(np.float32)
+        got = ops.bsr_matvec(bell, jnp.asarray(x), force_pallas=True)
+        want = ref.bsr_matvec_ref(bell, jnp.asarray(x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(got, dense @ x, rtol=1e-4, atol=1e-3)
+
+    @pytest.mark.parametrize("bm,bn,nx", [(5, 4, 16), (3, 6, 7)])
+    def test_rmatmul_parity(self, bm, bn, nx):
+        dense = block_sparse(bm * 8, bn * 8, 8, 0.4, seed=bm + bn)
+        bell = BlockELL.from_dense(dense, bs=8)
+        x = np.random.default_rng(2).normal(
+            size=(bm * 8, nx)).astype(np.float32)
+        got = ops.bsr_rmatmul(bell, jnp.asarray(x), force_pallas=True)
+        want = ref.bsr_rmatmul_ref(bell, jnp.asarray(x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(got, dense.T @ x, rtol=1e-4, atol=1e-3)
+
+    def test_structured_jnp_paths_match_oracles(self):
+        """The off-TPU dispatch targets (gather/einsum, flops ∝ blocks)
+        agree with the densifying refs."""
+        dense = block_sparse(40, 64, 8, 0.3, seed=5)
+        bell = BlockELL.from_dense(dense, bs=8)
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        X = jnp.asarray(rng.normal(size=(64, 9)), jnp.float32)
+        U = jnp.asarray(rng.normal(size=(40, 9)), jnp.float32)
+        np.testing.assert_allclose(ops.bsr_matvec(bell, x),
+                                   ref.bsr_matvec_ref(bell, x),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(ops.bsr_matmul(bell, X),
+                                   ref.bsr_matmul_ref(bell, X),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(ops.bsr_rmatmul(bell, U),
+                                   ref.bsr_rmatmul_ref(bell, U),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_from_dense_vectorized_layout(self):
+        """Nonzero blocks pack into leading slots in column order."""
+        dense = np.zeros((16, 32), np.float32)
+        dense[0:8, 24:32] = 1.0       # block (0, 3)
+        dense[0:8, 8:16] = 2.0        # block (0, 1)
+        bell = BlockELL.from_dense(dense, bs=8)
+        assert bell.ell == 2
+        assert bell.cols[0, 0] == 1 and bell.cols[0, 1] == 3
+        np.testing.assert_allclose(bell.to_dense(), dense, atol=0)
+
+
+class TestAutotunerBsr:
+    def test_bsr_in_candidate_space(self):
+        dims = {"m": 4096, "n": 4096, "nnz": 800_000, "nx": 128}
+        cands = at.candidates("bsr", dims, jnp.float32)
+        assert cands and all(b["bs"] % at.sublane(jnp.float32) == 0
+                             for b in cands)
+        ranked = at.rank("bsr", dims, jnp.float32)
+        assert ranked[0][0] <= at.model_time(
+            "bsr", dict(at.KERNELS["bsr"].legacy), dims, jnp.float32)
+
+    def test_known_ell_overrides_estimate(self):
+        """Block-structured matrices pass their actual ELL width; the cost
+        must use it instead of the uniform-scatter estimate."""
+        sparse = at.model_time("bsr", {"bs": 64},
+                               {"m": 4096, "n": 4096, "nx": 128, "ell": 3},
+                               jnp.float32)
+        dense = at.model_time("bsr", {"bs": 64},
+                              {"m": 4096, "n": 4096, "nx": 128, "ell": 64},
+                              jnp.float32)
+        assert sparse < dense
+
+    def test_block_size_selector_is_static(self):
+        bs = ops.bsr_block_size(4096, 4096, 800_000)
+        assert bs in (8, 16, 32, 64, 128)
+        assert bs == ops.bsr_block_size(4096, 4096, 800_000)  # memoized
+
+
+class TestDensityDispatch:
+    def test_break_even_moves_with_ell(self):
+        d_sparse = costmodel.sparse_dispatch(1024, 4096, 128, 2, 128)
+        d_dense = costmodel.sparse_dispatch(1024, 4096, 128, 32, 128)
+        assert d_sparse.use_bsr and not d_dense.use_bsr
+        assert d_sparse.bsr_s < d_sparse.dense_s < d_dense.bsr_s
+
+    def test_both_paths_agree_numerically(self):
+        dense = block_sparse(64, 64, 8, 0.9, seed=7)   # dense-ish shard
+        srm = SparseRowMatrix.from_dense(dense, bs=8)
+        v = np.random.default_rng(0).normal(size=64).astype(np.float32)
+        via_bsr = np.asarray(srm.matvec(jnp.asarray(v), dispatch="bsr"))
+        via_dense = np.asarray(srm.matvec(jnp.asarray(v), dispatch="dense"))
+        np.testing.assert_allclose(via_bsr, via_dense, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(via_bsr[:64], dense @ v, rtol=1e-4,
+                                   atol=1e-4)
+        with pytest.raises(ValueError):
+            srm.matvec(jnp.asarray(v), dispatch="bogus")
+
+
+class TestSparseRowMatrix:
+    def _make(self, m=96, n=128, bd=0.2, seed=0):
+        dense = block_sparse(m, n, 8, bd, seed=seed)
+        return SparseRowMatrix.from_dense(dense, bs=8), dense
+
+    def test_round_trips(self):
+        srm, dense = self._make()
+        np.testing.assert_allclose(srm.to_local(), dense, atol=1e-6)
+        np.testing.assert_allclose(srm.to_row_matrix().to_local(), dense,
+                                   atol=1e-6)
+        # COO → SparseRowMatrix → dense (explicit and auto block size)
+        ri, ci = np.nonzero(dense)
+        cm = CoordinateMatrix.create(jnp.asarray(ri), jnp.asarray(ci),
+                                     jnp.asarray(dense[ri, ci]), dense.shape)
+        np.testing.assert_allclose(cm.to_sparse_row_matrix(bs=8).to_local(),
+                                   dense, atol=1e-6)
+        auto = cm.to_sparse_row_matrix()
+        np.testing.assert_allclose(auto.to_local(), dense, atol=1e-5)
+        # RowMatrix → SparseRowMatrix
+        rt = RowMatrix.create(dense).to_sparse_row_matrix(bs=8)
+        np.testing.assert_allclose(rt.to_local(), dense, atol=1e-6)
+
+    def test_unaligned_shapes_pad(self):
+        """True dims not multiples of bs: padding must stay invisible."""
+        rng = np.random.default_rng(4)
+        dense = np.zeros((37, 29), np.float32)
+        sel = rng.random((37, 29)) < 0.2
+        dense[sel] = rng.normal(size=int(sel.sum()))
+        srm = SparseRowMatrix.from_dense(dense, bs=8)
+        np.testing.assert_allclose(srm.to_local(), dense, atol=1e-6)
+        v = rng.normal(size=29).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(srm.matvec(jnp.asarray(v)))[:37], dense @ v,
+            rtol=1e-4, atol=1e-4)
+        u = rng.normal(size=37).astype(np.float32)
+        np.testing.assert_allclose(srm.rmatvec(jnp.asarray(u)),
+                                   dense.T @ u, rtol=1e-3, atol=1e-3)
+
+    def test_matvec_rmatvec_gram_norms(self):
+        srm, dense = self._make(seed=1)
+        rng = np.random.default_rng(1)
+        v = rng.normal(size=128).astype(np.float32)
+        u = rng.normal(size=96).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(srm.matvec(jnp.asarray(v)))[:96], dense @ v,
+            rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(srm.rmatvec(jnp.asarray(u)), dense.T @ u,
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(srm.gram(), dense.T @ dense, rtol=1e-3,
+                                   atol=1e-3)
+        np.testing.assert_allclose(float(srm.frobenius_norm()),
+                                   np.linalg.norm(dense), rtol=1e-5)
+        np.testing.assert_allclose(srm.column_norms(),
+                                   np.linalg.norm(dense, axis=0), rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_multiply_local_returns_dense_rowmatrix(self):
+        srm, dense = self._make(seed=2)
+        B = np.random.default_rng(2).normal(size=(128, 5)).astype(np.float32)
+        out = srm.multiply_local(jnp.asarray(B))
+        assert isinstance(out, RowMatrix)
+        np.testing.assert_allclose(out.to_local(), dense @ B, rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_transpose(self):
+        srm, dense = self._make(seed=3)
+        np.testing.assert_allclose(srm.transpose().to_local(), dense.T,
+                                   atol=1e-6)
+
+
+def indicator_matrix(m=2000, n=16, seed=3):
+    """Binary indicator data with overlapping column support — the bounded
+    entry setting the DIMSUM concentration analysis assumes."""
+    rng = np.random.default_rng(seed)
+    base = rng.random((m, 4)) < 0.4
+    cols = []
+    for j in range(n):
+        src = base[:, j % 4]
+        flip = rng.random(m) < 0.15
+        cols.append(np.where(flip, ~src, src))
+    return np.stack(cols, 1).astype(np.float32)
+
+
+class TestSampledDimsum:
+    def _exact(self, A):
+        norms = np.linalg.norm(A, axis=0)
+        return (A.T @ A) / np.maximum(np.outer(norms, norms), 1e-30)
+
+    def test_threshold_zero_equals_exact_gram(self):
+        A = indicator_matrix()
+        rm = RowMatrix.create(A)
+        want = self._exact(A)
+        np.testing.assert_allclose(rm.column_similarities(), want,
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(rm.column_similarities(0.0), want,
+                                   rtol=1e-3, atol=1e-3)
+        srm = SparseRowMatrix.from_dense(A, bs=8)
+        np.testing.assert_allclose(srm.column_similarities(), want,
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_huge_gamma_recovers_exact(self):
+        """√γ ≥ max‖cᵢ‖ ⇒ every pᵢ = 1 ⇒ the sampled estimator is exact."""
+        A = indicator_matrix(seed=4)
+        want = self._exact(A)
+        off = ~np.eye(A.shape[1], dtype=bool)
+        for M in (RowMatrix.create(A), SparseRowMatrix.from_dense(A, bs=8)):
+            got = np.asarray(M.column_similarities(0.5, gamma=1e9))
+            np.testing.assert_allclose(got[off], want[off], rtol=1e-3,
+                                       atol=1e-3)
+            np.testing.assert_allclose(np.diag(got), 1.0, atol=1e-6)
+
+    @pytest.mark.parametrize("threshold", [0.3, 0.5])
+    def test_error_bound_above_threshold(self, threshold):
+        """DIMSUM contract at the default γ: pairs with similarity ≥ the
+        threshold are estimated to bounded relative error (seeded)."""
+        A = indicator_matrix()
+        want = self._exact(A)
+        off = ~np.eye(A.shape[1], dtype=bool)
+        for M in (RowMatrix.create(A), SparseRowMatrix.from_dense(A, bs=8)):
+            got = np.asarray(M.column_similarities(threshold, seed=0))
+            hi = (want >= threshold) & off
+            assert hi.any()
+            rel = np.abs(got - want)[hi] / want[hi]
+            # w.h.p. bounds, not worst-case: typical error is small, the
+            # tail is bounded (seeded, so the assertion is deterministic).
+            assert rel.mean() < 0.15, rel.mean()
+            assert rel.max() < 0.55, rel.max()
+
+    def test_estimator_is_unbiased(self):
+        """Averaging estimates over seeds converges toward the exact value
+        even under aggressive sampling."""
+        A = indicator_matrix(seed=5)
+        rm = RowMatrix.create(A)
+        want = self._exact(A)
+        off = ~np.eye(A.shape[1], dtype=bool)
+        single = np.abs(np.asarray(
+            rm.column_similarities(0.5, gamma=25.0, seed=0)) - want)[off]
+        ests = np.stack([np.asarray(rm.column_similarities(
+            0.5, gamma=25.0, seed=s)) for s in range(16)])
+        averaged = np.abs(ests.mean(0) - want)[off]
+        assert averaged.max() < single.max()
+        assert averaged.mean() < 0.5 * single.mean()
+
+
+class TestSparseSVD:
+    def test_lanczos_matches_dense_svd(self):
+        """Acceptance bar: sparse end-to-end σ within 1e-4 rtol of dense."""
+        dense = block_sparse(80, 64, 8, 0.3, seed=11)
+        srm = SparseRowMatrix.from_dense(dense, bs=8)
+        res = compute_svd(srm, 4, tol=1e-7, max_restarts=300)
+        assert res.info["mode"] == "lanczos"       # auto → sparse iteration
+        s_np = np.linalg.svd(dense, compute_uv=False)[:4]
+        np.testing.assert_allclose(res.s, s_np, rtol=1e-4)
+        # U comes back through the sparse multiply_local as a RowMatrix
+        U = np.asarray(res.U.to_local())
+        recon = U @ np.diag(np.asarray(res.s)) @ np.asarray(res.V).T
+        u, s, vt = np.linalg.svd(dense, full_matrices=False)
+        np.testing.assert_allclose(recon, u[:, :4] @ np.diag(s[:4]) @ vt[:4],
+                                   atol=5e-3)
+
+    def test_gram_mode_available_explicitly(self):
+        dense = block_sparse(80, 64, 8, 0.3, seed=12)
+        srm = SparseRowMatrix.from_dense(dense, bs=8)
+        res = compute_svd(srm, 4, mode="gram")
+        s_np = np.linalg.svd(dense, compute_uv=False)[:4]
+        np.testing.assert_allclose(res.s, s_np, rtol=1e-3)
+
+
+class TestTransposeDispatch:
+    def test_wide_rowmatrix(self):
+        rng = np.random.default_rng(6)
+        W = rng.normal(size=(12, 300)).astype(np.float32)
+        res = compute_svd(RowMatrix.create(W), 5)
+        assert res.info.get("transposed") is True
+        s_np = np.linalg.svd(W, compute_uv=False)[:5]
+        np.testing.assert_allclose(res.s, s_np, rtol=1e-3)
+        assert res.V.shape == (300, 5)
+        recon = (np.asarray(res.U.to_local())
+                 @ np.diag(np.asarray(res.s)) @ np.asarray(res.V).T)
+        u, s, vt = np.linalg.svd(W, full_matrices=False)
+        np.testing.assert_allclose(recon, u[:, :5] @ np.diag(s[:5]) @ vt[:5],
+                                   atol=5e-3)
+
+    def test_wide_coordinatematrix_index_swap(self):
+        rng = np.random.default_rng(7)
+        D = ((rng.random((30, 90)) < 0.2)
+             * rng.normal(size=(30, 90))).astype(np.float32)
+        ri, ci = np.nonzero(D)
+        cm = CoordinateMatrix.create(jnp.asarray(ri), jnp.asarray(ci),
+                                     jnp.asarray(D[ri, ci]), (30, 90))
+        np.testing.assert_allclose(cm.transpose().to_local(), D.T, atol=1e-6)
+        res = compute_svd(cm, 3, mode="lanczos", tol=1e-6, max_restarts=300)
+        assert res.info.get("transposed") is True
+        s_np = np.linalg.svd(D, compute_uv=False)[:3]
+        np.testing.assert_allclose(res.s, s_np, rtol=2e-3)
+        V = np.asarray(res.V)
+        for i in range(3):
+            np.testing.assert_allclose(np.linalg.norm(D @ V[:, i]), s_np[i],
+                                       rtol=5e-3)
+
+    def test_wide_blockmatrix_keeps_direct_path(self):
+        """Types without a transpose (BlockMatrix) must fall through to the
+        direct matrix-free path on wide inputs, not raise."""
+        from repro.core.distmat import BlockMatrix
+        rng = np.random.default_rng(14)
+        A = rng.normal(size=(40, 100)).astype(np.float32)
+        res = compute_svd(BlockMatrix.create(A), 3, mode="lanczos",
+                          tol=1e-6, max_restarts=300)
+        assert "transposed" not in res.info
+        np.testing.assert_allclose(
+            res.s, np.linalg.svd(A, compute_uv=False)[:3], rtol=2e-3)
+
+    def test_wide_sparserowmatrix(self):
+        dense = block_sparse(32, 128, 8, 0.3, seed=13).astype(np.float32)
+        srm = SparseRowMatrix.from_dense(dense, bs=8)
+        res = compute_svd(srm, 3, tol=1e-7, max_restarts=300)
+        assert res.info.get("transposed") is True
+        s_np = np.linalg.svd(dense, compute_uv=False)[:3]
+        np.testing.assert_allclose(res.s, s_np, rtol=1e-4)
+
+
+class TestCoordinateConversionsVectorized:
+    def test_indexed_row_matrix_with_duplicates(self):
+        """Duplicate (row, col) entries must accumulate, matching to_local."""
+        ri = np.array([5, 0, 5, 3, 5, 0], np.int64)
+        ci = np.array([1, 2, 1, 0, 2, 2], np.int64)
+        va = np.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0], np.float32)
+        cm = CoordinateMatrix.create(jnp.asarray(ri), jnp.asarray(ci),
+                                     jnp.asarray(va), (7, 3))
+        D = np.zeros((7, 3), np.float32)
+        np.add.at(D, (ri, ci), va)
+        irm = cm.to_indexed_row_matrix()
+        got = np.asarray(irm.to_local())        # rows up to max index
+        np.testing.assert_allclose(got, D[: got.shape[0]], atol=1e-6)
+        assert np.all(D[got.shape[0]:] == 0)
+        srm = cm.to_sparse_row_matrix(bs=8)
+        np.testing.assert_allclose(srm.to_local(), D, atol=1e-6)
