@@ -60,6 +60,11 @@ SWEEP: dict[str, list[dict[str, int]]] = {
         {"m": 16384, "n": 2048, "r": 72},
         {"m": 65536, "n": 4096, "r": 136},
     ],
+    # Figure-1 composite-gradient shard shapes (the fused optimizer hot path).
+    "fusedgrad": [
+        {"m": 10000, "n": 1024},
+        {"m": 65536, "n": 512},
+    ],
     "flash_attention": [
         {"sq": 2048, "sk": 2048, "d": 128, "causal": 1},
         {"sq": 8192, "sk": 8192, "d": 128, "causal": 1},
@@ -97,6 +102,12 @@ def _make_runner(kernel: str, dims: dict, dtype):
     if kernel == "randsketch":
         a, q = arr(dims["m"], dims["n"]), arr(dims["m"], dims["r"])
         return lambda blk: ops.randsketch(a, q, **blk).block_until_ready()
+    if kernel == "fusedgrad":
+        a = arr(dims["m"], dims["n"])
+        x, t = arr(dims["n"]), arr(dims["m"])
+        w = jnp.ones((dims["m"],), jnp.float32)
+        return lambda blk: jax.block_until_ready(
+            ops.fused_grad(a, x, t, w, loss="quad", **blk))
     if kernel == "flash_attention":
         q = arr(1, 1, dims["sq"], dims["d"])
         k = arr(1, 1, dims["sk"], dims["d"])

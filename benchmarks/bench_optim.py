@@ -1,4 +1,5 @@
-"""Figure 1 — error-per-iteration for the optimization primitives.
+"""Figure 1 — error-per-iteration for the optimization primitives, plus the
+fused-gradient hot-path comparison.
 
 Reproduces the paper's four runs (linear, linear+L1, logistic,
 logistic+L2) with all six methods at the same initial step size, reporting
@@ -6,15 +7,80 @@ log10(f_k − f*) at fixed iteration budgets.  Problem sizes are scaled to
 this container (the paper's 10000×1024 runs in minutes on one core; we use
 the same generator at 1000×128 so the whole figure reproduces in seconds —
 pass --full for paper-size).
+
+The fused section benchmarks the single-pass fused gradient
+(kernels/fusedgrad) against the apply+adjoint baseline on the gra/lbfgs hot
+loops and emits one ``BENCH {json}`` line per config with wall time,
+iterations/sec, the *counted* A-passes per attempt/evaluation (structural:
+via a CountingLinop trace — 2 unfused → 1 fused), and the roofline-modeled
+per-pass times.  Wired into ``run.py --only optim``.
 """
 from __future__ import annotations
 
+import json
 import time
+from dataclasses import replace as _dc_replace
 
 import numpy as np
 
 from repro.core.optim import (make_problem, minimize, composite_value,
                               METHODS)
+from repro.core.tfocs import CountingLinop
+
+# Trace-time A-pass call sites per method (see CountingLinop: while-loop
+# bodies trace once, so counts are structural).  gra traces its attempt
+# body once plus one init evaluation; lbfgs traces value_and_grad at init,
+# at the first probe, and in the line-search body — 3 sites, no extra init.
+_SITES = {"gra": ("init+attempts", 1, 1), "lbfgs": ("evals", 0, 3)}
+
+
+def fused_pass_counts(pname: str, method: str, fused: bool, *,
+                      m: int = 200, n: int = 32) -> dict:
+    """Structural A-pass counts for one solver config on a tiny problem.
+
+    Returns the raw trace counts plus `per_attempt`, the A-passes each
+    backtracking attempt / line-search evaluation performs (the number the
+    fused kernel halves: 2 → 1).  Deterministic — used by the perf-smoke
+    test as well as the BENCH emission below."""
+    p = make_problem(pname, m=m, n=n)
+    wrapped = CountingLinop(p.linop)
+    pw = _dc_replace(p, linop=wrapped)
+    minimize(pw, method, max_iters=2, fused=fused)
+    counts = dict(wrapped.counts)
+    _, init_passes, sites = _SITES[method]
+    total = sum(counts.values())
+    per_attempt = (total - init_passes) / sites
+    return {"counts": counts, "total": total, "per_attempt": per_attempt}
+
+
+def _timed(p, method, fused, iters, reps=3):
+    """Warm jitted-loop wall time: the whole solver is jitted once (tol=0 so
+    it runs exactly `iters` iterations) and timed over warm repeats, so the
+    numbers are pure loop runtime — no trace/compile noise."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.tfocs.solver import tfocs, TfocsOptions
+    from repro.core.optim.lbfgs import lbfgs
+    from repro.core.optim.problems import lbfgs_value_and_grad
+    n = p.linop.in_shape[0]
+    if method == "lbfgs":
+        vg = lbfgs_value_and_grad(p, fused=fused)
+        fn = jax.jit(lambda x0: lbfgs(vg, x0, max_iters=iters, tol=0.0)[0])
+    else:
+        opts = TfocsOptions(max_iters=iters, tol=0.0, L0=p.L, Lexact=p.L,
+                            accel=False, backtracking=False, fused=fused)
+        fn = jax.jit(
+            lambda x0: tfocs(p.smooth, p.linop, p.prox, x0, opts)[0])
+    x0 = jnp.zeros(n, jnp.float32)
+    x = jax.block_until_ready(fn(x0))              # compile + warm-up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        x = fn(x0)
+    jax.block_until_ready(x)
+    dt = (time.perf_counter() - t0) / reps
+    return x, {"wall_s": round(dt, 4), "iters_run": iters,
+               "per_iter_ms": round(dt / iters * 1e3, 4),
+               "iters_per_s": round(iters / dt, 2)}
 
 
 def run(full: bool = False) -> list[tuple[str, float, str]]:
@@ -42,4 +108,41 @@ def run(full: bool = False) -> list[tuple[str, float, str]]:
                 dt / iters * 1e6,
                 f"log10_err_final={np.log10(err):.2f};"
                 f"log10_err_mid={np.log10(mid_err):.2f}"))
+
+    # -- fused vs unfused hot-path section (BENCH json per config) -----------
+    from repro.launch.costmodel import fused_grad_dispatch
+    fiters = 50
+    for pname in ("linear", "logistic"):
+        p = make_problem(pname, m=m, n=n)
+        nd = p.linop.in_shape[0]
+        modeled = fused_grad_dispatch(p.linop.out_shape[0], nd)
+        for method in ("gra", "lbfgs"):
+            rec = {"suite": "optim_fused", "problem": pname,
+                   "method": method, "m": m, "n": nd, "iters": fiters,
+                   "modeled": {
+                       "fused_s": modeled.fused_s,
+                       "unfused_s": modeled.unfused_s,
+                       "modeled_speedup": modeled.unfused_s
+                       / max(modeled.fused_s, 1e-30)}}
+            for fused in (False, True):
+                passes = fused_pass_counts(pname, method, fused)
+                x, timing = _timed(p, method, fused, fiters)
+                rec["fused" if fused else "unfused"] = dict(
+                    timing,
+                    a_passes_per_attempt=passes["per_attempt"],
+                    trace_counts=passes["counts"],
+                    objective=float(composite_value(p, x)))
+            rec["a_pass_ratio"] = (
+                rec["unfused"]["a_passes_per_attempt"]
+                / max(rec["fused"]["a_passes_per_attempt"], 1e-30))
+            rec["wall_speedup"] = (rec["unfused"]["per_iter_ms"]
+                                   / max(rec["fused"]["per_iter_ms"], 1e-9))
+            print("BENCH " + json.dumps(rec))
+            rows.append((
+                f"fused_{pname}_{method}",
+                rec["fused"]["per_iter_ms"] * 1e3,
+                f"a_passes_fused={rec['fused']['a_passes_per_attempt']:.0f};"
+                f"a_passes_unfused="
+                f"{rec['unfused']['a_passes_per_attempt']:.0f};"
+                f"wall_speedup={rec['wall_speedup']:.2f}"))
     return rows

@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows (paper artifacts:
 Table 1 = bench_svd, Figure 1 = bench_optim, Figure 2 = bench_gemm,
 §4.2 = bench_sparse; autotune = the kernel block-size sweep, which also
 emits ``BENCH {json}`` lines and refreshes the persistent config cache).
+bench_optim additionally emits ``BENCH {json}`` lines for the fused-vs-
+unfused gradient hot path (wall time, iterations/sec, counted A-passes
+per attempt: 2 unfused → 1 fused).
 """
 from __future__ import annotations
 

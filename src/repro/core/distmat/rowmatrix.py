@@ -115,6 +115,30 @@ class RowMatrix(T.DistMatrix):
         return self._smap(body, in_specs=(self._spec, P(self.row_axes)),
                           out_specs=P())(self.rows, u)
 
+    def fused_grad(self, x: Array, smooth) -> tuple[Array, Array, Array]:
+        """(f(Ax), Aᵀ∇f(Ax), Ax) in ONE streaming pass over the shard — the
+        paper's one-pass treeAggregate gradient, fused on-chip
+        (kernels/fusedgrad).  `smooth` is a row-separable smooth (or its
+        RowSeparable form); its target/weights are data-space vectors and
+        get padded to the sharded row count, with padding rows weighted 0.
+        Returns (replicated f32 scalar, replicated (n,) gradient,
+        row-sharded image)."""
+        from repro.kernels import ops as _ops
+        axes = self.row_axes
+        kind, t, w = T.row_separable_inputs(smooth, self.rows.shape[0],
+                                            self._row_mask)
+        x = jnp.asarray(x)
+
+        def body(a, x, t, w):
+            f, g, z = _ops.fused_grad(a, x, t, w, loss=kind)
+            return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
+
+        f, g, z = self._smap(
+            body,
+            in_specs=(self._spec, P(), P(self.row_axes), P(self.row_axes)),
+            out_specs=(P(), P(), P(self.row_axes)))(self.rows, x, t, w)
+        return f, g, z
+
     def multiply_local(self, B: Array) -> "RowMatrix":
         """A @ B for a small replicated B — the `U = A (VΣ⁻¹)` pattern:
         broadcast the small factor, then embarrassingly parallel (autotuned
@@ -197,7 +221,7 @@ class RowMatrix(T.DistMatrix):
 
     def column_similarities(self, threshold: float = 0.0, *,
                             gamma: float | None = None,
-                            seed: int = 0) -> Array:
+                            seed: int = 0, return_info: bool = False):
         """DIMSUM cosine similarity of columns (paper refs [10, 11]).
 
         threshold=0 (the default) computes cos(i,j) = (AᵀA)ij/(‖cᵢ‖‖cⱼ‖)
@@ -211,14 +235,25 @@ class RowMatrix(T.DistMatrix):
         preserves all similarities ≥ threshold w.h.p.  Sampling happens
         per shard from a fold_in'd key, so no randomness crosses the
         interconnect.
+
+        return_info=True returns (sim, info) where info carries the sampling
+        diagnostics: γ, the per-column keep probabilities p, and the
+        per-pair variance of the estimator,
+            Var[ŝᵢⱼ] = Σ_k (a_ki a_kj)² / (‖cᵢ‖²‖cⱼ‖²) · (1/(pᵢpⱼ) − 1),
+        computed exactly via one extra Gram over the squared scaled matrix
+        — it shrinks to 0 as γ grows (all pᵢ → 1).
         """
         from repro.kernels import ops as _ops
         norms = self.column_stats()["norm_l2"]
         inv = jnp.where(norms > 0, 1.0 / jnp.maximum(norms, 1e-30), 0.0)
-        if threshold <= 0.0:
-            return self.scale_columns(inv).gram()
-        from .sparserow import dimsum_gamma
         n = self.shape[1]
+        if threshold <= 0.0:
+            sim = self.scale_columns(inv).gram()
+            if not return_info:
+                return sim
+            return sim, {"gamma": None, "p": jnp.ones((n,), jnp.float32),
+                         "variance": jnp.zeros((n, n), jnp.float32)}
+        from .sparserow import dimsum_gamma
         g = gamma if gamma is not None else dimsum_gamma(n, threshold)
         p = jnp.minimum(1.0, float(np.sqrt(g)) * inv)
         scale = inv * jnp.where(p > 0, 1.0 / p, 0.0)
@@ -235,7 +270,14 @@ class RowMatrix(T.DistMatrix):
                          out_specs=P())(self.rows, p, scale)
         sim = sim.astype(self.rows.dtype)
         diag = (norms > 0).astype(sim.dtype)
-        return sim.at[jnp.arange(n), jnp.arange(n)].set(diag)
+        sim = sim.at[jnp.arange(n), jnp.arange(n)].set(diag)
+        if not return_info:
+            return sim
+        scaled = self.scale_columns(inv)
+        sq = replace(scaled, rows=scaled.rows * scaled.rows)
+        s2 = sq.gram().astype(jnp.float32)       # Σ_k (ãki ãkj)², ã scaled
+        var = T.dimsum_variance(s2, p)
+        return sim, {"gamma": g, "p": p, "variance": var}
 
     def to_sparse_row_matrix(self, bs: int | str = "auto"):
         """Block-compress into the BSR-backed sparse type (driver-scale,

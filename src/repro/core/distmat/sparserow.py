@@ -46,9 +46,10 @@ Array = jax.Array
 _BS_CANDIDATES = (8, 16, 32, 64, 128)
 
 # Column-strip width for AᵀX products with wide X (gram, sampled DIMSUM):
-# bsr_rmatmul stages an (nbr·ell, bs, nx) partials buffer before the
-# block-column scatter-add, i.e. ell× the dense slab of the same width — so
-# wide right-hand sides are processed in strips to keep that bounded.
+# the fused bsr_rmatmul kernel keeps an (n_pad × nx) f32 accumulator
+# resident in VMEM (falling back to HBM partials + segment_sum when even a
+# strip would overflow the budget), so wide right-hand sides are processed
+# in bounded strips.
 _RMATMUL_STRIP = 512
 
 
@@ -231,6 +232,18 @@ class SparseRowMatrix(T.DistMatrix):
         return _bsr.BlockELL(data, cols, (data.shape[0] * self.bs,
                                           self.n_pad))
 
+    def _row_mask(self) -> Array:
+        """Row-sharded {0,1} mask of true (non-padding) rows."""
+        m = self.dims[0]
+        local = self._local_rows()
+        axes = self.row_axes
+
+        def body():
+            start = _shard_index(axes) * local
+            return ((start + jnp.arange(local)) < m).astype(self.data.dtype)
+
+        return self._smap(body, in_specs=(), out_specs=P(self.row_axes))()
+
     # -- cluster matrix ops --------------------------------------------------
     def matvec(self, v: Array, *, dispatch: str = "auto") -> Array:
         """A v with v replicated (driver) → row-sharded (m_pad,) result."""
@@ -291,6 +304,40 @@ class SparseRowMatrix(T.DistMatrix):
             self.data, self.cols, Bp)
         return RowMatrix(rows=out, n_rows=self.dims[0], mesh=self.mesh,
                          row_axes=self.row_axes)
+
+    def fused_grad(self, x: Array, smooth, *,
+                   dispatch: str = "auto") -> tuple[Array, Array, Array]:
+        """(f(Ax), Aᵀ∇f(Ax), Ax) in one pass over the stored blocks — the
+        BSR form of the fused composite gradient (kernels/fusedgrad): z for
+        a block-row accumulates while its blocks are staged in VMEM, the
+        row-local residual is evaluated on-chip, and the transpose
+        contributions scatter-add into a resident accumulator.  Dense
+        fallback (densify + dense fused kernel) under the same density-aware
+        dispatch as every other multiply."""
+        from repro.kernels import ops as _ops
+        use_bsr = self._use_bsr(1, dispatch)
+        axes = self.row_axes
+        n = self.dims[1]
+        kind, t, w = T.row_separable_inputs(smooth, self.m_pad,
+                                            self._row_mask)
+        x = jnp.asarray(x)
+        xp = jnp.pad(x, (0, self.n_pad - x.shape[0])) \
+            if x.shape[0] < self.n_pad else x
+
+        def body(data, cols, xp, t, w):
+            local = self._local(data, cols)
+            if use_bsr:
+                f, g, z = _ops.fused_grad_bsr(local, xp, t, w, loss=kind)
+            else:
+                f, g, z = _ops.fused_grad(local.to_dense(), xp, t, w,
+                                          loss=kind)
+            return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
+
+        f, g, z = self._smap(
+            body,
+            in_specs=(self._dspec, self._dspec, P(), P(axes), P(axes)),
+            out_specs=(P(), P(), P(axes)))(self.data, self.cols, xp, t, w)
+        return f, g[:n], z
 
     def gram(self, *, dispatch: str = "auto") -> Array:
         """AᵀA, replicated — per-shard AᵀA with the sparse operand on the
@@ -354,14 +401,23 @@ class SparseRowMatrix(T.DistMatrix):
     # -- DIMSUM --------------------------------------------------------------
     def column_similarities(self, threshold: float = 0.0, *,
                             gamma: float | None = None,
-                            seed: int = 0) -> Array:
+                            seed: int = 0, return_info: bool = False):
         """Sampled DIMSUM cosine similarities (see module docstring).
-        threshold=0 → exact scaled-Gram path."""
+        threshold=0 → exact scaled-Gram path.  return_info=True returns
+        (sim, info) with the sampling diagnostics — γ, per-column keep
+        probabilities p, and the exact per-pair estimator variance
+        Σ_k (ã_ki ã_kj)²·(1/(pᵢpⱼ) − 1) (ã column-scaled), which shrinks
+        to 0 as γ grows."""
         from repro.kernels import ops as _ops
         norms = self.column_norms()
         inv = jnp.where(norms > 0, 1.0 / jnp.maximum(norms, 1e-30), 0.0)
         if threshold <= 0.0:
-            return self.scale_columns(inv).gram()
+            sim = self.scale_columns(inv).gram()
+            if not return_info:
+                return sim
+            nd = self.dims[1]
+            return sim, {"gamma": None, "p": jnp.ones((nd,), jnp.float32),
+                         "variance": jnp.zeros((nd, nd), jnp.float32)}
         n, bs = self.dims[1], self.bs
         g = gamma if gamma is not None else dimsum_gamma(n, threshold)
         p = jnp.minimum(1.0, math.sqrt(g) * inv)
@@ -392,7 +448,14 @@ class SparseRowMatrix(T.DistMatrix):
         # The diagonal estimator is biased (E[b²] = a²/p); its true value is
         # known exactly, so write it instead (MLlib does the same).
         diag = (norms > 0).astype(sim.dtype)
-        return sim.at[jnp.arange(n), jnp.arange(n)].set(diag)
+        sim = sim.at[jnp.arange(n), jnp.arange(n)].set(diag)
+        if not return_info:
+            return sim
+        scaled = self.scale_columns(inv)
+        sq = replace(scaled, data=scaled.data * scaled.data)
+        s2 = sq.gram().astype(jnp.float32)
+        var = T.dimsum_variance(s2, p)
+        return sim, {"gamma": g, "p": p, "variance": var}
 
     # -- conversions ---------------------------------------------------------
     def to_row_matrix(self) -> RowMatrix:

@@ -82,6 +82,39 @@ def pad_rows(x: Array, multiple: int) -> tuple[Array, int]:
     return x, m
 
 
+def row_separable_inputs(smooth, m_pad: int, row_mask_fn):
+    """Resolve a smooth (or its RowSeparable form) into fused-gradient
+    kernel inputs: (kind, target, weights) padded to the sharded row count
+    `m_pad`.  Default weights come from `row_mask_fn()` so padding rows
+    contribute nothing; explicit weights are zero-padded, same effect.
+    Shared by RowMatrix.fused_grad and SparseRowMatrix.fused_grad."""
+    sep = smooth if hasattr(smooth, "kind") else (
+        smooth.as_row_separable()
+        if hasattr(smooth, "as_row_separable") else None)
+    if sep is None:
+        raise ValueError("fused_grad needs a row-separable smooth")
+    t = jnp.asarray(sep.target)
+    t = jnp.pad(t, (0, m_pad - t.shape[0])) if t.shape[0] < m_pad else t
+    if sep.weights is None:
+        w = row_mask_fn()
+    else:
+        w = jnp.asarray(sep.weights)
+        w = jnp.pad(w, (0, m_pad - w.shape[0])) if w.shape[0] < m_pad else w
+    return sep.kind, t, w
+
+
+def dimsum_variance(s2: Array, p: Array) -> Array:
+    """Per-pair sampled-DIMSUM estimator variance,
+        Var[ŝᵢⱼ] = Σ_k (ã_ki ã_kj)² · (1/(pᵢpⱼ) − 1),
+    from the Gram `s2` of the squared column-scaled matrix and the
+    per-column keep probabilities `p`.  The diagonal is written exactly by
+    the estimator, so its variance is 0.  Shared by both distmat types."""
+    n = p.shape[0]
+    pp = p[:, None] * p[None, :]
+    var = s2 * jnp.where(pp > 0, 1.0 / jnp.maximum(pp, 1e-30) - 1.0, 0.0)
+    return var.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+
+
 @dataclass(frozen=True)
 class DistMatrix:
     """Base for distributed matrices; subclasses set `data` layout."""

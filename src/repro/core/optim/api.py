@@ -10,20 +10,25 @@ from .problems import Problem, lbfgs_value_and_grad
 
 
 def minimize(problem: Problem, method: str, *, max_iters: int = 200,
-             step_size: float | None = None, tol: float = 1e-10):
+             step_size: float | None = None, tol: float = 1e-10,
+             fused: bool | str = "auto"):
     """Run one of the paper's methods on a Figure-1-style problem.
 
     `step_size` (initial) mirrors the paper's "all methods were given the
     same initial step size": for fixed-step variants it is used exactly; for
-    backtracking variants it seeds the Lipschitz estimate (L0 = 1/step)."""
+    backtracking variants it seeds the Lipschitz estimate (L0 = 1/step).
+
+    `fused` controls the single-pass fused gradient fast path (one A read
+    per evaluation for gra/lbfgs; see core.optim.first_order): "auto"
+    consults the roofline dispatch, False opts out."""
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}")
     L0 = (1.0 / step_size) if step_size else problem.L
     if method == "lbfgs":
-        x, info = lbfgs(lbfgs_value_and_grad(problem),
+        x, info = lbfgs(lbfgs_value_and_grad(problem, fused=fused),
                         jnp.zeros(problem.linop.in_shape),
                         max_iters=max_iters, tol=tol)
         return x, info
-    opts = TfocsOptions(max_iters=max_iters, tol=tol, L0=L0)
+    opts = TfocsOptions(max_iters=max_iters, tol=tol, L0=L0, fused=fused)
     return minimize_first_order(method, problem.smooth, problem.linop,
                                 problem.prox, x0=None, opts=opts)

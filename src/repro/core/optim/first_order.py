@@ -6,6 +6,27 @@ uniform `minimize_first_order` that takes a *distributed* objective — a
 composite (linop, smooth, prox) triple where the linop owns all cluster
 communication, so the driver-side method code is oblivious to distribution,
 exactly as §3.3 argues.
+
+Fused gradient fast path
+------------------------
+For row-separable smooths (SmoothQuad, SmoothLogLoss — the whole Figure-1
+family) the hot loop can evaluate f(Ax), Aᵀ∇f(Ax) and Ax in ONE streaming
+pass over the distributed matrix (kernels/fusedgrad) instead of the two
+passes of apply + adjoint.  Dispatch, controlled by `TfocsOptions.fused`
+(threaded through `minimize(..., fused=...)`):
+
+  * `gra` and `lbfgs` take the fused path — `gra` because with θ ≡ 1 the
+    next gradient point is this attempt's candidate point, `lbfgs` because
+    every line-search probe is a fresh (value, gradient) pair;
+  * the accelerated variants (`acc*`) keep apply + adjoint: their gradient
+    point is a momentum combination whose image the TFOCS cache already
+    provides for free, so two passes is their floor;
+  * non-separable smooths always fall back to apply + adjoint.
+
+`fused="auto"` (default) additionally consults the roofline comparison in
+launch/costmodel.fused_grad_dispatch; pass `fused=False` to opt out, e.g.
+when comparing against the unfused baseline (bench_optim does exactly
+that and counts one A-pass per backtracking attempt on the fused path).
 """
 from __future__ import annotations
 

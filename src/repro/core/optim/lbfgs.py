@@ -17,7 +17,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.tfocs.solver import TfocsOptions
+from repro.core.tfocs.solver import TfocsOptions, fused_gradient_enabled
+from repro.core.tfocs.smooth import row_separable
 from repro.core.tfocs.prox import ProxZero
 
 Array = jax.Array
@@ -146,7 +147,12 @@ def lbfgs_composite(smooth, linop, prox=None, x0: Array | None = None,
                     opts: TfocsOptions | None = None):
     """Adapter so `minimize_first_order('lbfgs', ...)` takes the same
     composite as the TFOCS-engine methods.  Nonsmooth parts must be smooth
-    for L-BFGS; ProxZero is required (use SmoothHuberL1 for smoothed L1)."""
+    for L-BFGS; ProxZero is required (use SmoothHuberL1 for smoothed L1).
+
+    L-BFGS has no image cache to exploit — every line-search probe is a
+    fresh (value, gradient) at a new point — so a row-separable smooth takes
+    the single-pass fused gradient (one streaming read of A per evaluation
+    instead of apply + adjoint's two); `opts.fused=False` opts out."""
     prox = prox or ProxZero()
     if not isinstance(prox, ProxZero):
         raise ValueError("lbfgs needs a smooth objective; fold the "
@@ -155,8 +161,15 @@ def lbfgs_composite(smooth, linop, prox=None, x0: Array | None = None,
     opts = opts or TfocsOptions()
     x0 = jnp.zeros(linop.in_shape) if x0 is None else x0
 
-    def value_and_grad(x):
-        z = linop.apply(x)
-        return smooth.value(z), linop.adjoint(smooth.grad(z))
+    if fused_gradient_enabled(smooth, linop, getattr(opts, "fused", "auto")):
+        sep = row_separable(smooth)
+
+        def value_and_grad(x):
+            f, g, _ = linop.fused_grad(x, sep)       # ← ONE A-pass
+            return f, g
+    else:
+        def value_and_grad(x):
+            z = linop.apply(x)
+            return smooth.value(z), linop.adjoint(smooth.grad(z))
 
     return lbfgs(value_and_grad, x0, max_iters=opts.max_iters, tol=opts.tol)

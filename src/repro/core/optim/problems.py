@@ -112,14 +112,26 @@ def composite_value(problem: Problem, x: Array) -> Array:
     return problem.smooth.value(z) + problem.prox.value(x)
 
 
-def lbfgs_value_and_grad(problem: Problem):
-    """x-space (value, grad) for L-BFGS, with regularizers smoothed."""
+def lbfgs_value_and_grad(problem: Problem, fused: bool | str = "auto"):
+    """x-space (value, grad) for L-BFGS, with regularizers smoothed.
+
+    The data-fit term goes through the single-pass fused gradient when the
+    smooth is row-separable (it always is for the Figure-1 problems) — one
+    streaming read of A per evaluation instead of apply + adjoint's two;
+    regularizers are x-space vector math on top.  fused=False opts out."""
+    from repro.core.tfocs.solver import fused_gradient_enabled
+    from repro.core.tfocs.smooth import row_separable
     linop, prox = problem.linop, problem.prox
+    use_fused = fused_gradient_enabled(problem.smooth, linop, fused)
+    sep = row_separable(problem.smooth) if use_fused else None
 
     def vg(x):
-        z = linop.apply(x)
-        f = problem.smooth.value(z)
-        g = linop.adjoint(problem.smooth.grad(z))
+        if use_fused:
+            f, g, _ = linop.fused_grad(x, sep)       # ← ONE A-pass
+        else:
+            z = linop.apply(x)
+            f = problem.smooth.value(z)
+            g = linop.adjoint(problem.smooth.grad(z))
         if isinstance(prox, ProxL1):
             reg = SmoothHuberL1(prox.lam)
             f = f + reg.value(x)

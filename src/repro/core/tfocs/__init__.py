@@ -1,15 +1,16 @@
-from .linop import LinopMatrix, LinopIdentity, LinopAdjoint
+from .linop import LinopMatrix, LinopIdentity, LinopAdjoint, CountingLinop
 from .smooth import (SmoothQuad, SmoothLogLoss, SmoothLinear, SmoothHuberL1,
-                     SmoothSum)
+                     SmoothSum, RowSeparable, row_separable)
 from .prox import ProxZero, ProxL1, ProxL2Sq, ProxNonneg, ProxBox
-from .solver import tfocs, TfocsOptions
+from .solver import tfocs, TfocsOptions, fused_gradient_enabled
 from .lp import solve_smoothed_lp
 from .lasso import solve_lasso
 
 __all__ = [
-    "LinopMatrix", "LinopIdentity", "LinopAdjoint",
+    "LinopMatrix", "LinopIdentity", "LinopAdjoint", "CountingLinop",
     "SmoothQuad", "SmoothLogLoss", "SmoothLinear", "SmoothHuberL1",
-    "SmoothSum",
+    "SmoothSum", "RowSeparable", "row_separable",
     "ProxZero", "ProxL1", "ProxL2Sq", "ProxNonneg", "ProxBox",
-    "tfocs", "TfocsOptions", "solve_smoothed_lp", "solve_lasso",
+    "tfocs", "TfocsOptions", "fused_gradient_enabled",
+    "solve_smoothed_lp", "solve_lasso",
 ]

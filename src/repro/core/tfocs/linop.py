@@ -9,15 +9,18 @@ the operators own the collectives.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Protocol
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.distmat.rowmatrix import RowMatrix
+from repro.core.distmat.sparserow import SparseRowMatrix
 
 Array = jax.Array
+
+_DIST = (RowMatrix, SparseRowMatrix)
 
 
 class LinearOperator(Protocol):
@@ -30,8 +33,9 @@ class LinearOperator(Protocol):
 
 @dataclass(frozen=True)
 class LinopMatrix:
-    """y = A x for a distributed RowMatrix (or a plain local matrix)."""
-    A: RowMatrix | Array
+    """y = A x for a distributed RowMatrix / SparseRowMatrix (or a plain
+    local matrix)."""
+    A: RowMatrix | SparseRowMatrix | Array
 
     @property
     def in_shape(self) -> tuple[int, ...]:
@@ -43,17 +47,50 @@ class LinopMatrix:
         # padded consistently; `pad_data` below does this for callers.
         if isinstance(self.A, RowMatrix):
             return (self.A.rows.shape[0],)
+        if isinstance(self.A, SparseRowMatrix):
+            return (self.A.m_pad,)
         return (self.A.shape[0],)
 
     def apply(self, x: Array) -> Array:
-        if isinstance(self.A, RowMatrix):
+        if isinstance(self.A, _DIST):
             return self.A.matvec(x)
         return self.A @ x
 
     def adjoint(self, y: Array) -> Array:
-        if isinstance(self.A, RowMatrix):
+        if isinstance(self.A, _DIST):
             return self.A.rmatvec(y)
         return self.A.T @ y
+
+    def fused_grad(self, x: Array, sep) -> tuple[Array, Array, Array]:
+        """(f(Ax), Aᵀ∇f(Ax), Ax) in one streaming pass over A for a
+        row-separable smooth (kernels/fusedgrad) — half the HBM traffic of
+        apply + adjoint.  `sep` is the smooth's RowSeparable form."""
+        if isinstance(self.A, _DIST):
+            return self.A.fused_grad(x, sep)
+        from repro.kernels import ops as _ops
+        t = self.pad_data(jnp.asarray(sep.target))
+        w = jnp.ones_like(t) if sep.weights is None \
+            else self.pad_data(jnp.asarray(sep.weights))
+        return _ops.fused_grad(jnp.asarray(self.A), jnp.asarray(x), t, w,
+                               loss=sep.kind)
+
+    def operand_dtype(self):
+        """dtype of the matrix operand (the costmodel dispatch input)."""
+        A = self.A
+        if isinstance(A, RowMatrix):
+            return A.rows.dtype
+        if isinstance(A, SparseRowMatrix):
+            return A.data.dtype
+        return jnp.asarray(A).dtype
+
+    def row_shards(self) -> int:
+        """Number of row shards the operand is split into — the fused-vs-
+        unfused roofline is a per-shard decision, so the dispatch divides
+        the global row count by this."""
+        from repro.core.distmat import types as _T
+        if isinstance(self.A, _DIST):
+            return _T.axes_size(self.A.mesh, self.A.row_axes)
+        return 1
 
     def pad_data(self, b: Array) -> Array:
         """Pad a data-space vector to the padded row count."""
@@ -63,7 +100,7 @@ class LinopMatrix:
     def row_weights(self) -> Array:
         """{0,1} mask of true rows — weights for the smooth component so the
         padding rows of the distributed layout contribute nothing."""
-        if isinstance(self.A, RowMatrix):
+        if isinstance(self.A, _DIST):
             return self.A._row_mask()
         return jnp.ones(self.out_shape, jnp.float32)
 
@@ -91,6 +128,60 @@ class LinopIdentity:
 
     def row_weights(self) -> Array:
         return jnp.ones((self.n,), jnp.float32)
+
+
+@dataclass
+class CountingLinop:
+    """Wraps an operator and counts its A-passes (apply / adjoint /
+    fused_grad — each is exactly one streaming pass over A).
+
+    The counters increment at *trace* time.  Solver loops are
+    `lax.while_loop`s whose bodies trace exactly once, so the counts are
+    the structural per-iteration pass counts — deterministic, independent
+    of runtime iteration counts, and therefore non-flaky (bench_optim and
+    the perf-smoke test rely on this)."""
+    base: object
+    counts: dict = field(default_factory=lambda: {
+        "apply": 0, "adjoint": 0, "fused_grad": 0})
+
+    @property
+    def in_shape(self):
+        return self.base.in_shape
+
+    @property
+    def out_shape(self):
+        return self.base.out_shape
+
+    @property
+    def A(self):
+        return getattr(self.base, "A", None)
+
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def apply(self, x: Array) -> Array:
+        self.counts["apply"] += 1
+        return self.base.apply(x)
+
+    def adjoint(self, y: Array) -> Array:
+        self.counts["adjoint"] += 1
+        return self.base.adjoint(y)
+
+    def fused_grad(self, x: Array, sep):
+        self.counts["fused_grad"] += 1
+        return self.base.fused_grad(x, sep)
+
+    def operand_dtype(self):
+        return self.base.operand_dtype()
+
+    def row_shards(self) -> int:
+        return self.base.row_shards()
+
+    def pad_data(self, b: Array) -> Array:
+        return self.base.pad_data(b)
+
+    def row_weights(self) -> Array:
+        return self.base.row_weights()
 
 
 @dataclass(frozen=True)

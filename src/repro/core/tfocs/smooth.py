@@ -21,8 +21,33 @@ Array = jax.Array
 
 
 class SmoothFunction(Protocol):
+    """value/grad are required; `as_row_separable` is optional — a smooth
+    that implements it advertises f(z) = Σᵢ wᵢ ℓ(zᵢ, tᵢ) structure, which
+    lets the distributed layer run the single-pass fused gradient kernel
+    (kernels/fusedgrad) instead of a separate apply + adjoint."""
+
     def value(self, z: Array) -> Array: ...
     def grad(self, z: Array) -> Array: ...
+
+
+@dataclass(frozen=True)
+class RowSeparable:
+    """Static description of a row-separable smooth: f(z) = Σᵢ wᵢ ℓ(zᵢ, tᵢ).
+
+    `kind` is the fused-kernel loss id ("quad" | "logistic"), `target` the
+    per-row data (b for quad, ±1 labels for logistic), `weights` the
+    per-row weights (None ⇒ all-ones; distributed layouts substitute their
+    padding-row mask)."""
+    kind: str
+    target: Array
+    weights: Array | None
+
+
+def row_separable(smooth) -> RowSeparable | None:
+    """The smooth's row-separable form, or None when it has none (the fused
+    gradient path then falls back to apply + adjoint)."""
+    fn = getattr(smooth, "as_row_separable", None)
+    return fn() if fn is not None else None
 
 
 def _w(weights, z):
@@ -43,6 +68,9 @@ class SmoothQuad:
     def grad(self, z: Array) -> Array:
         return _w(self.weights, z) * (z - self.b)
 
+    def as_row_separable(self) -> RowSeparable:
+        return RowSeparable("quad", self.b, self.weights)
+
 
 @dataclass(frozen=True)
 class SmoothLogLoss:
@@ -59,6 +87,9 @@ class SmoothLogLoss:
     def grad(self, z: Array) -> Array:
         w = _w(self.weights, z)
         return w * (-self.y) * jax.nn.sigmoid(-self.y * z)
+
+    def as_row_separable(self) -> RowSeparable:
+        return RowSeparable("logistic", self.y, self.weights)
 
 
 @dataclass(frozen=True)

@@ -11,7 +11,18 @@ The linear-operator caching is the paper's "the optimizer may evaluate the
 (expensive) linear component and cache the result": the iterates x̄, z carry
 their images A x̄, A z, so  A y = (1−θ)A x̄ + θA z  costs no matvec, and each
 iteration performs exactly ONE apply and ONE adjoint (per backtracking
-attempt) — the minimum possible.
+attempt) — the minimum possible *for the cached accelerated scheme*.
+
+For non-accelerated runs over a row-separable smooth there is a faster
+floor: with θ ≡ 1 the gradient point of the next attempt IS the candidate
+point of this one, so the single-pass fused gradient kernel
+(kernels/fusedgrad) — which computes f(Ax), Aᵀ∇f(Ax) and Ax in one
+streaming read of A — covers the whole attempt: ONE A-pass instead of an
+apply + an adjoint.  `fused="auto"` (TfocsOptions) takes that path when the
+smooth advertises separability, the operator supports it, and the roofline
+dispatch (launch/costmodel.fused_grad_dispatch) prices it ahead; accelerated
+variants keep the cached two-pass scheme (their gradient point is a moving
+combination whose image is already free).  `fused=False` opts out.
 
 One engine serves the whole Figure-1 family:
   accel=False                         → `gra`   (proximal gradient)
@@ -28,6 +39,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .smooth import row_separable
+
 Array = jax.Array
 
 
@@ -43,6 +56,52 @@ class TfocsOptions:
     accel: bool = True
     backtracking: bool = True
     restart: bool = False        # O'Donoghue–Candès gradient-test restart
+    fused: bool | str = "auto"   # single-pass fused gradient (False opts out)
+
+
+def _fused_capable(linop) -> bool:
+    """True when the operator — and, for delegating wrappers like
+    CountingLinop (whose methods exist unconditionally and just forward to
+    `.base`), the whole wrapped chain — implements fused_grad."""
+    if not hasattr(linop, "fused_grad"):
+        return False
+    base = getattr(linop, "base", None)
+    return True if base is None else _fused_capable(base)
+
+
+def fused_gradient_enabled(smooth, linop, fused: bool | str = "auto",
+                           *, needs_theta_one: bool = False,
+                           accel: bool = False) -> bool:
+    """Whether a (smooth, linop) composite should take the single-pass fused
+    gradient path.  Structure gates first (row-separable smooth, a
+    fused-capable operator, and — for the TFOCS engine — no acceleration,
+    since the cached-image trick already makes the momentum point's
+    value/grad free); `"auto"` then consults the roofline dispatch."""
+    if fused is False or (needs_theta_one and accel):
+        return False
+    sep = row_separable(smooth)
+    ok = sep is not None and _fused_capable(linop)
+    if fused is True:
+        if not ok:
+            raise ValueError("fused=True needs a row-separable smooth and a "
+                             "fused-capable linop (LinopMatrix)")
+        return True
+    if fused != "auto":
+        raise ValueError(f"fused must be True, False or 'auto', got {fused!r}")
+    if not ok:
+        return False
+    try:
+        m, n = int(linop.out_shape[0]), int(linop.in_shape[0])
+        dtype = linop.operand_dtype() if hasattr(linop, "operand_dtype") \
+            else jnp.float32
+        # The roofline compares per-shard streaming passes, so price the
+        # shard, not the global row count (lane-padding waste is per shard).
+        shards = linop.row_shards() if hasattr(linop, "row_shards") else 1
+    except (AttributeError, TypeError):
+        return True
+    from repro.launch import costmodel as _cm
+    return _cm.fused_grad_dispatch(max(m // max(shards, 1), 1), n,
+                                   dtype).use_fused
 
 
 class TfocsState(NamedTuple):
@@ -73,9 +132,105 @@ class _Attempt(NamedTuple):
     tries: Array
 
 
+class _FusedState(NamedTuple):
+    # No image cache: the backtracking test collapses to x-space and the
+    # kernel returns A x⁺ fresh each attempt, so (unlike TfocsState) no
+    # (m,)-vector rides the loop carry.
+    x: Array
+    f: Array                     # smooth value at x (carried, no recompute)
+    g: Array                     # x-space gradient at x (carried)
+    L: Array
+    k: Array
+    hist: Array
+    done: Array
+    n_backtracks: Array
+
+
+class _FusedAttempt(NamedTuple):
+    L: Array
+    x: Array
+    f: Array
+    g: Array
+    ok: Array
+    tries: Array
+
+
+def _tfocs_fused(smooth, linop, prox, x0: Array, opts: TfocsOptions,
+                 sep) -> tuple[Array, dict]:
+    """Non-accelerated engine over the fused single-pass gradient.
+
+    With θ ≡ 1 the candidate point x⁺ = prox(x − g/L) is also the next
+    gradient point, so `linop.fused_grad(x⁺)` — one streaming pass over A —
+    yields everything an attempt needs: f(Ax⁺) for the backtracking test
+    (⟨∇f(Ay), A x⁺ − A y⟩ collapses to the x-space ⟨g, x⁺ − x⟩), the next
+    gradient, and the image A x⁺.  Exactly ONE A-pass per backtracking
+    attempt, against apply + adjoint = two on the unfused path; the math is
+    identical, so the iterates match the unfused engine to float tolerance.
+    """
+    backtracking = opts.backtracking and opts.Lexact is None
+    L_init = jnp.asarray(opts.Lexact if opts.Lexact is not None else opts.L0,
+                         jnp.float32)
+
+    def attempt_once(a: _FusedAttempt, state: _FusedState) -> _FusedAttempt:
+        step = 1.0 / a.L
+        x_new = prox.prox(state.x - step * state.g, step)
+        f_new, g_new, _ = linop.fused_grad(x_new, sep)       # ← ONE A-pass
+        dx = x_new - state.x
+        rhs = state.f + jnp.vdot(state.g, dx) + 0.5 * a.L * jnp.vdot(dx, dx)
+        ok = f_new <= rhs + 1e-12 * jnp.abs(state.f)
+        return a._replace(x=x_new, f=f_new, g=g_new, ok=ok,
+                          tries=a.tries + 1)
+
+    def outer(state: _FusedState) -> _FusedState:
+        L0k = state.L * (opts.beta if backtracking else 1.0)
+        init = _FusedAttempt(L=L0k, x=state.x, f=state.f,
+                             g=state.g, ok=jnp.asarray(False),
+                             tries=jnp.int32(0))
+        first = attempt_once(init, state)
+
+        if backtracking:
+            def bt_cond(a: _FusedAttempt):
+                return (~a.ok) & (a.tries < opts.max_backtracks)
+
+            def bt_body(a: _FusedAttempt):
+                return attempt_once(a._replace(L=a.L * opts.alpha), state)
+
+            acc = jax.lax.while_loop(bt_cond, bt_body, first)
+        else:
+            acc = first
+
+        obj = acc.f + prox.value(acc.x)
+        hist = state.hist.at[state.k].set(obj)
+        dx = acc.x - state.x
+        rel = jnp.linalg.norm(dx) / jnp.maximum(1.0, jnp.linalg.norm(acc.x))
+        return _FusedState(
+            x=acc.x, f=acc.f, g=acc.g, L=acc.L,
+            k=state.k + 1, hist=hist, done=rel < opts.tol,
+            n_backtracks=state.n_backtracks + acc.tries - 1)
+
+    def cond(state: _FusedState):
+        return (~state.done) & (state.k < opts.max_iters)
+
+    f0, g0, _ = linop.fused_grad(x0, sep)            # ← ONE A-pass to seed
+    init = _FusedState(
+        x=x0, f=f0, g=g0, L=L_init, k=jnp.int32(0),
+        hist=jnp.full((opts.max_iters,), jnp.nan, jnp.float32),
+        done=jnp.asarray(False), n_backtracks=jnp.int32(0))
+    final = jax.lax.while_loop(cond, outer, init)
+    info = {"iterations": final.k, "history": final.hist,
+            "n_backtracks": final.n_backtracks,
+            "n_restarts": jnp.int32(0), "fused": True,
+            "objective": final.hist[jnp.maximum(final.k - 1, 0)]}
+    return final.x, info
+
+
 def tfocs(smooth, linop, prox, x0: Array,
           opts: TfocsOptions = TfocsOptions()) -> tuple[Array, dict]:
     """Run the solver; returns (x*, info dict with per-iteration history)."""
+    if fused_gradient_enabled(smooth, linop, opts.fused,
+                              needs_theta_one=True, accel=opts.accel):
+        return _tfocs_fused(smooth, linop, prox, x0, opts,
+                            row_separable(smooth))
     backtracking = opts.backtracking and opts.Lexact is None
     L_init = jnp.asarray(opts.Lexact if opts.Lexact is not None else opts.L0,
                          jnp.float32)
@@ -169,6 +324,6 @@ def tfocs(smooth, linop, prox, x0: Array,
     final = jax.lax.while_loop(cond, outer, init)
     info = {"iterations": final.k, "history": final.hist,
             "n_backtracks": final.n_backtracks,
-            "n_restarts": final.n_restarts,
+            "n_restarts": final.n_restarts, "fused": False,
             "objective": final.hist[jnp.maximum(final.k - 1, 0)]}
     return final.x, info

@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the paper's compute hot-spots (§4 of the paper):
 GEMM (the BLAS benchmark), tall-skinny Gram (the SVD/DIMSUM hotspot),
 streaming cross-Gram (the randomized-SVD sketch projection), block-sparse
-matmul (§4.2 sparse kernels, adapted CCS→BSR for the MXU), and fused flash
-attention (the LM-architecture hotspot).
+matmul (§4.2 sparse kernels, adapted CCS→BSR for the MXU), the single-pass
+fused composite gradient (the §3.3 optimizer hot path: f(Ax), Aᵀ∇f and Ax
+in one A read), and fused flash attention (the LM-architecture hotspot).
 
 Import `repro.kernels.ops` for the padded/dispatching public wrappers;
 `repro.kernels.ref` holds the pure-jnp oracles."""

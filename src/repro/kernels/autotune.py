@@ -193,6 +193,38 @@ def _randsketch_cost(b, d, dtype):
     return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
 
 
+def _fusedgrad_vmem(b, d, dtype):
+    db = _itemsize(dtype)
+    np_ = _rup(d["n"], LANE)
+    return (2 * b["bm"] * np_ * db       # A row-block stream, double-buffered
+            + np_ * db                   # resident x row
+            + 4 * 2 * b["bm"] * db       # t, w, z (1 × bm) strips
+            + np_ * 4 + np_ * 4)         # g accumulator + g out (f32)
+
+
+def _fusedgrad_gen(d, dtype):
+    # bm is both the A-block sublane count and the lane width of the t/w/z
+    # vector strips, so candidates stay lane-aligned (multiples of 128).
+    out = []
+    for bm in _steps(d["m"], LANE, (128, 256, 512, 1024)):
+        b = {"bm": bm}
+        if _fusedgrad_vmem(b, d, dtype) <= VMEM_BUDGET:
+            out.append(b)
+    return out
+
+
+def _fusedgrad_cost(b, d, dtype):
+    """One streaming pass over A feeding two MXU contractions (z = x Aᵀ,
+    g += r A) — the whole point vs apply+adjoint is the single A-read, so
+    HBM traffic is m·n·db once plus vector noise."""
+    db = _itemsize(dtype)
+    mp, np_ = _rup(d["m"], b["bm"]), _rup(d["n"], LANE)
+    compute = 4.0 * mp * np_ / (_peak_flops(dtype) * _util(b["bm"]))
+    hbm = mp * np_ * db + (2 * np_ + 3 * mp) * db   # ONE A pass + x,t,w,z,g
+    steps = mp // b["bm"]
+    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+
+
 def _flash_vmem(b, d, dtype):
     db = _itemsize(dtype)
     dp = _rup(d["d"], LANE)
@@ -318,6 +350,9 @@ KERNELS: dict[str, KernelSpec] = {
                              {"bm": 512, "bn": 512},
                              _randsketch_gen, _randsketch_vmem,
                              _randsketch_cost),
+    "fusedgrad": KernelSpec(("bm",), ("m", "n"), {"bm": 512},
+                            _fusedgrad_gen, _fusedgrad_vmem,
+                            _fusedgrad_cost),
     "flash_attention": KernelSpec(("bq", "bk"), ("sq", "sk", "d", "causal"),
                                   {"bq": 256, "bk": 256},
                                   _flash_gen, _flash_vmem, _flash_cost),

@@ -16,11 +16,15 @@ Three kernels share the layout:
   * ``bsr_matmul``  — y = A @ X   (SpMM, gathers X blocks by column index);
   * ``bsr_matvec``  — y = A @ x   (SpMV: x stored block-partitioned, the
     block product is a (1 × bs)·(bs × bs) row-vector matmul on the MXU);
-  * ``bsr_rmatmul`` — y = Aᵀ @ X  (transpose-multiply: the kernel emits one
-    per-block partial product Aᵢⱼᵀ Xᵢ — all of the MXU work — and the
-    block-column scatter-add is a segment_sum outside the kernel, because
-    accumulating into an output window revisited at non-adjacent grid steps
-    is not something the Pallas pipeline supports).
+  * ``bsr_rmatmul`` — y = Aᵀ @ X  (transpose-multiply: the scatter-add over
+    block columns is fused into the kernel — the full (nbc × bs × nx)
+    accumulator stays resident in VMEM and each per-block partial Aᵢⱼᵀ Xᵢ
+    is added at the dynamic offset cols[i, slot] as soon as it is computed.
+    The grid is sequential ("arbitrary" on both axes), so the read-modify-
+    write is race-free and no HBM partials buffer is needed.  When the
+    resident accumulator would overflow the VMEM budget (n·nx too large)
+    the kernel falls back to emitting (nbr·ell, bs, nx) partials + one XLA
+    segment_sum — the old scheme, kept for the wide regime).
 
 The ``*_jnp`` variants are structure-exploiting gather/einsum forms of the
 same contractions (flops ∝ stored blocks, not m·n) — the off-TPU dispatch
@@ -187,9 +191,37 @@ def bsr_matvec(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
     return out.reshape(m)
 
 
-def _bsr_rmm_kernel(a_ref, x_ref, o_ref):
+def _bsr_rmm_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, nbr: int,
+                    ell: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c = cols_ref[i * ell + j]
+    contrib = jnp.dot(a_ref[0].T, x_ref[...],
+                      preferred_element_type=jnp.float32)
+    cur = pl.load(acc_ref, (pl.ds(c, 1), slice(None), slice(None)))
+    pl.store(acc_ref, (pl.ds(c, 1), slice(None), slice(None)),
+             cur + contrib[None])
+
+    @pl.when((i == nbr - 1) & (j == ell - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _bsr_rmm_partials_kernel(a_ref, x_ref, o_ref):
     o_ref[...] = jnp.dot(a_ref[0].T, x_ref[...],
                          preferred_element_type=jnp.float32)[None]
+
+
+# Double-buffered streams + the resident accumulator + the full output copy
+# must fit VMEM for the fused-scatter kernel to be legal.
+def _rmm_fused_vmem(nbc: int, bs: int, nx: int, itemsize: int) -> int:
+    return (2 * bs * bs * itemsize + 2 * bs * nx * itemsize   # A, X streams
+            + nbc * bs * nx * 4                               # f32 acc
+            + nbc * bs * nx * itemsize)                       # out copy
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -198,11 +230,19 @@ def bsr_rmatmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
 
     The transpose scatters: block (i, slot) contributes Aᵢⱼᵀ Xᵢ to output
     block-row j = cols[i, slot], and several grid steps can hit the same j.
-    The kernel therefore emits the (nbr·ell, bs, nx) partial products (the
-    MXU-bound part) and the scatter-add over block columns happens as one
-    XLA segment_sum — padding slots carry zero data, so their contribution
-    to block-row 0 vanishes.
+    The scatter-add is fused into the kernel: the whole (nbc, bs, nx)
+    accumulator is VMEM-resident and each partial is added at its dynamic
+    block-column offset the moment the MXU produces it (the sequential grid
+    makes the read-modify-write safe).  Padding slots carry zero data, so
+    their contribution to block-row 0 vanishes.
+
+    The resident accumulator scales with n·nx, so when it cannot fit the
+    VMEM budget (wide matrix × wide right-hand side — sparserow strips nx
+    at 512, but n is unbounded) the kernel falls back to the emit-partials
+    form: one (nbr·ell, bs, nx) HBM buffer of per-block products plus an
+    XLA segment_sum over block columns.
     """
+    from . import autotune as _at
     m, n = a.shape
     assert x.shape[0] == m, (a.shape, x.shape)
     nx = x.shape[1]
@@ -211,22 +251,45 @@ def bsr_rmatmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
     flat = a.data.reshape(nbr * ell, bs, bs)
     cols = a.cols.reshape(-1)
 
-    partial = pl.pallas_call(
-        _bsr_rmm_kernel,
+    if _rmm_fused_vmem(nbc, bs, nx, x.dtype.itemsize) > _at.VMEM_BUDGET:
+        partial = pl.pallas_call(
+            _bsr_rmm_partials_kernel,
+            grid=(nbr, ell),
+            in_specs=[
+                pl.BlockSpec((1, bs, bs), lambda i, j: (i * ell + j, 0, 0)),
+                pl.BlockSpec((bs, nx), lambda i, j: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bs, nx),
+                                   lambda i, j: (i * ell + j, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((nbr * ell, bs, nx), jnp.float32),
+            compiler_params=compat.CompilerParams(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+            name="repro_bsr_rmatmul_partials",
+        )(flat, x)
+        out = jax.ops.segment_sum(partial, cols, num_segments=nbc)
+        return out.reshape(n, nx).astype(x.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(nbr, ell),
         in_specs=[
-            pl.BlockSpec((1, bs, bs), lambda i, j: (i * ell + j, 0, 0)),
-            pl.BlockSpec((bs, nx), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
+            pl.BlockSpec((bs, nx), lambda i, j, cols: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bs, nx), lambda i, j: (i * ell + j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((nbr * ell, bs, nx), jnp.float32),
+        out_specs=pl.BlockSpec((nbc, bs, nx), lambda i, j, cols: (0, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((nbc, bs, nx), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_bsr_rmm_kernel, nbr=nbr, ell=ell),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nbc, bs, nx), x.dtype),
         compiler_params=compat.CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
         name="repro_bsr_rmatmul",
-    )(flat, x)
-    out = jax.ops.segment_sum(partial, cols, num_segments=nbc)
-    return out.reshape(n, nx).astype(x.dtype)
+    )(cols, flat, x)
+    return out.reshape(n, nx)
 
 
 # -- structure-exploiting jnp forms (off-TPU dispatch targets) ----------------

@@ -23,6 +23,7 @@ from . import gemm as _gemm
 from . import tsgram as _tsgram
 from . import randsketch as _randsketch
 from . import bsr as _bsr
+from . import fusedgrad as _fg
 from . import flash_attention as _fa
 from . import selective_scan as _ss
 from . import ref as _ref
@@ -128,6 +129,58 @@ def bsr_rmatmul(a: "_bsr.BlockELL", x: Array, *,
     xp = _pad_to(x, 1, 128)
     out = _bsr.bsr_rmatmul(a, xp, interpret=not _on_tpu())
     return out[:, :nx]
+
+
+def fused_grad(a: Array, x: Array, target: Array, weights: Array, *,
+               loss: str, bm: int | None = None, tune: str = "auto",
+               force_pallas: bool = False) -> tuple[Array, Array, Array]:
+    """(f, g, z) = (Σᵢ wᵢ ℓ((Ax)ᵢ, tᵢ), Aᵀ(w ∘ ℓ'(Ax, t)), Ax) for a dense
+    row shard, reading A from HBM exactly once (kernels/fusedgrad).
+    ``loss`` ∈ {"quad", "logistic"}.  Returns f float32 scalar, g (n,) in
+    x.dtype, z (m,) row-space in float32."""
+    if loss not in _fg.LOSSES:
+        raise ValueError(f"loss must be one of {_fg.LOSSES}, got {loss!r}")
+    m, n = a.shape
+    if not (_on_tpu() or force_pallas):
+        f, g, z = _fg.fused_grad_jnp(a, x, target, weights, loss=loss)
+        return f, g.astype(x.dtype), z
+    cfg = _tune.resolve("fusedgrad", {"m": m, "n": n}, a.dtype, {"bm": bm},
+                        tune=tune)
+    bm_ = min(cfg["bm"], _rup(m, 128))
+    ap = _pad_to(_pad_to(a, 0, bm_), 1, 128)
+    xp = _pad_to(x[None, :], 1, 128)
+    # Padding rows get weight 0, so they contribute nothing to f or g.
+    tp = _pad_to(target[None, :], 1, bm_)
+    wp = _pad_to(weights[None, :], 1, bm_)
+    f, g, z = _fg.fused_grad(ap, xp, tp, wp, loss=loss, bm=bm_,
+                             interpret=not _on_tpu())
+    return f[0, 0], g[0, :n].astype(x.dtype), z[0, :m]
+
+
+def fused_grad_bsr(a: "_bsr.BlockELL", x: Array, target: Array,
+                   weights: Array, *, loss: str,
+                   force_pallas: bool = False) -> tuple[Array, Array, Array]:
+    """Fused (f, g, z) for a BlockELL shard — every stored block read once.
+    Off-TPU dispatch goes to the gather/einsum structured form (flops ∝
+    stored blocks); x/target/weights already conform to the padded dims.
+    When the fused kernel's resident working set (x + gradient accumulator,
+    ∝ n) cannot fit VMEM, falls back to a two-pass composition of the
+    VMEM-safe BSR kernels (SpMV, residual on host-side jnp, transpose-
+    multiply) — one extra read of the stored blocks, but it always runs."""
+    if loss not in _fg.LOSSES:
+        raise ValueError(f"loss must be one of {_fg.LOSSES}, got {loss!r}")
+    if not (_on_tpu() or force_pallas):
+        f, g, z = _fg.fused_grad_bsr_jnp(a, x, target, weights, loss=loss)
+        return f, g.astype(x.dtype), z
+    if _fg.fused_grad_bsr_vmem(a) > _tune.VMEM_BUDGET:
+        z = bsr_matvec(a, x, force_pallas=force_pallas)
+        f, r = _fg.row_loss_grad(z, target, weights, loss)
+        g = bsr_rmatmul(a, r.astype(x.dtype)[:, None],
+                        force_pallas=force_pallas)[:, 0]
+        return f, g.astype(x.dtype), z.astype(jnp.float32)
+    f, g, z = _fg.fused_grad_bsr(a, x, target, weights, loss=loss,
+                                 interpret=not _on_tpu())
+    return f, g.astype(x.dtype), z
 
 
 def bsr_block_size(m: int, n: int, nnz: int, *, nx: int = 128,

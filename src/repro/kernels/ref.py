@@ -44,6 +44,29 @@ def bsr_rmatmul_ref(a, x: Array) -> Array:
                    preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def fused_grad_ref(a, x: Array, target: Array, weights: Array, *,
+                   loss: str) -> tuple[Array, Array, Array]:
+    """(f, g, z) oracle for the fused composite gradient — independent
+    two-pass math in float64-free float32 (densifies BlockELL operands)."""
+    if hasattr(a, "to_dense"):
+        a = a.to_dense()
+    af = a.astype(jnp.float32)
+    z = af @ x.astype(jnp.float32)
+    t = target.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    if loss == "quad":
+        d = z - t
+        f = 0.5 * jnp.sum(w * d * d)
+        r = w * d
+    elif loss == "logistic":
+        mz = -t * z
+        f = jnp.sum(w * jnp.logaddexp(0.0, mz))
+        r = w * (-t) * jax.nn.sigmoid(mz)
+    else:
+        raise ValueError(loss)
+    return f, af.T @ r, z
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *,
                         scale: float | None = None, causal: bool = True,
                         q_heads_per_kv: int = 1) -> Array:

@@ -168,3 +168,57 @@ def sparse_dispatch(m: int, n: int, nx: int, ell: int, bs: int,
     import jax.numpy as jnp
     return _sparse_dispatch_cached(int(m), int(n), int(max(nx, 1)), int(ell),
                                    int(bs), jnp.dtype(dtype).name)
+
+
+# -- fused-vs-unfused composite gradient (tfocs/lbfgs hot path) ---------------
+#
+# One (value, gradient) evaluation of f(Ax) either streams A twice (apply
+# z = A x, then adjoint g = Aᵀ∇f(z)) or once through the fused kernel
+# (kernels/fusedgrad), which evaluates the row-local residual on-chip
+# between the two products.  Both sides are priced with the autotuner's
+# roofline constants; on an HBM-bound shard the fused side models at ~half
+# the time, and the solvers' fused="auto" consults this decision.
+
+@dataclasses.dataclass(frozen=True)
+class FusedGradDispatch:
+    fused_s: float        # modeled per-shard seconds, single fused pass
+    unfused_s: float      # modeled per-shard seconds, apply + adjoint
+    use_fused: bool
+
+
+@functools.lru_cache(maxsize=512)
+def _fused_grad_dispatch_cached(m: int, n: int,
+                                dtype_name: str) -> FusedGradDispatch:
+    import jax.numpy as jnp
+    from repro.kernels import autotune as at
+
+    def _rup(x, mult):
+        return (x + mult - 1) // mult * mult
+
+    dtype = jnp.dtype(dtype_name)
+    db = dtype.itemsize
+    fused_s = at.rank("fusedgrad", {"m": m, "n": n}, dtype)[0][0]
+    # Unfused = two independent streaming passes (apply, adjoint), each
+    # priced on its OWN layout: matvec-style kernels tile m on sublane
+    # boundaries, while the fused kernel's t/w/z vector strips force
+    # lane-aligned (128-row) blocks and pad m accordingly.  That asymmetry
+    # is the real trade: one A read vs two, against lane-padding waste —
+    # for tiny row shards (m ≪ 128) two sublane-padded passes move fewer
+    # bytes than one lane-padded fused pass and the dispatch says so.
+    mp = _rup(m, at.sublane(dtype))
+    np_ = _rup(n, at.LANE)
+    compute = 2.0 * mp * np_ / at.MXU_FLOPS.get(db, at.MXU_FLOPS[4])
+    bm = min(512, mp)
+    one_pass = (max(compute, (mp * np_ + mp + np_) * db / at.HBM_BW)
+                + -(-mp // bm) * at.STEP_OVERHEAD_S)
+    unfused_s = 2.0 * one_pass
+    return FusedGradDispatch(fused_s=fused_s, unfused_s=unfused_s,
+                             use_fused=fused_s <= unfused_s)
+
+
+def fused_grad_dispatch(m: int, n: int, dtype="float32") -> FusedGradDispatch:
+    """Fused single-pass gradient vs apply+adjoint (two A reads) for an
+    (m × n) operator shard — pure Python over static shapes, trace-safe."""
+    import jax.numpy as jnp
+    return _fused_grad_dispatch_cached(int(m), int(n),
+                                       jnp.dtype(dtype).name)

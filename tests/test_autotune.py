@@ -14,6 +14,9 @@ KNOB_KIND = {
     "gemm": {"bm": "sublane", "bn": "lane", "bk": "lane"},
     "tsgram": {"bm": "sublane"},
     "randsketch": {"bm": "sublane", "bn": "lane"},
+    # fusedgrad's bm doubles as the lane width of its t/w/z vector strips,
+    # so its candidates are lane-aligned.
+    "fusedgrad": {"bm": "lane"},
     "flash_attention": {"bq": "sublane", "bk": "lane"},
     "selective_scan": {"q": "sublane"},
 }
@@ -22,6 +25,7 @@ DIMS = {
     "gemm": {"m": 1000, "k": 700, "n": 900},
     "tsgram": {"m": 20000, "n": 300},
     "randsketch": {"m": 20000, "n": 2000, "r": 72},
+    "fusedgrad": {"m": 10000, "n": 1024},
     "flash_attention": {"sq": 2048, "sk": 2048, "d": 128, "causal": 1},
     "selective_scan": {"s": 4096, "d": 768, "n": 16},
 }

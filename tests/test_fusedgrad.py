@@ -1,0 +1,303 @@
+"""Single-pass fused gradient: kernel parity, distmat wiring, solver
+structure (exactly one A-pass per backtracking attempt), and the
+fused-vs-unfused solution parity the acceptance bar demands."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distmat import RowMatrix, SparseRowMatrix
+from repro.core.distmat import types as T
+from repro.core.optim import make_problem, minimize, composite_value
+from repro.core.tfocs import (CountingLinop, LinopMatrix, ProxZero,
+                              SmoothHuberL1, SmoothLogLoss, SmoothQuad,
+                              TfocsOptions, fused_gradient_enabled,
+                              row_separable, tfocs)
+from repro.kernels import ops, ref
+from repro.kernels.bsr import BlockELL
+
+
+def _data(m, n, dtype, seed=0, weighted=True):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, n)).astype(dtype)
+    x = rng.normal(size=n).astype(dtype)
+    t = rng.normal(size=m).astype(np.float32)
+    w = (rng.random(m).astype(np.float32) if weighted
+         else np.ones(m, np.float32))
+    return (jnp.asarray(a), jnp.asarray(x), jnp.asarray(t), jnp.asarray(w))
+
+
+# bf16 tolerance is wide: the kernel (like the unfused adjoint) feeds the
+# MXU bf16 operands, so the residual is quantized before the second product
+# and cancellation amplifies the quantization on small gradient entries.
+TOL = {np.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=8e-2, atol=8e-2)}
+
+
+class TestKernelParity:
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("loss", ["quad", "logistic"])
+    @pytest.mark.parametrize("m,n", [(96, 48), (130, 70)])  # multi-tile+pad
+    def test_dense_kernel_matches_oracle(self, dtype, loss, m, n):
+        a, x, t, w = _data(m, n, dtype, seed=m + n)
+        if loss == "logistic":
+            t = jnp.sign(t) + (t == 0)
+        got = ops.fused_grad(a, x, t, w, loss=loss, force_pallas=True)
+        want = ref.fused_grad_ref(a, x, t, w, loss=loss)
+        tol = TOL[dtype]
+        np.testing.assert_allclose(got[0], want[0], **tol)
+        np.testing.assert_allclose(np.asarray(got[1], np.float32),
+                                   np.asarray(want[1], np.float32), **tol)
+        np.testing.assert_allclose(got[2], want[2], **tol)
+
+    @pytest.mark.parametrize("loss", ["quad", "logistic"])
+    @pytest.mark.parametrize("bs", [8, 16])
+    def test_bsr_kernel_matches_oracle(self, loss, bs):
+        rng = np.random.default_rng(3)
+        nbr, nbc = 5, 7
+        mask = rng.random((nbr, nbc)) < 0.4
+        dense = (np.kron(mask, np.ones((bs, bs)))
+                 * rng.normal(size=(nbr * bs, nbc * bs))).astype(np.float32)
+        bell = BlockELL.from_dense(dense, bs=bs)
+        m, n = dense.shape
+        x = jnp.asarray(rng.normal(size=n), jnp.float32)
+        t = jnp.asarray(np.sign(rng.normal(size=m)) + 0.0, jnp.float32) \
+            if loss == "logistic" else jnp.asarray(
+                rng.normal(size=m), jnp.float32)
+        w = jnp.asarray(rng.random(m), jnp.float32)
+        got = ops.fused_grad_bsr(bell, x, t, w, loss=loss, force_pallas=True)
+        want = ref.fused_grad_ref(bell, x, t, w, loss=loss)
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got[2], want[2], rtol=1e-4, atol=1e-4)
+
+    def test_bsr_fused_grad_vmem_fallback_parity(self, monkeypatch):
+        """When the fused BSR kernel's resident working set would overflow
+        VMEM, ops.fused_grad_bsr composes the VMEM-safe two-pass BSR
+        kernels instead — same results, one extra block read."""
+        from repro.kernels import autotune as at
+        from repro.kernels import fusedgrad as fg
+        rng = np.random.default_rng(23)
+        mask = rng.random((4, 11)) < 0.5
+        dense = (np.kron(mask, np.ones((8, 8)))
+                 * rng.normal(size=(32, 88))).astype(np.float32)
+        bell = BlockELL.from_dense(dense, bs=8)
+        assert fg.fused_grad_bsr_vmem(bell) > 2048
+        monkeypatch.setattr(at, "VMEM_BUDGET", 2048)
+        x = jnp.asarray(rng.normal(size=88), jnp.float32)
+        t = jnp.asarray(rng.normal(size=32), jnp.float32)
+        w = jnp.asarray(rng.random(32), jnp.float32)
+        got = ops.fused_grad_bsr(bell, x, t, w, loss="quad",
+                                 force_pallas=True)
+        want = ref.fused_grad_ref(bell, x, t, w, loss="quad")
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got[2], want[2], rtol=1e-4, atol=1e-4)
+
+    def test_bsr_rmatmul_wide_fallback_parity(self, monkeypatch):
+        """When the fused-scatter accumulator would overflow VMEM,
+        bsr_rmatmul falls back to the partials + segment_sum scheme — force
+        that branch with a tiny budget and check parity."""
+        from repro.kernels import autotune as at
+        from repro.kernels import bsr as bsr_mod
+        rng = np.random.default_rng(17)
+        mask = rng.random((3, 9)) < 0.5
+        dense = (np.kron(mask, np.ones((8, 8)))
+                 * rng.normal(size=(24, 72))).astype(np.float32)
+        bell = BlockELL.from_dense(dense, bs=8)
+        x = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+        assert bsr_mod._rmm_fused_vmem(9, 8, 16, 4) > 1024
+        monkeypatch.setattr(at, "VMEM_BUDGET", 1024)
+        got = ops.bsr_rmatmul(bell, x, force_pallas=True)
+        np.testing.assert_allclose(got, dense.T @ x, rtol=1e-4, atol=1e-4)
+
+    def test_jnp_paths_match_oracle(self):
+        """The off-TPU dispatch target (structured jnp) is itself correct."""
+        a, x, t, w = _data(100, 40, np.float32, seed=9)
+        got = ops.fused_grad(a, x, t, w, loss="quad")
+        want = ref.fused_grad_ref(a, x, t, w, loss="quad")
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-6)
+        np.testing.assert_allclose(got[1], want[1], rtol=1e-5, atol=1e-5)
+
+    def test_bad_loss_rejected(self):
+        a, x, t, w = _data(16, 8, np.float32)
+        with pytest.raises(ValueError):
+            ops.fused_grad(a, x, t, w, loss="huber")
+
+
+class TestDistmatFusedGrad:
+    def _meshes(self):
+        yield None                                     # single-device
+        if jax.device_count() > 1:                     # CI forces 8 hosts
+            yield T.make_mesh((jax.device_count(), 1), ("data", "model"))
+
+    @pytest.mark.parametrize("loss", ["quad", "logistic"])
+    def test_rowmatrix_matches_apply_adjoint(self, loss):
+        rng = np.random.default_rng(11)
+        m, n = 203, 24                                 # ragged: padding rows
+        A = rng.normal(size=(m, n)).astype(np.float32)
+        for mesh in self._meshes():
+            rm = RowMatrix.create(jnp.asarray(A), mesh)
+            linop = LinopMatrix(rm)
+            t = np.sign(rng.normal(size=m)).astype(np.float32) \
+                if loss == "logistic" else rng.normal(size=m).astype(
+                    np.float32)
+            smooth = (SmoothLogLoss(y=linop.pad_data(jnp.asarray(t)),
+                                    weights=linop.row_weights())
+                      if loss == "logistic" else
+                      SmoothQuad(b=linop.pad_data(jnp.asarray(t)),
+                                 weights=linop.row_weights()))
+            x = jnp.asarray(rng.normal(size=n), jnp.float32)
+            f, g, z = linop.fused_grad(x, row_separable(smooth))
+            zu = linop.apply(x)
+            fu = smooth.value(zu)
+            gu = linop.adjoint(smooth.grad(zu))
+            np.testing.assert_allclose(f, fu, rtol=1e-5)
+            np.testing.assert_allclose(g, gu, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(z, zu, rtol=1e-5, atol=1e-5)
+
+    def test_sparserowmatrix_matches_apply_adjoint(self):
+        rng = np.random.default_rng(12)
+        mask = rng.random((8, 6)) < 0.4
+        A = (np.kron(mask, np.ones((8, 8)))
+             * rng.normal(size=(64, 48))).astype(np.float32)
+        for mesh in self._meshes():
+            srm = SparseRowMatrix.from_dense(A, bs=8, mesh=mesh)
+            linop = LinopMatrix(srm)
+            b = rng.normal(size=64).astype(np.float32)
+            smooth = SmoothQuad(b=linop.pad_data(jnp.asarray(b)),
+                                weights=linop.row_weights())
+            x = jnp.asarray(rng.normal(size=48), jnp.float32)
+            for dispatch in ("bsr", "dense"):
+                f, g, z = srm.fused_grad(x, row_separable(smooth),
+                                         dispatch=dispatch)
+                zu = linop.apply(x)
+                fu = smooth.value(zu)
+                gu = linop.adjoint(smooth.grad(zu))
+                np.testing.assert_allclose(f, fu, rtol=1e-5)
+                np.testing.assert_allclose(g, gu, rtol=1e-4, atol=1e-4)
+                np.testing.assert_allclose(z, zu, rtol=1e-4, atol=1e-4)
+
+    def test_non_separable_smooth_rejected(self):
+        rm = RowMatrix.create(jnp.ones((16, 4), jnp.float32))
+        with pytest.raises(ValueError):
+            rm.fused_grad(jnp.ones(4), row_separable(SmoothHuberL1(0.1)))
+
+
+class TestSolverStructure:
+    def _composite(self, m=120, n=16, seed=5):
+        rng = np.random.default_rng(seed)
+        A = rng.normal(size=(m, n)).astype(np.float32)
+        b = rng.normal(size=m).astype(np.float32)
+        rm = RowMatrix.create(jnp.asarray(A))
+        linop = LinopMatrix(rm)
+        smooth = SmoothQuad(b=linop.pad_data(jnp.asarray(b)),
+                            weights=linop.row_weights())
+        return smooth, linop
+
+    def test_fused_path_one_pass_per_backtracking_attempt(self):
+        """The structural acceptance bar: with the fused path on, every
+        traced A-contact is a fused_grad (one pass) — the seed evaluation
+        plus one per traced attempt site (first attempt + backtracking
+        body), and zero apply/adjoint calls."""
+        smooth, linop = self._composite()
+        counting = CountingLinop(linop)
+        tfocs(smooth, counting, ProxZero(), jnp.zeros(16),
+              TfocsOptions(max_iters=3, accel=False, backtracking=True,
+                           fused=True))
+        assert counting.counts == {"apply": 0, "adjoint": 0,
+                                   "fused_grad": 3}, counting.counts
+
+    def test_unfused_path_two_passes_per_attempt(self):
+        smooth, linop = self._composite()
+        counting = CountingLinop(linop)
+        tfocs(smooth, counting, ProxZero(), jnp.zeros(16),
+              TfocsOptions(max_iters=3, accel=False, backtracking=True,
+                           fused=False))
+        # init apply + (adjoint + apply) per traced attempt site (2 sites)
+        assert counting.counts == {"apply": 3, "adjoint": 2,
+                                   "fused_grad": 0}, counting.counts
+
+    def test_accelerated_variants_keep_cached_path(self):
+        """acc* gradient points are momentum combinations — the cached-image
+        trick already makes their evaluation free, so fused="auto" must not
+        engage."""
+        smooth, linop = self._composite()
+        counting = CountingLinop(linop)
+        _, info = tfocs(smooth, counting, ProxZero(), jnp.zeros(16),
+                        TfocsOptions(max_iters=3, accel=True,
+                                     backtracking=True, fused="auto"))
+        assert counting.counts["fused_grad"] == 0
+        assert not bool(np.asarray(info["fused"]))
+
+    def test_fused_true_on_non_separable_raises(self):
+        _, linop = self._composite()
+        with pytest.raises(ValueError):
+            fused_gradient_enabled(SmoothHuberL1(0.1), linop, True)
+
+    def test_counting_wrapper_on_non_fused_base_falls_back(self):
+        """CountingLinop's delegating methods exist unconditionally; the
+        capability check must unwrap to the base so a non-fused-capable
+        operator keeps the apply+adjoint path instead of crashing."""
+        from repro.core.tfocs import LinopIdentity
+        wrapped = CountingLinop(LinopIdentity(8))
+        smooth = SmoothQuad(b=jnp.zeros(8))
+        assert not fused_gradient_enabled(smooth, wrapped, "auto")
+        x, _ = tfocs(smooth, wrapped, ProxZero(), jnp.ones(8),
+                     TfocsOptions(max_iters=5, accel=False))
+        assert wrapped.counts["fused_grad"] == 0
+        assert wrapped.counts["apply"] > 0
+        assert np.all(np.isfinite(np.asarray(x)))
+
+    def test_opt_out_flag(self):
+        smooth, linop = self._composite()
+        assert fused_gradient_enabled(smooth, linop, "auto")
+        assert not fused_gradient_enabled(smooth, linop, False)
+
+
+class TestSolverParity:
+    """Fused and unfused paths run identical math — the iterates must agree
+    to float tolerance on every Figure-1 problem (acceptance: ≤1e-5 rel in
+    f32), dense and sparse."""
+
+    @pytest.mark.parametrize("pname", ["linear", "linear_l1", "logistic",
+                                       "logistic_l2"])
+    @pytest.mark.parametrize("method", ["gra", "lbfgs"])
+    def test_figure1_parity(self, pname, method):
+        p = make_problem(pname, m=300, n=48)
+        xf, info_f = minimize(p, method, max_iters=60, fused=True)
+        xu, _ = minimize(p, method, max_iters=60, fused=False)
+        ff, fu = (float(composite_value(p, xf)),
+                  float(composite_value(p, xu)))
+        assert abs(ff - fu) <= 1e-5 * (abs(fu) + 1.0), (ff, fu)
+        np.testing.assert_allclose(np.asarray(xf), np.asarray(xu),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_sparse_composite_parity(self):
+        rng = np.random.default_rng(21)
+        mask = rng.random((10, 4)) < 0.4
+        A = (np.kron(mask, np.ones((8, 8)))
+             * rng.normal(size=(80, 32))).astype(np.float32)
+        srm = SparseRowMatrix.from_dense(A, bs=8)
+        linop = LinopMatrix(srm)
+        b = rng.normal(size=80).astype(np.float32)
+        smooth = SmoothQuad(b=linop.pad_data(jnp.asarray(b)),
+                            weights=linop.row_weights())
+        outs = {}
+        for fused in (True, False):
+            outs[fused] = tfocs(
+                smooth, linop, ProxZero(), jnp.zeros(32),
+                TfocsOptions(max_iters=80, accel=False, backtracking=True,
+                             fused=fused))[0]
+        np.testing.assert_allclose(np.asarray(outs[True]),
+                                   np.asarray(outs[False]),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_counting_linop_is_transparent(self):
+        p = make_problem("linear", m=200, n=32)
+        pw = dataclasses.replace(p, linop=CountingLinop(p.linop))
+        xw, _ = minimize(pw, "gra", max_iters=30)
+        x, _ = minimize(p, "gra", max_iters=30)
+        np.testing.assert_allclose(np.asarray(xw), np.asarray(x), rtol=1e-6)

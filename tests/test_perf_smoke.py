@@ -1,0 +1,29 @@
+"""Perf-smoke: structural guard on the optimizer hot path.
+
+Runs the tiny bench_optim fused-vs-unfused config and asserts the fused
+path's *counted* A-passes never exceed the unfused path's.  The counts are
+trace-level (CountingLinop: while-loop bodies trace once), so this is a
+structural property — deterministic and non-flaky — that fails the moment a
+refactor silently reintroduces the second streaming pass over A.
+"""
+import pytest
+
+bench_optim = pytest.importorskip(
+    "benchmarks.bench_optim",
+    reason="benchmarks package needs the repo root on sys.path "
+           "(run as `python -m pytest` from the checkout)")
+
+
+@pytest.mark.perf_smoke
+@pytest.mark.parametrize("pname", ["linear", "logistic"])
+@pytest.mark.parametrize("method", ["gra", "lbfgs"])
+def test_fused_a_passes_not_worse(pname, method):
+    fused = bench_optim.fused_pass_counts(pname, method, True, m=120, n=24)
+    unfused = bench_optim.fused_pass_counts(pname, method, False,
+                                            m=120, n=24)
+    assert fused["per_attempt"] <= unfused["per_attempt"], (fused, unfused)
+    assert fused["total"] <= unfused["total"], (fused, unfused)
+    # the whole point: one pass per attempt, down from two
+    assert fused["per_attempt"] == 1, fused
+    assert unfused["per_attempt"] == 2, unfused
+    assert fused["counts"]["apply"] == fused["counts"]["adjoint"] == 0, fused

@@ -265,6 +265,35 @@ class TestSampledDimsum:
         assert averaged.max() < single.max()
         assert averaged.mean() < 0.5 * single.mean()
 
+    def test_variance_info_shrinks_with_gamma(self):
+        """return_info=True records the exact per-pair estimator variance;
+        it must be nonnegative, shrink monotonically as γ grows (pᵢ → 1),
+        and vanish once every column is kept with probability 1."""
+        A = indicator_matrix(seed=6)
+        n = A.shape[1]
+        for M in (RowMatrix.create(A), SparseRowMatrix.from_dense(A, bs=8)):
+            sums = []
+            for g in (2.0, 20.0, 1e9):
+                sim, info = M.column_similarities(0.5, gamma=g,
+                                                  return_info=True)
+                v = np.asarray(info["variance"])
+                assert v.shape == (n, n)
+                assert (v >= -1e-6).all()
+                assert np.allclose(np.diag(v), 0.0)   # diagonal is exact
+                sums.append(float(v.sum()))
+            assert sums[0] > sums[1] > sums[2], sums
+            assert sums[2] == 0.0, sums               # all pᵢ = 1 at huge γ
+            # info also carries the sampling parameters
+            assert info["gamma"] == 1e9
+            assert np.all(np.asarray(info["p"]) <= 1.0)
+
+    def test_variance_info_exact_path_is_zero(self):
+        A = indicator_matrix(seed=7)
+        sim, info = RowMatrix.create(A).column_similarities(
+            0.0, return_info=True)
+        assert float(np.asarray(info["variance"]).sum()) == 0.0
+        assert info["gamma"] is None
+
 
 class TestSparseSVD:
     def test_lanczos_matches_dense_svd(self):
