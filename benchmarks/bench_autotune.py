@@ -143,8 +143,12 @@ def _make_runner(kernel: str, dims: dict, dtype):
 
 
 def sweep_one(kernel: str, dims: dict, dtype, *, topn: int, reps: int,
-              measure: bool, write: bool) -> tuple[str, float, str]:
-    """Rank (and on TPU, time) one shape; emit BENCH lines; cache winner."""
+              measure: bool, write: bool,
+              calib_records: list | None = None) -> tuple[str, float, str]:
+    """Rank (and on TPU, time) one shape; emit BENCH lines; cache winner.
+    Measured timings are additionally appended to `calib_records` as
+    MachineModel calibration records (launch/planner.calibration_record) —
+    the sweep is the data source the machine model learns from."""
     backend = jax.default_backend()
     ranked = at.rank(kernel, dims, dtype)
     legacy = dict(at.KERNELS[kernel].legacy)
@@ -157,6 +161,11 @@ def sweep_one(kernel: str, dims: dict, dtype, *, topn: int, reps: int,
         measured = {json.dumps(b, sort_keys=True): s * 1e6 for s, b in timed}
         selected = timed[0][1]
         selected_us = timed[0][0] * 1e6
+        if calib_records is not None:
+            from repro.launch import planner
+            calib_records.extend(
+                planner.calibration_record(kernel, dims, b, dtype, s)
+                for s, b in timed)
     else:
         selected = ranked[0][1]
         selected_us = ranked[0][0] * 1e6
@@ -233,6 +242,7 @@ def run(*, kernels=None, dtypes=("f32",), topn: int = 3, reps: int = 5,
                          "ignore the block config; rely on the cost-model "
                          "ranking instead (the default here)")
     rows = []
+    calib_records: list[dict] = []
     for kernel, shapes in SWEEP.items():
         if kernels and kernel not in kernels:
             continue
@@ -240,7 +250,25 @@ def run(*, kernels=None, dtypes=("f32",), topn: int = 3, reps: int = 5,
             for dname in dtypes:
                 rows.append(sweep_one(kernel, dims, DTYPES[dname],
                                       topn=topn, reps=reps,
-                                      measure=measure, write=write))
+                                      measure=measure, write=write,
+                                      calib_records=calib_records))
+    if calib_records:
+        # The sweep IS the calibration data (ROADMAP: learn the cost-model
+        # constants from recorded sweep timings): fit the machine model's
+        # effective efficiencies and persist them next to the config cache.
+        from repro.launch import planner
+        fitted, err_before, err_after = planner.calibrate(calib_records,
+                                                          write=write)
+        print("BENCH", json.dumps({
+            "bench": "autotune_calibration", "machine": fitted.name,
+            "n_records": len(calib_records),
+            "err_before": round(err_before, 4),
+            "err_after": round(err_after, 4),
+            "tightened": err_after <= err_before, "written": write},
+            sort_keys=True))
+        rows.append(("autotune_calibration", err_after * 100,
+                     f"err_before={err_before:.3f};"
+                     f"err_after={err_after:.3f}"))
     if write and (not kernels or "gemm" in kernels):
         # Seed the roundtrip probe's bucket, then demonstrate the contract.
         at.record("gemm", {"m": 96, "k": 160, "n": 96}, jnp.float32,

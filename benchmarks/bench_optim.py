@@ -110,20 +110,21 @@ def run(full: bool = False) -> list[tuple[str, float, str]]:
                 f"log10_err_mid={np.log10(mid_err):.2f}"))
 
     # -- fused vs unfused hot-path section (BENCH json per config) -----------
-    from repro.launch.costmodel import fused_grad_dispatch
+    from repro.launch import planner
     fiters = 50
     for pname in ("linear", "logistic"):
         p = make_problem(pname, m=m, n=n)
         nd = p.linop.in_shape[0]
-        modeled = fused_grad_dispatch(p.linop.out_shape[0], nd)
+        modeled = dict(planner.plan(
+            "grad", {"m": p.linop.out_shape[0], "n": nd}).alternatives)
         for method in ("gra", "lbfgs"):
             rec = {"suite": "optim_fused", "problem": pname,
                    "method": method, "m": m, "n": nd, "iters": fiters,
                    "modeled": {
-                       "fused_s": modeled.fused_s,
-                       "unfused_s": modeled.unfused_s,
-                       "modeled_speedup": modeled.unfused_s
-                       / max(modeled.fused_s, 1e-30)}}
+                       "fused_s": modeled["fused"],
+                       "unfused_s": modeled["unfused"],
+                       "modeled_speedup": modeled["unfused"]
+                       / max(modeled["fused"], 1e-30)}}
             for fused in (False, True):
                 passes = fused_pass_counts(pname, method, fused)
                 x, timing = _timed(p, method, fused, fiters)

@@ -1,0 +1,194 @@
+"""Execution-planner benchmark: golden-shape decisions + machine calibration.
+
+    PYTHONPATH=src python -m benchmarks.bench_planner [--no-write]
+
+Two sections, each emitting ``BENCH {json}`` lines (run.py --only planner):
+
+  1. **Golden decisions** — ``planner.plan()`` on the shape table the
+     dispatch-parity tests pin, priced against the *reference* machine
+     model (explicitly, so the output is host-independent).  A decision
+     that drifts from the recorded expectation flips ``stable: false`` —
+     the machine-readable form of the perf-smoke guard.
+
+  2. **Calibration** — times the kernels of several shapes on THIS host
+     (off-TPU the ops wrappers run the structured jnp reference paths — the
+     real execution engine of this container), builds
+     ``planner.calibration_record``s, fits ``MachineModel.calibrate()``
+     (least squares on the roofline terms), and reports modeled-vs-measured
+     mean relative error before and after — ``tightened`` must be true.
+     Unless --no-write, the fit is persisted next to the autotune config
+     cache ($REPRO_AUTOTUNE_CACHE redirects both) where every subsequent
+     ``plan()`` on this backend prefers it; the final BENCH line re-plans a
+     golden shape to prove the calibrated constants are picked up.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune as at
+from repro.kernels import ops
+from repro.launch import machine, planner
+
+# The canonical decision table: (op, dims, context, expected choice on the
+# reference machine).  tests/test_perf_smoke.py asserts these stay stable;
+# tests/test_planner.py pins the wider table.
+GOLDEN = [
+    ("sparse_matmul", {"m": 4096, "n": 2048, "nx": 1, "ell": 2, "bs": 128},
+     None, "bsr"),
+    ("sparse_matmul", {"m": 1024, "n": 4096, "nx": 128, "ell": 32,
+                       "bs": 128}, None, "dense"),
+    ("grad", {"m": 10000, "n": 1024}, None, "fused"),
+    ("grad", {"m": 16, "n": 1024}, None, "unfused"),
+    ("svd", {"m": 100000, "n": 4096, "k": 32}, {"kind": "row"}, "gram"),
+    ("svd", {"m": 100000, "n": 16384, "k": 32}, {"kind": "row"},
+     "randomized"),
+    ("svd", {"m": 100000, "n": 16384, "k": 256}, {"kind": "row"},
+     "lanczos"),
+    ("bsr_bs", {"m": 4096, "n": 2048, "nx": 128},
+     {"ell_by_bs": {8: 80, 16: 44, 32: 24, 64: 14, 128: 8}}, "bs=128"),
+]
+
+# (kernel, dims) measured for calibration — tall-skinny Gram/sketch shapes
+# plus square GEMMs, the regimes the distmat layer actually hits.
+CALIB_SHAPES = [
+    ("gemm", {"m": 512, "k": 512, "n": 512}),
+    ("gemm", {"m": 1024, "k": 1024, "n": 1024}),
+    ("gemm", {"m": 2048, "k": 256, "n": 256}),
+    ("tsgram", {"m": 16384, "n": 256}),
+    ("tsgram", {"m": 8192, "n": 512}),
+    ("fusedgrad", {"m": 10000, "n": 512}),
+    ("randsketch", {"m": 16384, "n": 1024, "r": 72}),
+]
+
+
+def golden_plans() -> list[dict]:
+    """One record per GOLDEN row, priced on the reference machine (stable
+    across hosts and calibration state)."""
+    out = []
+    for op, dims, ctx, want in GOLDEN:
+        p = planner.plan(op, dims, jnp.float32, machine=machine.V5E,
+                         context=ctx)
+        out.append({"op": op, "dims": dims, "choice": p.choice,
+                    "expected": want, "stable": p.choice == want,
+                    "modeled_us": round(p.cost_s * 1e6, 3),
+                    "bound": p.breakdown.get("bound"),
+                    "alternatives": {k: round(v * 1e6, 3)
+                                     for k, v in p.alternatives}})
+    return out
+
+
+def _runner(kernel: str, dims: dict):
+    rng = np.random.default_rng(0)
+
+    def arr(*shape):
+        return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+    if kernel == "gemm":
+        a, b = arr(dims["m"], dims["k"]), arr(dims["k"], dims["n"])
+        return lambda: ops.gemm(a, b).block_until_ready()
+    if kernel == "tsgram":
+        a = arr(dims["m"], dims["n"])
+        return lambda: ops.tsgram(a).block_until_ready()
+    if kernel == "randsketch":
+        a, q = arr(dims["m"], dims["n"]), arr(dims["m"], dims["r"])
+        return lambda: ops.randsketch(a, q).block_until_ready()
+    if kernel == "fusedgrad":
+        a = arr(dims["m"], dims["n"])
+        x, t = arr(dims["n"]), arr(dims["m"])
+        w = jnp.ones((dims["m"],), jnp.float32)
+        return lambda: jax.block_until_ready(
+            ops.fused_grad(a, x, t, w, loss="quad"))
+    raise ValueError(kernel)
+
+
+def measure_records(reps: int = 5) -> list[dict]:
+    """Time each CALIB_SHAPES kernel on this host (median of reps, after a
+    compile-eating warm-up) and wrap as calibration records."""
+    records = []
+    for kernel, dims in CALIB_SHAPES:
+        run = _runner(kernel, dims)
+        run()
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run()
+            times.append(time.perf_counter() - t0)
+        measured = sorted(times)[len(times) // 2]
+        blocks = at.get_config(kernel, dims, jnp.float32)
+        records.append(planner.calibration_record(kernel, dims, blocks,
+                                                  jnp.float32, measured))
+    return records
+
+
+def run(*, write: bool = True, reps: int = 5) -> list[tuple[str, float, str]]:
+    rows = []
+
+    # -- 1. golden decisions (reference machine; host-independent) ----------
+    stable_all = True
+    for rec in golden_plans():
+        stable_all = stable_all and rec["stable"]
+        print("BENCH", json.dumps(dict(rec, bench="planner_decision"),
+                                  sort_keys=True))
+        rows.append((f"planner_{rec['op']}_"
+                     + "x".join(str(v) for v in rec["dims"].values()),
+                     rec["modeled_us"],
+                     f"choice={rec['choice']};stable={rec['stable']}"))
+
+    # -- 2. calibration on this host's measured timings ---------------------
+    backend = jax.default_backend()
+    records = measure_records(reps=reps)
+    fitted, err_before, err_after = planner.calibrate(records,
+                                                      backend=backend,
+                                                      write=write)
+    tightened = err_after <= err_before
+    print("BENCH", json.dumps({
+        "bench": "planner_calibration", "backend": backend,
+        "n_records": len(records), "reps": reps,
+        "machine": fitted.name,
+        "err_before": round(err_before, 4), "err_after": round(err_after, 4),
+        "tightened": tightened,
+        "mxu_eff": {k: round(v, 6) for k, v in fitted.mxu_eff.items()},
+        "hbm_eff": {k: round(v, 6) for k, v in fitted.hbm_eff.items()},
+        "written": write,
+        "calibration_path": str(machine.calibration_path()) if write
+        else None}, sort_keys=True))
+    rows.append(("planner_calibration", err_after * 100,
+                 f"err_before={err_before:.3f};err_after={err_after:.3f};"
+                 f"tightened={tightened}"))
+
+    if write:
+        # Prove plan() prefers the calibrated constants: same golden shape,
+        # default machine lookup, now reports calibrated=True.
+        at.reset()
+        p = planner.plan("grad", {"m": 10000, "n": 1024}, jnp.float32,
+                         backend=backend)
+        print("BENCH", json.dumps({
+            "bench": "planner_calibrated_replan", "backend": backend,
+            "machine": p.machine, "calibrated": p.calibrated,
+            "choice": p.choice,
+            "modeled_us": round(p.cost_s * 1e6, 3)}, sort_keys=True))
+        rows.append(("planner_calibrated_replan", p.cost_s * 1e6,
+                     f"calibrated={p.calibrated};choice={p.choice}"))
+
+    rows.append(("planner_decisions_stable", 0.0, f"ok={stable_all}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--no-write", action="store_true",
+                    help="fit only; do not persist the calibration")
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+    for name, us, derived in run(write=not args.no_write, reps=args.reps):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@
 MLlib's CCS SpMV/SpMM vs dense; the TPU-native block-sparse (BSR) layout;
 and the distributed SparseRowMatrix vs dense RowMatrix sweep that reports
 the *density break-even* — the number the density-aware dispatch in
-launch/costmodel.py acts on.  Each distributed row also emits a ``BENCH``
+launch/planner.py acts on.  Each distributed row also emits a ``BENCH``
 json line with the measured speedups and the cost model's own call, so the
 break-even is recorded machine-readably (run.py --only sparse).
 """
@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.distmat import RowMatrix, SparseMatrixCSC, SparseRowMatrix
 from repro.kernels.bsr import BlockELL
-from repro.launch import costmodel
+from repro.launch import planner
 
 
 def _time(f, *args, reps=5):
@@ -102,8 +102,10 @@ def run_distributed() -> list[tuple[str, float, str]]:
         us_sp_g = _time(sp_gram, srm.data, srm.cols, reps=3)
         us_dn_g = _time(dn_gram, rm.rows, reps=3)
 
-        decision = costmodel.sparse_dispatch(srm.m_pad, srm.n_pad, 1,
-                                             srm.ell, srm.bs)
+        decision = planner.plan("sparse_matmul",
+                                {"m": srm.m_pad, "n": srm.n_pad, "nx": 1,
+                                 "ell": srm.ell, "bs": srm.bs})
+        alt = dict(decision.alternatives)
         if density <= 0.05:
             breakeven_ok = breakeven_ok and us_sp_mv < us_dn_mv
         print("BENCH", json.dumps({
@@ -115,13 +117,13 @@ def run_distributed() -> list[tuple[str, float, str]]:
             "gram_bsr_us": round(us_sp_g, 1),
             "gram_dense_us": round(us_dn_g, 1),
             "gram_speedup": round(us_dn_g / us_sp_g, 3),
-            "model_use_bsr": decision.use_bsr,
-            "model_bsr_s": decision.bsr_s, "model_dense_s": decision.dense_s,
+            "model_use_bsr": decision.choice == "bsr",
+            "model_bsr_s": alt["bsr"], "model_dense_s": alt["dense"],
             "bsr_wins_at_low_density": breakeven_ok,
         }))
         rows.append((f"s42_dist_spmv_bd{density}", us_sp_mv,
                      f"dense_us={us_dn_mv:.1f};ell={srm.ell};"
-                     f"model_use_bsr={decision.use_bsr}"))
+                     f"model_use_bsr={decision.choice == 'bsr'}"))
         rows.append((f"s42_dist_gram_bd{density}", us_sp_g,
                      f"dense_us={us_dn_g:.1f}"))
     return rows

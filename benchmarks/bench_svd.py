@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.distmat import CoordinateMatrix, RowMatrix
 from repro.core.linalg import compute_svd, lanczos_eigsh
+from repro.launch.machine import V5E
 
 # (rows, cols, nnz) ~ paper Table 1 ÷ 1000
 CASES = [
@@ -33,7 +34,7 @@ CASES = [
     ("tbl1_94Mx4K", 94_000, 40, 1_600_000),
 ]
 
-POD_HBM_BW = 256 * 819e9          # aggregate bytes/s
+POD_HBM_BW = 256 * V5E.hbm_bw     # aggregate bytes/s, 256-chip pod
 SCALE = 1000                      # size scale-down factor
 
 

@@ -5,7 +5,9 @@
 Prints ``name,us_per_call,derived`` CSV rows (paper artifacts:
 Table 1 = bench_svd, Figure 1 = bench_optim, Figure 2 = bench_gemm,
 §4.2 = bench_sparse; autotune = the kernel block-size sweep, which also
-emits ``BENCH {json}`` lines and refreshes the persistent config cache).
+emits ``BENCH {json}`` lines and refreshes the persistent config cache;
+planner = execution-planner golden decisions + machine-model calibration
+from measured timings, persisted next to the autotune cache).
 bench_optim additionally emits ``BENCH {json}`` lines for the fused-vs-
 unfused gradient hot path (wall time, iterations/sec, counted A-passes
 per attempt: 2 unfused → 1 fused).
@@ -22,17 +24,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-size problems (slow on one core)")
     ap.add_argument("--only", default=None,
-                    help="run a single suite: svd|optim|gemm|sparse|autotune")
+                    help="run a single suite: "
+                         "svd|optim|gemm|sparse|autotune|planner")
     args = ap.parse_args()
 
     from benchmarks import (bench_svd, bench_optim, bench_gemm, bench_sparse,
-                            bench_autotune)
+                            bench_autotune, bench_planner)
     suites = {
         "svd": lambda: bench_svd.run(),
         "optim": lambda: bench_optim.run(full=args.full),
         "gemm": lambda: bench_gemm.run(),
         "sparse": lambda: bench_sparse.run(),
         "autotune": lambda: bench_autotune.run(),
+        "planner": lambda: bench_planner.run(),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -101,3 +101,33 @@ xg, info_g = tfocs(quad, linop, ProxZero(), jnp.zeros(64),
 print(f"fused gra: {int(info_g['iterations'])} iters "
       f"(fused path: {bool(info_g['fused'])}, "
       f"one A-pass per backtracking attempt)")
+
+# --- Planning & calibration -----------------------------------------------
+# Every dispatch decision above — kernel block configs, BSR-vs-dense,
+# fused-vs-unfused, the SVD mode — went through ONE code path: the
+# execution planner (launch/planner.py), pricing alternatives against one
+# MachineModel (launch/machine.py).  plan() answers "what would run, and
+# why" for any shape without running anything:
+from repro.launch import planner
+
+p = planner.plan("sparse_matmul",
+                 {"m": 4096, "n": 2048, "nx": 1, "ell": 2, "bs": 128})
+print(f"\nsparse shard -> {p.choice}  (modeled {p.cost_s * 1e6:.1f} us)")
+print(p.explain())                       # roofline terms + alternatives
+
+p = planner.plan("svd", {"m": 100_000, "n": 4096, "k": 32},
+                 context={"kind": "row"})
+print(p.explain())                       # why gram beats lanczos here
+
+# Calibration closes the loop: benchmark sweeps record measured timings,
+# MachineModel.calibrate() regresses effective MXU/HBM efficiencies per
+# backend+dtype from them (least squares on the roofline terms), and the
+# fit persists next to the autotune config cache, where every later
+# plan() prefers it:
+#
+#     PYTHONPATH=src python -m benchmarks.bench_planner
+#
+# emits BENCH json with modeled-vs-measured error before/after (the
+# "tightened" line), writes machine.json, and re-plans a golden shape to
+# show `calibrated: true`.  `python -m benchmarks.run --only planner`
+# runs the same thing inside the benchmark harness.

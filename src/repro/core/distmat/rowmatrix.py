@@ -125,12 +125,12 @@ class RowMatrix(T.DistMatrix):
         row-sharded image)."""
         from repro.kernels import ops as _ops
         axes = self.row_axes
-        kind, t, w = T.row_separable_inputs(smooth, self.rows.shape[0],
-                                            self._row_mask)
+        kind, t, w, prm = T.row_separable_inputs(smooth, self.rows.shape[0],
+                                                 self._row_mask)
         x = jnp.asarray(x)
 
         def body(a, x, t, w):
-            f, g, z = _ops.fused_grad(a, x, t, w, loss=kind)
+            f, g, z = _ops.fused_grad(a, x, t, w, loss=kind, param=prm)
             return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
 
         f, g, z = self._smap(

@@ -13,10 +13,12 @@ is identical to RowMatrix.
 Density-aware dispatch: block-sparse storage stops paying once the stored
 block fraction is high — the BSR kernel pays lane/sublane padding on every
 block plus a per-block grid step, the dense GEMM streams at full MXU
-utilization.  Every multiply therefore consults the roofline comparison in
-launch/costmodel.sparse_dispatch (same machine constants as the autotuner)
-and falls back to densify-and-GEMM when the shard is too dense for BSR to
-win.  The decision is pure Python over static shapes — trace-safe.
+utilization.  Every multiply therefore consults the execution planner
+(``launch/planner.plan("sparse_matmul", ...)``, priced against the one
+calibrated MachineModel every dispatch decision shares) and falls back to
+densify-and-GEMM when the shard is too dense for BSR to win.  The decision
+is pure Python over static shapes — trace-safe; ``plan(...).explain()``
+shows the roofline terms behind it.
 
 Sampled DIMSUM (paper refs [10, 11]) lives here and on RowMatrix:
 column_similarities(threshold) keeps an entry of column i with probability
@@ -43,8 +45,6 @@ from .rowmatrix import RowMatrix, _shard_index
 
 Array = jax.Array
 
-_BS_CANDIDATES = (8, 16, 32, 64, 128)
-
 # Column-strip width for AᵀX products with wide X (gram, sampled DIMSUM):
 # the fused bsr_rmatmul kernel keeps an (n_pad × nx) f32 accumulator
 # resident in VMEM (falling back to HBM partials + segment_sum when even a
@@ -67,24 +67,22 @@ def _rup(x: int, m: int) -> int:
 
 def _best_block_size(shape: tuple[int, int], dtype, ell_of_bs,
                      nx_hint: int) -> int:
-    """argmin over _BS_CANDIDATES of the autotuner's BSR roofline model,
-    evaluated on the *actual* ELL width each candidate produces for this
-    matrix (`ell_of_bs(bs)` — the nnz-only estimate in ops.bsr_block_size
-    assumes uniform scatter, which is pessimistic for block-structured
-    sparsity).  Shared by the dense and the COO "auto" constructors so both
-    pick the same block size for the same matrix."""
+    """Block-size selection via the execution planner
+    (launch/planner.plan("bsr_bs")), evaluated on the *actual* ELL width
+    each candidate produces for this matrix (`ell_of_bs(bs)` — the
+    nnz-only estimate in ops.bsr_block_size assumes uniform scatter, which
+    is pessimistic for block-structured sparsity).  Shared by the dense and
+    the COO "auto" constructors so both pick the same block size for the
+    same matrix."""
     from repro.kernels import autotune as at
+    from repro.launch import planner as _planner
     m, n = shape
-    best_bs, best_t = _BS_CANDIDATES[0], float("inf")
-    for bs in _BS_CANDIDATES:
-        if bs % at.sublane(dtype):
-            continue
-        t = at.model_time("bsr", {"bs": bs},
-                          {"m": _rup(m, bs), "n": _rup(n, bs),
-                           "nx": nx_hint, "ell": ell_of_bs(bs)}, dtype)
-        if t < best_t:
-            best_bs, best_t = bs, t
-    return best_bs
+    sub = at.sublane(dtype)
+    ell_by_bs = {bs: ell_of_bs(bs) for bs in _planner.BS_CANDIDATES
+                 if bs % sub == 0}
+    p = _planner.plan("bsr_bs", {"m": m, "n": n, "nx": nx_hint}, dtype,
+                      context={"ell_by_bs": ell_by_bs})
+    return int(p.blocks["bs"])
 
 
 def _auto_block_size(a: np.ndarray, nx_hint: int) -> int:
@@ -216,16 +214,19 @@ class SparseRowMatrix(T.DistMatrix):
         return self.m_pad // nshards
 
     def _use_bsr(self, nx: int, dispatch: str) -> bool:
-        """Per-shard BSR-vs-dense decision (static, trace-safe)."""
+        """Per-shard BSR-vs-dense decision (static, trace-safe) via the
+        execution planner (launch/planner.plan("sparse_matmul"))."""
         if dispatch in ("bsr", "dense"):
             return dispatch == "bsr"
         if dispatch != "auto":
             raise ValueError(f"dispatch must be auto | bsr | dense, "
                              f"got {dispatch!r}")
-        from repro.launch import costmodel as _cm
-        return _cm.sparse_dispatch(self._local_rows(), self.n_pad, nx,
-                                   self.ell, self.bs,
-                                   self.data.dtype.name).use_bsr
+        from repro.launch import planner as _planner
+        return _planner.plan(
+            "sparse_matmul",
+            {"m": self._local_rows(), "n": self.n_pad,
+             "nx": max(nx, 1), "ell": self.ell, "bs": self.bs},
+            self.data.dtype.name).choice == "bsr"
 
     def _local(self, data: Array, cols: Array) -> _bsr.BlockELL:
         """The shard's BlockELL view (called inside shard_map bodies)."""
@@ -318,8 +319,8 @@ class SparseRowMatrix(T.DistMatrix):
         use_bsr = self._use_bsr(1, dispatch)
         axes = self.row_axes
         n = self.dims[1]
-        kind, t, w = T.row_separable_inputs(smooth, self.m_pad,
-                                            self._row_mask)
+        kind, t, w, prm = T.row_separable_inputs(smooth, self.m_pad,
+                                                 self._row_mask)
         x = jnp.asarray(x)
         xp = jnp.pad(x, (0, self.n_pad - x.shape[0])) \
             if x.shape[0] < self.n_pad else x
@@ -327,10 +328,11 @@ class SparseRowMatrix(T.DistMatrix):
         def body(data, cols, xp, t, w):
             local = self._local(data, cols)
             if use_bsr:
-                f, g, z = _ops.fused_grad_bsr(local, xp, t, w, loss=kind)
+                f, g, z = _ops.fused_grad_bsr(local, xp, t, w, loss=kind,
+                                              param=prm)
             else:
                 f, g, z = _ops.fused_grad(local.to_dense(), xp, t, w,
-                                          loss=kind)
+                                          loss=kind, param=prm)
             return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
 
         f, g, z = self._smap(

@@ -84,10 +84,12 @@ def pad_rows(x: Array, multiple: int) -> tuple[Array, int]:
 
 def row_separable_inputs(smooth, m_pad: int, row_mask_fn):
     """Resolve a smooth (or its RowSeparable form) into fused-gradient
-    kernel inputs: (kind, target, weights) padded to the sharded row count
-    `m_pad`.  Default weights come from `row_mask_fn()` so padding rows
-    contribute nothing; explicit weights are zero-padded, same effect.
-    Shared by RowMatrix.fused_grad and SparseRowMatrix.fused_grad."""
+    kernel inputs: (kind, target, weights, param) with the data-space
+    vectors padded to the sharded row count `m_pad`.  Default weights come
+    from `row_mask_fn()` so padding rows contribute nothing; explicit
+    weights are zero-padded, same effect.  `param` is the loss's static
+    scalar (huber δ; 1.0 elsewhere).  Shared by RowMatrix.fused_grad and
+    SparseRowMatrix.fused_grad."""
     sep = smooth if hasattr(smooth, "kind") else (
         smooth.as_row_separable()
         if hasattr(smooth, "as_row_separable") else None)
@@ -100,7 +102,7 @@ def row_separable_inputs(smooth, m_pad: int, row_mask_fn):
     else:
         w = jnp.asarray(sep.weights)
         w = jnp.pad(w, (0, m_pad - w.shape[0])) if w.shape[0] < m_pad else w
-    return sep.kind, t, w
+    return sep.kind, t, w, float(getattr(sep, "param", 1.0))
 
 
 def dimsum_variance(s2: Array, p: Array) -> Array:

@@ -1,7 +1,9 @@
 """computeSVD / computePCA — paper §3.1, plus a randomized third path.
 
 Dispatch mirrors MLlib's RowMatrix.computeSVD: the *user does not choose* —
-`mode="auto"` picks among three paths by (n, k):
+`mode="auto"` asks the execution planner (launch/planner.plan("svd", ...),
+the same calibrated-machine-model path every other dispatch decision takes)
+to pick among three paths by (n, k):
 
   * ``gram``        — n ≤ GRAM_THRESHOLD (=8192): the n×n Gram fits "on the
     driver" (replicated per chip); one all-reduce, then a local eigh
@@ -134,16 +136,21 @@ def compute_svd(A, k: int, *, compute_u: bool = True,
                           rcond=rcond, seed=seed, **lanczos_kw)
         return _swap_transposed(A, At, res, compute_u, rcond)
     if mode == "auto":
+        # §3.1 mode dispatch now lives in the execution planner (one
+        # calibrated machine model behind every decision): sparse operators
+        # take the matrix-free iteration (matvec ∝ nnz, no dense Gram),
+        # RowMatrix picks gram / randomized / lanczos by (n, k).
+        # plan(...).explain() shows the modeled A-pass cost of each mode.
+        from repro.launch import planner as _planner
+        kind = ("sparse" if isinstance(A, SparseRowMatrix)
+                else "row" if isinstance(A, RowMatrix) else "other")
+        ctx = {"kind": kind, "gram_threshold": gram_threshold,
+               "randomized_k_threshold": randomized_k_threshold,
+               "oversampling": oversampling, "power_iters": power_iters}
         if isinstance(A, SparseRowMatrix):
-            # §3.1.1: sparse operators take the matrix-free iteration — the
-            # matvec cost is ∝ nnz, and no dense Gram is ever formed.
-            mode = "lanczos"
-        elif isinstance(A, RowMatrix) and n <= gram_threshold:
-            mode = "gram"
-        elif isinstance(A, RowMatrix) and k <= randomized_k_threshold:
-            mode = "randomized"
-        else:
-            mode = "lanczos"
+            ctx["nnz"] = A.nnz
+        mode = _planner.plan("svd", {"m": m, "n": n, "k": k},
+                             context=ctx).choice
 
     if mode == "gram":
         # §3.1.2 tall-and-skinny: one all-reduce builds AᵀA, the

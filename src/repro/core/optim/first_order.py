@@ -10,7 +10,8 @@ exactly as §3.3 argues.
 Fused gradient fast path
 ------------------------
 For row-separable smooths (SmoothQuad, SmoothLogLoss — the whole Figure-1
-family) the hot loop can evaluate f(Ax), Aᵀ∇f(Ax) and Ax in ONE streaming
+family — plus SmoothHuber and SmoothPoisson) the hot loop can evaluate
+f(Ax), Aᵀ∇f(Ax) and Ax in ONE streaming
 pass over the distributed matrix (kernels/fusedgrad) instead of the two
 passes of apply + adjoint.  Dispatch, controlled by `TfocsOptions.fused`
 (threaded through `minimize(..., fused=...)`):
@@ -23,10 +24,13 @@ passes of apply + adjoint.  Dispatch, controlled by `TfocsOptions.fused`
     provides for free, so two passes is their floor;
   * non-separable smooths always fall back to apply + adjoint.
 
-`fused="auto"` (default) additionally consults the roofline comparison in
-launch/costmodel.fused_grad_dispatch; pass `fused=False` to opt out, e.g.
-when comparing against the unfused baseline (bench_optim does exactly
-that and counts one A-pass per backtracking attempt on the fused path).
+`fused="auto"` (default) additionally consults the execution planner —
+``launch/planner.plan("grad", {"m": rows_per_shard, "n": n})``, one A read
+vs two priced on the calibrated machine model (``plan(...).explain()``
+shows the roofline terms behind the decision); pass `fused=False` to opt
+out, e.g. when comparing against the unfused baseline (bench_optim does
+exactly that and counts one A-pass per backtracking attempt on the fused
+path).
 """
 from __future__ import annotations
 

@@ -1,6 +1,7 @@
 from .linop import LinopMatrix, LinopIdentity, LinopAdjoint, CountingLinop
-from .smooth import (SmoothQuad, SmoothLogLoss, SmoothLinear, SmoothHuberL1,
-                     SmoothSum, RowSeparable, row_separable)
+from .smooth import (SmoothQuad, SmoothLogLoss, SmoothLinear, SmoothHuber,
+                     SmoothHuberL1, SmoothPoisson, SmoothSum, RowSeparable,
+                     row_separable)
 from .prox import ProxZero, ProxL1, ProxL2Sq, ProxNonneg, ProxBox
 from .solver import tfocs, TfocsOptions, fused_gradient_enabled
 from .lp import solve_smoothed_lp
@@ -8,8 +9,9 @@ from .lasso import solve_lasso
 
 __all__ = [
     "LinopMatrix", "LinopIdentity", "LinopAdjoint", "CountingLinop",
-    "SmoothQuad", "SmoothLogLoss", "SmoothLinear", "SmoothHuberL1",
-    "SmoothSum", "RowSeparable", "row_separable",
+    "SmoothQuad", "SmoothLogLoss", "SmoothLinear", "SmoothHuber",
+    "SmoothHuberL1", "SmoothPoisson", "SmoothSum", "RowSeparable",
+    "row_separable",
     "ProxZero", "ProxL1", "ProxL2Sq", "ProxNonneg", "ProxBox",
     "tfocs", "TfocsOptions", "fused_gradient_enabled",
     "solve_smoothed_lp", "solve_lasso",

@@ -72,10 +72,11 @@ class LinopMatrix:
         w = jnp.ones_like(t) if sep.weights is None \
             else self.pad_data(jnp.asarray(sep.weights))
         return _ops.fused_grad(jnp.asarray(self.A), jnp.asarray(x), t, w,
-                               loss=sep.kind)
+                               loss=sep.kind,
+                               param=float(getattr(sep, "param", 1.0)))
 
     def operand_dtype(self):
-        """dtype of the matrix operand (the costmodel dispatch input)."""
+        """dtype of the matrix operand (the planner dispatch input)."""
         A = self.A
         if isinstance(A, RowMatrix):
             return A.rows.dtype

@@ -34,13 +34,16 @@ class SmoothFunction(Protocol):
 class RowSeparable:
     """Static description of a row-separable smooth: f(z) = Σᵢ wᵢ ℓ(zᵢ, tᵢ).
 
-    `kind` is the fused-kernel loss id ("quad" | "logistic"), `target` the
-    per-row data (b for quad, ±1 labels for logistic), `weights` the
-    per-row weights (None ⇒ all-ones; distributed layouts substitute their
-    padding-row mask)."""
+    `kind` is the fused-kernel loss id ("quad" | "logistic" | "huber" |
+    "poisson"), `target` the per-row data (b for quad/huber, ±1 labels for
+    logistic, counts for poisson), `weights` the per-row weights (None ⇒
+    all-ones; distributed layouts substitute their padding-row mask), and
+    `param` the loss's static scalar (the huber δ; ignored elsewhere —
+    it reaches the Pallas kernels as a compile-time constant)."""
     kind: str
     target: Array
     weights: Array | None
+    param: float = 1.0
 
 
 def row_separable(smooth) -> RowSeparable | None:
@@ -90,6 +93,49 @@ class SmoothLogLoss:
 
     def as_row_separable(self) -> RowSeparable:
         return RowSeparable("logistic", self.y, self.weights)
+
+
+@dataclass(frozen=True)
+class SmoothHuber:
+    """f(z) = Σ wᵢ huber_δ(zᵢ − bᵢ) — robust regression loss:
+    ½d² inside |d| ≤ δ, linear δ(|d| − ½δ) outside.  Row-separable, so the
+    distributed layer can run the single-pass fused gradient kernel."""
+    b: Array
+    delta: float = 1.0
+    weights: Array | None = None
+
+    def value(self, z: Array) -> Array:
+        w = _w(self.weights, z)
+        d = z - self.b
+        a = jnp.abs(d)
+        return jnp.sum(w * jnp.where(a <= self.delta, 0.5 * d * d,
+                                     self.delta * (a - 0.5 * self.delta)))
+
+    def grad(self, z: Array) -> Array:
+        return _w(self.weights, z) * jnp.clip(z - self.b, -self.delta,
+                                              self.delta)
+
+    def as_row_separable(self) -> RowSeparable:
+        return RowSeparable("huber", self.b, self.weights,
+                            param=float(self.delta))
+
+
+@dataclass(frozen=True)
+class SmoothPoisson:
+    """f(z) = Σ wᵢ (e^{zᵢ} − yᵢ zᵢ) — Poisson NLL with log link (up to the
+    Σ log yᵢ! constant), counts y ≥ 0.  Row-separable."""
+    y: Array
+    weights: Array | None = None
+
+    def value(self, z: Array) -> Array:
+        w = _w(self.weights, z)
+        return jnp.sum(w * (jnp.exp(z) - self.y * z))
+
+    def grad(self, z: Array) -> Array:
+        return _w(self.weights, z) * (jnp.exp(z) - self.y)
+
+    def as_row_separable(self) -> RowSeparable:
+        return RowSeparable("poisson", self.y, self.weights)
 
 
 @dataclass(frozen=True)

@@ -19,8 +19,8 @@ point of this one, so the single-pass fused gradient kernel
 (kernels/fusedgrad) — which computes f(Ax), Aᵀ∇f(Ax) and Ax in one
 streaming read of A — covers the whole attempt: ONE A-pass instead of an
 apply + an adjoint.  `fused="auto"` (TfocsOptions) takes that path when the
-smooth advertises separability, the operator supports it, and the roofline
-dispatch (launch/costmodel.fused_grad_dispatch) prices it ahead; accelerated
+smooth advertises separability, the operator supports it, and the execution
+planner (launch/planner.plan("grad", ...)) prices it ahead; accelerated
 variants keep the cached two-pass scheme (their gradient point is a moving
 combination whose image is already free).  `fused=False` opts out.
 
@@ -76,7 +76,9 @@ def fused_gradient_enabled(smooth, linop, fused: bool | str = "auto",
     gradient path.  Structure gates first (row-separable smooth, a
     fused-capable operator, and — for the TFOCS engine — no acceleration,
     since the cached-image trick already makes the momentum point's
-    value/grad free); `"auto"` then consults the roofline dispatch."""
+    value/grad free); `"auto"` then consults the execution planner
+    (launch/planner.plan("grad", ...): one A read vs two, priced on the
+    calibrated machine model)."""
     if fused is False or (needs_theta_one and accel):
         return False
     sep = row_separable(smooth)
@@ -99,9 +101,9 @@ def fused_gradient_enabled(smooth, linop, fused: bool | str = "auto",
         shards = linop.row_shards() if hasattr(linop, "row_shards") else 1
     except (AttributeError, TypeError):
         return True
-    from repro.launch import costmodel as _cm
-    return _cm.fused_grad_dispatch(max(m // max(shards, 1), 1), n,
-                                   dtype).use_fused
+    from repro.launch import planner as _planner
+    return _planner.plan("grad", {"m": max(m // max(shards, 1), 1), "n": n},
+                         dtype).choice == "fused"
 
 
 class TfocsState(NamedTuple):

@@ -48,21 +48,23 @@ from typing import Callable, Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
-# -- TPU layout / machine constants (v5e) ------------------------------------
-LANE = 128
-_SUBLANE_BY_ITEMSIZE = {8: 8, 4: 8, 2: 16, 1: 32}
+from repro.launch import machine as _machine
+from repro.launch.machine import LANE, SUBLANE_BY_ITEMSIZE, CostTerms
 
-VMEM_BYTES = 16 * 2**20
+# -- TPU layout constants -----------------------------------------------------
+# Machine constants (HBM bandwidth, peak MXU FLOP/s, step overhead) live in
+# launch/machine.py — the per-kernel functions below describe WORK
+# (CostTerms: flops, bytes, steps, utilization) and the MachineModel turns
+# work into seconds, with calibrated efficiencies when a sweep has recorded
+# them.
+
+VMEM_BYTES = _machine.V5E.vmem_bytes
 VMEM_BUDGET = int(VMEM_BYTES * 0.85)       # headroom for semaphores/spills
-
-HBM_BW = 819e9                             # bytes/s per chip
-MXU_FLOPS = {2: 197e12, 4: 98.5e12}        # peak FLOP/s by itemsize
-STEP_OVERHEAD_S = 2e-7                     # per-grid-step issue cost
 
 
 def sublane(dtype) -> int:
     """Minimum second-to-last-dim multiple for this dtype's tiled layout."""
-    return _SUBLANE_BY_ITEMSIZE[jnp.dtype(dtype).itemsize]
+    return SUBLANE_BY_ITEMSIZE[jnp.dtype(dtype).itemsize]
 
 
 def _rup(x: int, m: int) -> int:
@@ -71,10 +73,6 @@ def _rup(x: int, m: int) -> int:
 
 def _itemsize(dtype) -> int:
     return jnp.dtype(dtype).itemsize
-
-
-def _peak_flops(dtype) -> float:
-    return MXU_FLOPS.get(_itemsize(dtype), MXU_FLOPS[4])
 
 
 def _util(b: int) -> float:
@@ -89,13 +87,14 @@ def _steps(dim: int, mult: int, choices: Sequence[int]) -> list[int]:
     return sorted({min(c, cap) for c in choices if c % mult == 0})
 
 
-# -- per-kernel candidate generation / VMEM / cost ---------------------------
+# -- per-kernel candidate generation / VMEM / cost terms ----------------------
 #
 # Each kernel declares: the tunable knobs, the ordered logical dims that form
 # the shape bucket, the legacy hand-picked constants (kept as a ranked
 # candidate so the tuner can never regress past them), a generator of
 # layout-legal + VMEM-feasible candidates, the double-buffered VMEM
-# working-set estimate, and the roofline cost model.
+# working-set estimate, and a declarative cost description — a CostTerms of
+# (flops, hbm_bytes, steps, mxu_util) that the MachineModel prices.
 
 @dataclass(frozen=True)
 class KernelSpec:
@@ -104,7 +103,7 @@ class KernelSpec:
     legacy: Mapping[str, int]
     gen: Callable
     vmem: Callable
-    cost: Callable
+    terms: Callable                     # (blocks, dims, dtype) -> CostTerms
 
 
 def _gemm_vmem(b, d, dtype):
@@ -126,16 +125,16 @@ def _gemm_gen(d, dtype):
     return out
 
 
-def _gemm_cost(b, d, dtype):
+def _gemm_terms(b, d, dtype):
     db = _itemsize(dtype)
     mp, kp = _rup(d["m"], b["bm"]), _rup(d["k"], b["bk"])
     np_ = _rup(d["n"], b["bn"])
-    compute = 2.0 * mp * np_ * kp / (_peak_flops(dtype) * _util(b["bm"]))
     hbm = (mp * kp * db * (np_ // b["bn"])      # A re-read per output column
            + kp * np_ * db * (mp // b["bm"])    # B re-read per output row
            + mp * np_ * db)                     # C written once
     steps = (mp // b["bm"]) * (np_ // b["bn"]) * (kp // b["bk"])
-    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+    return CostTerms(flops=2.0 * mp * np_ * kp, hbm_bytes=hbm, steps=steps,
+                     mxu_util=_util(b["bm"]))
 
 
 def _tsgram_vmem(b, d, dtype):
@@ -154,13 +153,12 @@ def _tsgram_gen(d, dtype):
     return out
 
 
-def _tsgram_cost(b, d, dtype):
+def _tsgram_terms(b, d, dtype):
     db = _itemsize(dtype)
     mp, np_ = _rup(d["m"], b["bm"]), _rup(d["n"], LANE)
-    compute = 2.0 * mp * np_ * np_ / (_peak_flops(dtype) * _util(b["bm"]))
     hbm = mp * np_ * db + np_ * np_ * db        # one pass over A + G out
-    steps = mp // b["bm"]
-    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+    return CostTerms(flops=2.0 * mp * np_ * np_, hbm_bytes=hbm,
+                     steps=mp // b["bm"], mxu_util=_util(b["bm"]))
 
 
 def _randsketch_vmem(b, d, dtype):
@@ -181,16 +179,16 @@ def _randsketch_gen(d, dtype):
     return out
 
 
-def _randsketch_cost(b, d, dtype):
+def _randsketch_terms(b, d, dtype):
     db = _itemsize(dtype)
     mp, np_ = _rup(d["m"], b["bm"]), _rup(d["n"], b["bn"])
     rp = _rup(d["r"], LANE)
-    compute = 2.0 * mp * np_ * rp / (_peak_flops(dtype) * _util(b["bm"]))
     hbm = (mp * np_ * db                        # one pass over A
            + mp * rp * db * (np_ // b["bn"])    # Q re-streamed per n-strip
            + np_ * rp * db)
     steps = (np_ // b["bn"]) * (mp // b["bm"])
-    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+    return CostTerms(flops=2.0 * mp * np_ * rp, hbm_bytes=hbm, steps=steps,
+                     mxu_util=_util(b["bm"]))
 
 
 def _fusedgrad_vmem(b, d, dtype):
@@ -213,16 +211,15 @@ def _fusedgrad_gen(d, dtype):
     return out
 
 
-def _fusedgrad_cost(b, d, dtype):
+def _fusedgrad_terms(b, d, dtype):
     """One streaming pass over A feeding two MXU contractions (z = x Aᵀ,
     g += r A) — the whole point vs apply+adjoint is the single A-read, so
     HBM traffic is m·n·db once plus vector noise."""
     db = _itemsize(dtype)
     mp, np_ = _rup(d["m"], b["bm"]), _rup(d["n"], LANE)
-    compute = 4.0 * mp * np_ / (_peak_flops(dtype) * _util(b["bm"]))
     hbm = mp * np_ * db + (2 * np_ + 3 * mp) * db   # ONE A pass + x,t,w,z,g
-    steps = mp // b["bm"]
-    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+    return CostTerms(flops=4.0 * mp * np_, hbm_bytes=hbm,
+                     steps=mp // b["bm"], mxu_util=_util(b["bm"]))
 
 
 def _flash_vmem(b, d, dtype):
@@ -244,17 +241,16 @@ def _flash_gen(d, dtype):
     return out
 
 
-def _flash_cost(b, d, dtype):
+def _flash_terms(b, d, dtype):
     db = _itemsize(dtype)
     sqp, skp = _rup(d["sq"], b["bq"]), _rup(d["sk"], b["bk"])
     dp = _rup(d["d"], LANE)
     frac = 0.5 if d.get("causal", 1) else 1.0   # live fraction of KV blocks
-    compute = 4.0 * sqp * skp * dp * frac / (_peak_flops(dtype)
-                                             * _util(b["bq"]))
     hbm = (2 * sqp * dp * db                              # Q in + O out
            + 2 * skp * dp * db * (sqp // b["bq"]) * frac)  # K, V per q-row
     steps = (sqp // b["bq"]) * (skp // b["bk"])
-    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+    return CostTerms(flops=4.0 * sqp * skp * dp * frac, hbm_bytes=hbm,
+                     steps=steps, mxu_util=_util(b["bq"]))
 
 
 def _scan_vmem(b, d, dtype):
@@ -276,16 +272,17 @@ def _scan_gen(d, dtype):
     return out
 
 
-def _scan_cost(b, d, dtype):
+def _scan_terms(b, d, dtype):
     # VPU/memory-bound: one HBM pass over x/dt/y/B/C per d-block; the model
     # only has to order q choices (padding waste + grid-step overhead).
+    # flops=0 — the max() roofline then reduces to the memory term.
     db = _itemsize(dtype)
     sp = _rup(d["s"], b["q"])
     bd = min(LANE, _rup(d["d"], LANE))
     dblocks = max(1, _rup(d["d"], bd) // bd)
     hbm = sp * (3 * bd + 2 * d["n"]) * db * dblocks
     steps = (sp // b["q"]) * dblocks
-    return hbm / HBM_BW + steps * STEP_OVERHEAD_S
+    return CostTerms(flops=0.0, hbm_bytes=hbm, steps=steps)
 
 
 def _bsr_ell(bs: int, d) -> int:
@@ -321,11 +318,12 @@ def _bsr_gen(d, dtype):
     return out
 
 
-def _bsr_cost(b, d, dtype):
-    """BSR SpMM roofline: MXU time on *layout-padded* blocks (a bs < 128
-    block still occupies full 128-lane tiles, so small blocks pay up to a
-    16× flop inflation) vs HBM traffic ∝ stored blocks, plus the per-block
-    grid-step overhead that punishes very small blocks at high density."""
+def _bsr_terms(b, d, dtype):
+    """BSR SpMM roofline terms: MXU work on *layout-padded* blocks (a
+    bs < 128 block still occupies full 128-lane tiles, so small blocks pay
+    up to a 16× flop inflation) vs HBM traffic ∝ stored blocks, plus the
+    per-block grid-step overhead that punishes very small blocks at high
+    density."""
     db = _itemsize(dtype)
     bs = b["bs"]
     nxp = _rup(max(d.get("nx", 1), 1), LANE)
@@ -333,33 +331,32 @@ def _bsr_cost(b, d, dtype):
     nbr = mp // bs
     ell = _bsr_ell(bs, d)
     bsl, bll = _rup(bs, sublane(dtype)), _rup(bs, LANE)
-    compute = 2.0 * nbr * ell * bsl * bll * nxp / _peak_flops(dtype)
     hbm = (nbr * ell * (bs * bs + bs * nxp) * db    # A blocks + gathered X
            + mp * nxp * db)                         # out written once
-    steps = nbr * ell
-    return max(compute, hbm / HBM_BW) + steps * STEP_OVERHEAD_S
+    return CostTerms(flops=2.0 * nbr * ell * bsl * bll * nxp, hbm_bytes=hbm,
+                     steps=nbr * ell)
 
 
 KERNELS: dict[str, KernelSpec] = {
     "gemm": KernelSpec(("bm", "bn", "bk"), ("m", "k", "n"),
                        {"bm": 256, "bn": 256, "bk": 512},
-                       _gemm_gen, _gemm_vmem, _gemm_cost),
+                       _gemm_gen, _gemm_vmem, _gemm_terms),
     "tsgram": KernelSpec(("bm",), ("m", "n"), {"bm": 512},
-                         _tsgram_gen, _tsgram_vmem, _tsgram_cost),
+                         _tsgram_gen, _tsgram_vmem, _tsgram_terms),
     "randsketch": KernelSpec(("bm", "bn"), ("m", "n", "r"),
                              {"bm": 512, "bn": 512},
                              _randsketch_gen, _randsketch_vmem,
-                             _randsketch_cost),
+                             _randsketch_terms),
     "fusedgrad": KernelSpec(("bm",), ("m", "n"), {"bm": 512},
                             _fusedgrad_gen, _fusedgrad_vmem,
-                            _fusedgrad_cost),
+                            _fusedgrad_terms),
     "flash_attention": KernelSpec(("bq", "bk"), ("sq", "sk", "d", "causal"),
                                   {"bq": 256, "bk": 256},
-                                  _flash_gen, _flash_vmem, _flash_cost),
+                                  _flash_gen, _flash_vmem, _flash_terms),
     "selective_scan": KernelSpec(("q",), ("s", "d", "n"), {"q": 256},
-                                 _scan_gen, _scan_vmem, _scan_cost),
+                                 _scan_gen, _scan_vmem, _scan_terms),
     "bsr": KernelSpec(("bs",), ("m", "n", "nnz", "nx"), {"bs": 8},
-                      _bsr_gen, _bsr_vmem, _bsr_cost),
+                      _bsr_gen, _bsr_vmem, _bsr_terms),
 }
 
 
@@ -376,13 +373,23 @@ def estimate_vmem(kernel: str, blocks: Mapping[str, int],
     return KERNELS[kernel].vmem(blocks, dims, dtype)
 
 
+def cost_terms(kernel: str, blocks: Mapping[str, int],
+               dims: Mapping[str, int], dtype) -> CostTerms:
+    """Machine-independent work description (flops/bytes/steps/util)."""
+    return KERNELS[kernel].terms(blocks, dims, dtype)
+
+
 def model_time(kernel: str, blocks: Mapping[str, int],
-               dims: Mapping[str, int], dtype) -> float:
-    """Roofline cost-model time in seconds (lower is better)."""
-    return KERNELS[kernel].cost(blocks, dims, dtype)
+               dims: Mapping[str, int], dtype, *,
+               machine: "_machine.MachineModel | None" = None) -> float:
+    """Modeled seconds (lower is better) on `machine` — the calibrated
+    model for the current backend by default."""
+    machine = machine or _machine.for_backend()
+    return machine.time(cost_terms(kernel, blocks, dims, dtype), dtype)
 
 
-def rank(kernel: str, dims: Mapping[str, int], dtype
+def rank(kernel: str, dims: Mapping[str, int], dtype, *,
+         machine: "_machine.MachineModel | None" = None
          ) -> list[tuple[float, dict]]:
     """(score, blocks) ascending by model time; deterministic tie-break.
 
@@ -390,11 +397,13 @@ def rank(kernel: str, dims: Mapping[str, int], dtype
     estimate is conservative enough to exclude it), so the selected config
     can never score worse than the old constants.
     """
+    machine = machine or _machine.for_backend()
     pool = candidates(kernel, dims, dtype)
     legacy = dict(KERNELS[kernel].legacy)
     if legacy not in pool:
         pool = pool + [legacy]
-    scored = [(model_time(kernel, b, dims, dtype), b) for b in pool]
+    scored = [(model_time(kernel, b, dims, dtype, machine=machine), b)
+              for b in pool]
     scored.sort(key=lambda t: (t[0], sorted(t[1].items())))
     return scored
 
@@ -471,11 +480,16 @@ def _cache_at(path: Path) -> ConfigCache:
 
 
 def reset() -> None:
-    """Forget memoized configs, cache handles, and counters (tests)."""
+    """Forget memoized configs, cache handles, and counters (tests) — and
+    the planner/machine caches layered on top, so a recalibration or a
+    cache-path change is picked up everywhere at once."""
     _memo.clear()
     _caches.clear()
     for k in stats:
         stats[k] = 0
+    _machine.invalidate_cache()
+    from repro.launch import planner as _planner
+    _planner.invalidate_cache()
 
 
 def get_config(kernel: str, dims: Mapping[str, int], dtype, *,
@@ -499,7 +513,8 @@ def get_config(kernel: str, dims: Mapping[str, int], dtype, *,
         # under the bucket key, so it must not depend on which bucket member
         # arrived first.  Dispatch clamps blocks to the exact shape anyway.
         bdims = {k: bucket(int(v)) for k, v in dims.items()}
-        blocks = rank(kernel, bdims, dtype)[0][1]
+        blocks = rank(kernel, bdims, dtype,
+                      machine=_machine.for_backend(backend))[0][1]
     _memo[key] = dict(blocks)
     return dict(blocks)
 
@@ -508,14 +523,17 @@ def resolve(kernel: str, dims: Mapping[str, int], dtype,
             overrides: Mapping[str, int | None] | None = None, *,
             tune: str = "auto", backend: str | None = None) -> dict:
     """Config the ops wrappers dispatch with: explicit block kwargs always
-    win; missing knobs come from the autotuner (`tune="auto"`) or the
-    legacy constants (`tune="off"`)."""
+    win; missing knobs come from the execution planner (`tune="auto"` —
+    launch/planner.plan, memoized/cached selection against the calibrated
+    machine model) or the legacy constants (`tune="off"`)."""
     spec = KERNELS[kernel]
     ov = {k: v for k, v in (overrides or {}).items() if v is not None}
     if len(ov) == len(spec.knobs):
         return ov
     if tune == "auto":
-        base = get_config(kernel, dims, dtype, backend=backend)
+        from repro.launch import planner as _planner
+        base = dict(_planner.plan(kernel, dims, dtype,
+                                  backend=backend).blocks)
     elif tune == "off":
         base = dict(spec.legacy)
     else:

@@ -5,7 +5,8 @@ driver (§3.2–3.3), and its optimizer loop consumes exactly (value, gradient)
 pairs of f(Ax).  Computed naively that is TWO streaming passes over A per
 evaluation: apply (z = A x) and adjoint (g = Aᵀ ∇f(z)).  But for the
 row-separable losses of the whole Figure-1 family — f(z) = Σᵢ wᵢ ℓ(zᵢ, tᵢ)
-with ℓ = quadratic or logistic — the residual of a row block depends only on
+with ℓ ∈ {quadratic, logistic, huber, poisson} — the residual of a row block
+depends only on
 that block's rows, so it can be evaluated *on-chip* between the two products
 while the block is still in VMEM.  That is Spark's one-pass treeAggregate
 gradient pattern, executed one level down the memory hierarchy:
@@ -46,17 +47,22 @@ from .bsr import BlockELL
 
 Array = jax.Array
 
-LOSSES = ("quad", "logistic")
+LOSSES = ("quad", "logistic", "huber", "poisson")
 
 
-def row_loss_grad(z: Array, t: Array, w: Array,
-                  loss: str) -> tuple[Array, Array]:
+def row_loss_grad(z: Array, t: Array, w: Array, loss: str,
+                  param: float = 1.0) -> tuple[Array, Array]:
     """(Σ wᵢ ℓ(zᵢ, tᵢ), w ∘ ℓ'(z, t)) in float32 — the row-local residual
     shared by the kernels and the structured jnp paths.
 
       quad:     ℓ(z, b) = ½ (z − b)²,            ℓ' = z − b
       logistic: ℓ(z, y) = log(1 + e^(−y z)),     ℓ' = −y σ(−y z)
-    """
+      huber:    ℓ(z, b) = ½d² if |d| ≤ δ else δ(|d| − ½δ),  d = z − b,
+                ℓ' = clip(d, ±δ)                (δ = `param`, static)
+      poisson:  ℓ(z, y) = e^z − y z (log-link NLL, + const), ℓ' = e^z − y
+
+    `param` is a static Python float (it reaches the Pallas kernels as a
+    compile-time constant alongside the loss id)."""
     z = z.astype(jnp.float32)
     t = t.astype(jnp.float32)
     w = w.astype(jnp.float32)
@@ -68,13 +74,25 @@ def row_loss_grad(z: Array, t: Array, w: Array,
         mz = -t * z
         f = jnp.sum(w * jnp.logaddexp(0.0, mz))
         return f, w * (-t) * jax.nn.sigmoid(mz)
+    if loss == "huber":
+        delta = jnp.float32(param)
+        d = z - t
+        a = jnp.abs(d)
+        f = jnp.sum(w * jnp.where(a <= delta, 0.5 * d * d,
+                                  delta * (a - 0.5 * delta)))
+        return f, w * jnp.clip(d, -delta, delta)
+    if loss == "poisson":
+        ez = jnp.exp(z)
+        f = jnp.sum(w * (ez - t * z))
+        return f, w * (ez - t)
     raise ValueError(f"loss must be one of {LOSSES}, got {loss!r}")
 
 
 # -- dense tall-skinny kernel -------------------------------------------------
 
 def _fused_grad_kernel(a_ref, x_ref, t_ref, w_ref, f_ref, g_ref, z_ref,
-                       g_acc, f_acc, *, m_steps: int, loss: str):
+                       g_acc, f_acc, *, m_steps: int, loss: str,
+                       param: float):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         g_acc[...] = jnp.zeros_like(g_acc)
@@ -84,7 +102,7 @@ def _fused_grad_kernel(a_ref, x_ref, t_ref, w_ref, f_ref, g_ref, z_ref,
     # Row-vector matmuls keep both contractions on the MXU: z = x Aᵀ and
     # g += r A are (1 × bm)·(bm × n) products over the block already in VMEM.
     z = jnp.dot(x_ref[...], blk.T, preferred_element_type=jnp.float32)
-    fpart, r = row_loss_grad(z, t_ref[...], w_ref[...], loss)
+    fpart, r = row_loss_grad(z, t_ref[...], w_ref[...], loss, param)
     z_ref[...] = z
     g_acc[...] += jnp.dot(r.astype(blk.dtype), blk,
                           preferred_element_type=jnp.float32)
@@ -96,9 +114,10 @@ def _fused_grad_kernel(a_ref, x_ref, t_ref, w_ref, f_ref, g_ref, z_ref,
         f_ref[0, 0] = f_acc[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("loss", "bm", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "param", "bm", "interpret"))
 def fused_grad(a: Array, x: Array, t: Array, w: Array, *, loss: str,
-               bm: int, interpret: bool = False
+               bm: int, param: float = 1.0, interpret: bool = False
                ) -> tuple[Array, Array, Array]:
     """(f, g, z) = (Σ wᵢ ℓ((Ax)ᵢ, tᵢ), Aᵀ(w ∘ ℓ'(Ax, t)), Ax) in ONE
     streaming pass over A.  Layout: a (m × n) with m % bm == 0 and
@@ -111,7 +130,8 @@ def fused_grad(a: Array, x: Array, t: Array, w: Array, *, loss: str,
     m_steps = m // bm
 
     return pl.pallas_call(
-        functools.partial(_fused_grad_kernel, m_steps=m_steps, loss=loss),
+        functools.partial(_fused_grad_kernel, m_steps=m_steps, loss=loss,
+                          param=float(param)),
         grid=(m_steps,),
         in_specs=[
             pl.BlockSpec((bm, n), lambda i: (i, 0)),
@@ -157,7 +177,7 @@ def fused_grad_bsr_vmem(a: BlockELL) -> int:
 
 def _fused_grad_bsr_kernel(cols_ref, a_ref, x_ref, t_ref, w_ref,
                            f_ref, g_ref, z_ref, g_acc, f_acc, *,
-                           nbr: int, ell: int, loss: str):
+                           nbr: int, ell: int, loss: str, param: float):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -178,7 +198,7 @@ def _fused_grad_bsr_kernel(cols_ref, a_ref, x_ref, t_ref, w_ref,
         return zacc + jnp.dot(xj, bj.T, preferred_element_type=jnp.float32)
 
     z = jax.lax.fori_loop(0, ell, zstep, jnp.zeros((1, bs), jnp.float32))
-    fpart, r = row_loss_grad(z, t_ref[...], w_ref[...], loss)
+    fpart, r = row_loss_grad(z, t_ref[...], w_ref[...], loss, param)
     z_ref[...] = z
     f_acc[0, 0] += fpart
 
@@ -201,8 +221,9 @@ def _fused_grad_bsr_kernel(cols_ref, a_ref, x_ref, t_ref, w_ref,
         f_ref[0, 0] = f_acc[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("loss", "interpret"))
+@functools.partial(jax.jit, static_argnames=("loss", "param", "interpret"))
 def fused_grad_bsr(a: BlockELL, x: Array, t: Array, w: Array, *, loss: str,
+                   param: float = 1.0,
                    interpret: bool = False) -> tuple[Array, Array, Array]:
     """Fused (f, g, z) for a BlockELL shard: every stored block is read from
     HBM exactly once.  x (n,), t/w (m,) over the padded BlockELL dims;
@@ -233,7 +254,7 @@ def fused_grad_bsr(a: BlockELL, x: Array, t: Array, w: Array, *, loss: str,
     )
     f, g, z = pl.pallas_call(
         functools.partial(_fused_grad_bsr_kernel, nbr=nbr, ell=ell,
-                          loss=loss),
+                          loss=loss, param=float(param)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
@@ -252,19 +273,21 @@ def fused_grad_bsr(a: BlockELL, x: Array, t: Array, w: Array, *, loss: str,
 # -- structured jnp forms (off-TPU dispatch targets) --------------------------
 
 def fused_grad_jnp(a: Array, x: Array, t: Array, w: Array, *,
-                   loss: str) -> tuple[Array, Array, Array]:
+                   loss: str, param: float = 1.0
+                   ) -> tuple[Array, Array, Array]:
     """Dense (f, g, z) with the same row-local loss math as the kernel;
     x/t/w are flat vectors here.  g is the row-vector contraction r·A —
     the kernel's own form, and measurably faster than Aᵀr on CPU too (no
     transposed operand)."""
     z = jnp.dot(a, x, preferred_element_type=jnp.float32)
-    f, r = row_loss_grad(z, t, w, loss)
+    f, r = row_loss_grad(z, t, w, loss, param)
     g = jnp.dot(r.astype(a.dtype), a, preferred_element_type=jnp.float32)
     return f, g, z
 
 
 def fused_grad_bsr_jnp(a: BlockELL, x: Array, t: Array, w: Array, *,
-                       loss: str) -> tuple[Array, Array, Array]:
+                       loss: str, param: float = 1.0
+                       ) -> tuple[Array, Array, Array]:
     """BlockELL (f, g, z) via gather/einsum + scatter-add — flops ∝ stored
     blocks, no densification (the CPU dispatch target)."""
     bs = a.bs
@@ -274,7 +297,7 @@ def fused_grad_bsr_jnp(a: BlockELL, x: Array, t: Array, w: Array, *,
     gathered = xb[a.cols]                                 # (nbr, ell, bs)
     z = jnp.einsum("reij,rej->ri", a.data, gathered,
                    preferred_element_type=jnp.float32).reshape(a.shape[0])
-    f, r = row_loss_grad(z, t, w, loss)
+    f, r = row_loss_grad(z, t, w, loss, param)
     rb = r.astype(a.data.dtype).reshape(nbr, bs)
     partial = jnp.einsum("reij,ri->rej", a.data, rb,
                          preferred_element_type=jnp.float32)

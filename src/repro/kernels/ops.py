@@ -132,17 +132,20 @@ def bsr_rmatmul(a: "_bsr.BlockELL", x: Array, *,
 
 
 def fused_grad(a: Array, x: Array, target: Array, weights: Array, *,
-               loss: str, bm: int | None = None, tune: str = "auto",
+               loss: str, param: float = 1.0, bm: int | None = None,
+               tune: str = "auto",
                force_pallas: bool = False) -> tuple[Array, Array, Array]:
     """(f, g, z) = (Σᵢ wᵢ ℓ((Ax)ᵢ, tᵢ), Aᵀ(w ∘ ℓ'(Ax, t)), Ax) for a dense
     row shard, reading A from HBM exactly once (kernels/fusedgrad).
-    ``loss`` ∈ {"quad", "logistic"}.  Returns f float32 scalar, g (n,) in
-    x.dtype, z (m,) row-space in float32."""
+    ``loss`` ∈ {"quad", "logistic", "huber", "poisson"}; ``param`` is the
+    loss's static scalar (the huber δ).  Returns f float32 scalar, g (n,)
+    in x.dtype, z (m,) row-space in float32."""
     if loss not in _fg.LOSSES:
         raise ValueError(f"loss must be one of {_fg.LOSSES}, got {loss!r}")
     m, n = a.shape
     if not (_on_tpu() or force_pallas):
-        f, g, z = _fg.fused_grad_jnp(a, x, target, weights, loss=loss)
+        f, g, z = _fg.fused_grad_jnp(a, x, target, weights, loss=loss,
+                                     param=param)
         return f, g.astype(x.dtype), z
     cfg = _tune.resolve("fusedgrad", {"m": m, "n": n}, a.dtype, {"bm": bm},
                         tune=tune)
@@ -152,13 +155,13 @@ def fused_grad(a: Array, x: Array, target: Array, weights: Array, *,
     # Padding rows get weight 0, so they contribute nothing to f or g.
     tp = _pad_to(target[None, :], 1, bm_)
     wp = _pad_to(weights[None, :], 1, bm_)
-    f, g, z = _fg.fused_grad(ap, xp, tp, wp, loss=loss, bm=bm_,
-                             interpret=not _on_tpu())
+    f, g, z = _fg.fused_grad(ap, xp, tp, wp, loss=loss, param=param,
+                             bm=bm_, interpret=not _on_tpu())
     return f[0, 0], g[0, :n].astype(x.dtype), z[0, :m]
 
 
 def fused_grad_bsr(a: "_bsr.BlockELL", x: Array, target: Array,
-                   weights: Array, *, loss: str,
+                   weights: Array, *, loss: str, param: float = 1.0,
                    force_pallas: bool = False) -> tuple[Array, Array, Array]:
     """Fused (f, g, z) for a BlockELL shard — every stored block read once.
     Off-TPU dispatch goes to the gather/einsum structured form (flops ∝
@@ -170,16 +173,17 @@ def fused_grad_bsr(a: "_bsr.BlockELL", x: Array, target: Array,
     if loss not in _fg.LOSSES:
         raise ValueError(f"loss must be one of {_fg.LOSSES}, got {loss!r}")
     if not (_on_tpu() or force_pallas):
-        f, g, z = _fg.fused_grad_bsr_jnp(a, x, target, weights, loss=loss)
+        f, g, z = _fg.fused_grad_bsr_jnp(a, x, target, weights, loss=loss,
+                                         param=param)
         return f, g.astype(x.dtype), z
     if _fg.fused_grad_bsr_vmem(a) > _tune.VMEM_BUDGET:
         z = bsr_matvec(a, x, force_pallas=force_pallas)
-        f, r = _fg.row_loss_grad(z, target, weights, loss)
+        f, r = _fg.row_loss_grad(z, target, weights, loss, param)
         g = bsr_rmatmul(a, r.astype(x.dtype)[:, None],
                         force_pallas=force_pallas)[:, 0]
         return f, g.astype(x.dtype), z.astype(jnp.float32)
     f, g, z = _fg.fused_grad_bsr(a, x, target, weights, loss=loss,
-                                 interpret=not _on_tpu())
+                                 param=param, interpret=not _on_tpu())
     return f, g.astype(x.dtype), z
 
 

@@ -45,7 +45,8 @@ def bsr_rmatmul_ref(a, x: Array) -> Array:
 
 
 def fused_grad_ref(a, x: Array, target: Array, weights: Array, *,
-                   loss: str) -> tuple[Array, Array, Array]:
+                   loss: str, param: float = 1.0
+                   ) -> tuple[Array, Array, Array]:
     """(f, g, z) oracle for the fused composite gradient — independent
     two-pass math in float64-free float32 (densifies BlockELL operands)."""
     if hasattr(a, "to_dense"):
@@ -62,6 +63,17 @@ def fused_grad_ref(a, x: Array, target: Array, weights: Array, *,
         mz = -t * z
         f = jnp.sum(w * jnp.logaddexp(0.0, mz))
         r = w * (-t) * jax.nn.sigmoid(mz)
+    elif loss == "huber":
+        delta = jnp.float32(param)
+        d = z - t
+        ad = jnp.abs(d)
+        f = jnp.sum(w * jnp.where(ad <= delta, 0.5 * d * d,
+                                  delta * (ad - 0.5 * delta)))
+        r = w * jnp.clip(d, -delta, delta)
+    elif loss == "poisson":
+        ez = jnp.exp(z)
+        f = jnp.sum(w * (ez - t * z))
+        r = w * (ez - t)
     else:
         raise ValueError(loss)
     return f, af.T @ r, z

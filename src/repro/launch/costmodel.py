@@ -20,7 +20,6 @@ them for scan in the first place.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 
@@ -128,97 +127,8 @@ def measure(arch: str, shape: str, mesh, make_plan_fn, plan_kw: dict,
     return out
 
 
-# -- density-aware sparse dispatch (distmat SparseRowMatrix) -----------------
-#
-# A BlockELL shard only pays off while its stored-block fraction is low: the
-# BSR kernel spends MXU time on nbr·ell layout-padded blocks, a dense GEMM on
-# the full m·n — but the dense path streams with perfect MXU utilization.
-# Both sides are priced with the same roofline constants the autotuner uses
-# (kernels/autotune.py), so the break-even moves with dtype and hardware
-# generation.  Everything here is pure Python over static shapes: the
-# SparseRowMatrix shard_map bodies consult it at trace time.
-
-@dataclasses.dataclass(frozen=True)
-class SparseDispatch:
-    bsr_s: float          # modeled per-shard seconds on the BSR path
-    dense_s: float        # modeled per-shard seconds on the dense GEMM path
-    use_bsr: bool
-
-
-@functools.lru_cache(maxsize=512)
-def _sparse_dispatch_cached(m: int, n: int, nx: int, ell: int, bs: int,
-                            dtype_name: str) -> SparseDispatch:
-    import jax.numpy as jnp
-    from repro.kernels import autotune as at
-    dtype = jnp.dtype(dtype_name)
-    bsr_s = at.model_time("bsr", {"bs": bs},
-                          {"m": m, "n": n, "nx": nx, "ell": ell}, dtype)
-    # Dense comparison point: the best-ranked GEMM tile for this shard shape
-    # (matvec is priced as nx=1; the ranker clamps tiles to the shape).
-    dense_s = at.rank("gemm", {"m": m, "k": n, "n": max(nx, 1)}, dtype)[0][0]
-    return SparseDispatch(bsr_s=bsr_s, dense_s=dense_s,
-                          use_bsr=bsr_s <= dense_s)
-
-
-def sparse_dispatch(m: int, n: int, nx: int, ell: int, bs: int,
-                    dtype="float32") -> SparseDispatch:
-    """Per-shard BSR-vs-dense decision for an (m × n) BlockELL shard with
-    `ell` stored blocks per block-row of size `bs`, multiplied against an
-    (n × nx) dense operand (nx=1 for SpMV)."""
-    import jax.numpy as jnp
-    return _sparse_dispatch_cached(int(m), int(n), int(max(nx, 1)), int(ell),
-                                   int(bs), jnp.dtype(dtype).name)
-
-
-# -- fused-vs-unfused composite gradient (tfocs/lbfgs hot path) ---------------
-#
-# One (value, gradient) evaluation of f(Ax) either streams A twice (apply
-# z = A x, then adjoint g = Aᵀ∇f(z)) or once through the fused kernel
-# (kernels/fusedgrad), which evaluates the row-local residual on-chip
-# between the two products.  Both sides are priced with the autotuner's
-# roofline constants; on an HBM-bound shard the fused side models at ~half
-# the time, and the solvers' fused="auto" consults this decision.
-
-@dataclasses.dataclass(frozen=True)
-class FusedGradDispatch:
-    fused_s: float        # modeled per-shard seconds, single fused pass
-    unfused_s: float      # modeled per-shard seconds, apply + adjoint
-    use_fused: bool
-
-
-@functools.lru_cache(maxsize=512)
-def _fused_grad_dispatch_cached(m: int, n: int,
-                                dtype_name: str) -> FusedGradDispatch:
-    import jax.numpy as jnp
-    from repro.kernels import autotune as at
-
-    def _rup(x, mult):
-        return (x + mult - 1) // mult * mult
-
-    dtype = jnp.dtype(dtype_name)
-    db = dtype.itemsize
-    fused_s = at.rank("fusedgrad", {"m": m, "n": n}, dtype)[0][0]
-    # Unfused = two independent streaming passes (apply, adjoint), each
-    # priced on its OWN layout: matvec-style kernels tile m on sublane
-    # boundaries, while the fused kernel's t/w/z vector strips force
-    # lane-aligned (128-row) blocks and pad m accordingly.  That asymmetry
-    # is the real trade: one A read vs two, against lane-padding waste —
-    # for tiny row shards (m ≪ 128) two sublane-padded passes move fewer
-    # bytes than one lane-padded fused pass and the dispatch says so.
-    mp = _rup(m, at.sublane(dtype))
-    np_ = _rup(n, at.LANE)
-    compute = 2.0 * mp * np_ / at.MXU_FLOPS.get(db, at.MXU_FLOPS[4])
-    bm = min(512, mp)
-    one_pass = (max(compute, (mp * np_ + mp + np_) * db / at.HBM_BW)
-                + -(-mp // bm) * at.STEP_OVERHEAD_S)
-    unfused_s = 2.0 * one_pass
-    return FusedGradDispatch(fused_s=fused_s, unfused_s=unfused_s,
-                             use_fused=fused_s <= unfused_s)
-
-
-def fused_grad_dispatch(m: int, n: int, dtype="float32") -> FusedGradDispatch:
-    """Fused single-pass gradient vs apply+adjoint (two A reads) for an
-    (m × n) operator shard — pure Python over static shapes, trace-safe."""
-    import jax.numpy as jnp
-    return _fused_grad_dispatch_cached(int(m), int(n),
-                                       jnp.dtype(dtype).name)
+# The density-aware sparse dispatch and the fused-vs-unfused gradient
+# dispatch that used to live here (with their own copies of the machine
+# constants) are now ``launch/planner.plan("sparse_matmul", ...)`` and
+# ``plan("grad", ...)`` — one calibrated MachineModel behind every
+# decision (launch/machine.py).

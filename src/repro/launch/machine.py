@@ -1,0 +1,302 @@
+"""The machine model — the single home of every hardware constant.
+
+Before this module existed the repo priced execution three different ways
+with three copies of the same numbers: the autotuner's per-kernel ``_cost``
+functions (kernels/autotune.py), the sparse/fused dispatch arithmetic
+(launch/costmodel.py), and the dry-run roofline (launch/roofline.py).
+Dünner et al. ("Understanding and Optimizing the Performance of Distributed
+ML Applications on Apache Spark", 2016) make the case that one *calibrated*
+analytical model of compute and bandwidth predicts the winning configuration
+across a whole workload family; this module is that model, and
+launch/planner.py is the one code path that consults it.
+
+Two layers:
+
+  * ``CostTerms`` — a declarative, machine-independent description of what
+    an op does: FLOPs issued, HBM bytes moved, grid steps launched, and the
+    MXU utilization fraction its tiling achieves.  The per-kernel terms
+    functions in kernels/autotune.py produce these; nothing in them knows a
+    bandwidth or a peak-FLOPs number.
+
+  * ``MachineModel`` — turns terms into seconds:
+
+        time = max(flops / (peak·util·mxu_eff), bytes / (bw·hbm_eff))
+               + steps · step_overhead
+
+    The built-in instances (``V5E``, ``CPU``) carry datasheet constants;
+    ``calibrate()`` regresses the *effective* efficiencies ``mxu_eff`` /
+    ``hbm_eff`` per dtype from recorded sweep timings (least squares on the
+    roofline terms — eating our own optimizer), and ``save_calibration()``
+    persists them next to the autotune config cache so every later
+    ``planner.plan()`` prefers the calibrated constants.
+
+Until a backend has been calibrated, every backend plans against the v5e
+reference instance — deliberately: the CPU container ranks configs "as if
+v5e" (deterministically, matching the shipped defaults), and dispatch
+decisions are byte-ratio comparisons that a reference machine prices
+correctly.  Calibrating a backend switches its plans to measured reality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Mapping, Sequence
+
+import numpy as np
+
+# Layout constants (TPU tiled-memory geometry, not per-generation numbers).
+LANE = 128
+SUBLANE_BY_ITEMSIZE = {8: 8, 4: 8, 2: 16, 1: 32}
+
+
+def _itemsize(dtype) -> int:
+    import jax.numpy as jnp
+    return jnp.dtype(dtype).itemsize
+
+
+def _dtype_name(dtype) -> str:
+    import jax.numpy as jnp
+    return jnp.dtype(dtype).name
+
+
+@dataclass(frozen=True)
+class CostTerms:
+    """What an op does, independent of the machine that runs it."""
+    flops: float = 0.0           # MXU/VPU flops issued (padded shapes)
+    hbm_bytes: float = 0.0       # bytes moved through HBM
+    steps: float = 0.0           # grid steps launched
+    mxu_util: float = 1.0        # utilization fraction of the tiling
+
+
+@dataclass(frozen=True)
+class MachineModel:
+    """Per-backend machine constants + calibrated effective efficiencies."""
+    name: str
+    mxu_flops: Mapping[int, float]      # peak FLOP/s by operand itemsize
+    hbm_bw: float                       # bytes/s per chip
+    step_overhead_s: float              # per-grid-step issue cost
+    link_bw: float                      # bytes/s per ICI link
+    vmem_bytes: int                     # fast scratch per core
+    mxu_eff: Mapping[str, float] = field(default_factory=dict)  # dtype name
+    hbm_eff: Mapping[str, float] = field(default_factory=dict)  # dtype name
+    source: str = "builtin"             # "builtin" | "calibrated"
+
+    # -- constants, efficiency-adjusted --------------------------------------
+    def peak_flops(self, dtype) -> float:
+        base = self.mxu_flops.get(_itemsize(dtype),
+                                  self.mxu_flops[max(self.mxu_flops)])
+        return base * self.mxu_eff.get(_dtype_name(dtype), 1.0)
+
+    def bandwidth(self, dtype) -> float:
+        return self.hbm_bw * self.hbm_eff.get(_dtype_name(dtype), 1.0)
+
+    # -- terms → seconds -----------------------------------------------------
+    def breakdown(self, terms: CostTerms, dtype) -> dict:
+        """The roofline decomposition plan().explain() prints."""
+        compute_s = terms.flops / (self.peak_flops(dtype)
+                                   * max(terms.mxu_util, 1e-9))
+        memory_s = terms.hbm_bytes / self.bandwidth(dtype)
+        step_s = terms.steps * self.step_overhead_s
+        bound = "compute" if compute_s >= memory_s else "memory"
+        return {"compute_s": compute_s, "memory_s": memory_s,
+                "step_s": step_s, "bound": bound,
+                "total_s": max(compute_s, memory_s) + step_s}
+
+    def time(self, terms: CostTerms, dtype) -> float:
+        return self.breakdown(terms, dtype)["total_s"]
+
+    # -- calibration ---------------------------------------------------------
+    def calibrate(self, records: Sequence[Mapping]) -> "MachineModel":
+        """Fit effective MXU/HBM efficiencies per dtype from measured
+        timings.  Each record carries its raw roofline terms (priced with
+        efficiency 1 — ``planner.calibration_record`` builds them) plus the
+        measured seconds:
+
+            {"dtype": "float32", "flops": …, "hbm_bytes": …, "steps": …,
+             "mxu_util": …, "measured_s": …}
+
+        Least squares on the additive roofline relaxation
+            measured − steps·overhead ≈ a·compute_raw + b·hbm_raw
+        gives inverse efficiencies a = 1/mxu_eff, b = 1/hbm_eff (the max()
+        roofline is not linear; the sum is its standard regression
+        surrogate and upper-bounds it within 2×).  Rows are weighted by
+        1/measured so the fit minimizes *relative* error — the metric
+        ``error()`` scores and plan() decisions care about — instead of
+        letting the largest shape dominate.  Coefficients are clamped
+        positive; a dtype needs ≥ 2 records to be fit."""
+        by_dtype: dict[str, list[Mapping]] = {}
+        for r in records:
+            by_dtype.setdefault(str(r["dtype"]), []).append(r)
+        mxu_eff = dict(self.mxu_eff)
+        hbm_eff = dict(self.hbm_eff)
+        for dname, recs in by_dtype.items():
+            if len(recs) < 2:
+                continue
+            A, y = [], []
+            for r in recs:
+                compute_raw = (float(r["flops"])
+                               / (self.peak_flops_raw(dname)
+                                  * max(float(r.get("mxu_util", 1.0)), 1e-9)))
+                hbm_raw = float(r["hbm_bytes"]) / self.hbm_bw
+                resid = (float(r["measured_s"])
+                         - float(r.get("steps", 0.0)) * self.step_overhead_s)
+                scale = 1.0 / max(float(r["measured_s"]), 1e-12)
+                A.append([compute_raw * scale, hbm_raw * scale])
+                y.append(max(resid, 0.0) * scale)
+            A = np.asarray(A, np.float64)
+            y = np.asarray(y, np.float64)
+            coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+            a, b = float(coef[0]), float(coef[1])
+            if a <= 0 or b <= 0:
+                # Degenerate fit (one term dominates every record, or the
+                # terms are collinear): projected NNLS — take whichever
+                # single-slope fit leaves the smaller residual.
+                fits = []
+                for col in (0, 1):
+                    s = float(A[:, col] @ y
+                              / max(A[:, col] @ A[:, col], 1e-30))
+                    s = max(s, 0.0)
+                    sse = float(((A[:, col] * s - y) ** 2).sum())
+                    fits.append((sse, col, s))
+                _, col, s = min(fits)
+                a, b = (s, 0.0) if col == 0 else (0.0, s)
+            if a > 0:
+                mxu_eff[dname] = float(np.clip(1.0 / a, 1e-4, 16.0))
+            if b > 0:
+                hbm_eff[dname] = float(np.clip(1.0 / b, 1e-4, 16.0))
+        return dataclasses.replace(self, mxu_eff=mxu_eff, hbm_eff=hbm_eff,
+                                   source="calibrated")
+
+    def peak_flops_raw(self, dname: str) -> float:
+        import jax.numpy as jnp
+        it = jnp.dtype(dname).itemsize
+        return self.mxu_flops.get(it, self.mxu_flops[max(self.mxu_flops)])
+
+    def error(self, records: Sequence[Mapping]) -> float:
+        """Mean relative |modeled − measured| / measured over records —
+        the number calibration must tighten."""
+        errs = []
+        for r in records:
+            t = self.time(CostTerms(flops=float(r["flops"]),
+                                    hbm_bytes=float(r["hbm_bytes"]),
+                                    steps=float(r.get("steps", 0.0)),
+                                    mxu_util=float(r.get("mxu_util", 1.0))),
+                          str(r["dtype"]))
+            meas = float(r["measured_s"])
+            if meas > 0:
+                errs.append(abs(t - meas) / meas)
+        return float(np.mean(errs)) if errs else float("nan")
+
+    # -- persistence ---------------------------------------------------------
+    def as_dict(self) -> dict:
+        return {"name": self.name,
+                "mxu_flops": {str(k): v for k, v in self.mxu_flops.items()},
+                "hbm_bw": self.hbm_bw,
+                "step_overhead_s": self.step_overhead_s,
+                "link_bw": self.link_bw, "vmem_bytes": self.vmem_bytes,
+                "mxu_eff": dict(self.mxu_eff), "hbm_eff": dict(self.hbm_eff),
+                "source": self.source}
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "MachineModel":
+        return MachineModel(
+            name=d["name"],
+            mxu_flops={int(k): float(v) for k, v in d["mxu_flops"].items()},
+            hbm_bw=float(d["hbm_bw"]),
+            step_overhead_s=float(d["step_overhead_s"]),
+            link_bw=float(d["link_bw"]), vmem_bytes=int(d["vmem_bytes"]),
+            mxu_eff=dict(d.get("mxu_eff", {})),
+            hbm_eff=dict(d.get("hbm_eff", {})),
+            source=d.get("source", "builtin"))
+
+
+# -- built-in instances -------------------------------------------------------
+# The ONLY place these numbers appear in src/: every roofline, every
+# dispatch, every ranking imports them from here.
+
+V5E = MachineModel(
+    name="tpu-v5e",
+    mxu_flops={2: 197e12, 4: 98.5e12},   # bf16 / f32 peak per chip
+    hbm_bw=819e9,                        # bytes/s per chip
+    step_overhead_s=2e-7,                # per-grid-step issue cost
+    link_bw=50e9,                        # bytes/s per ICI link
+    vmem_bytes=16 * 2**20)
+
+CPU = MachineModel(
+    name="cpu-host",
+    mxu_flops={2: 1e11, 4: 1e11},        # a few vector cores' worth
+    hbm_bw=3e10,                         # one socket's DRAM stream
+    step_overhead_s=1e-6,                # dispatch/loop overhead per tile
+    link_bw=1e10,
+    vmem_bytes=16 * 2**20)               # keeps tilings TPU-shaped
+
+_BUILTIN = {"tpu": V5E, "cpu": CPU}
+
+
+def builtin(backend: str) -> MachineModel:
+    return _BUILTIN.get(backend, CPU)
+
+
+# -- calibration cache (next to the autotune config cache) --------------------
+
+def calibration_path() -> Path:
+    """machine.json in the same directory as the autotune config cache
+    ($REPRO_AUTOTUNE_CACHE redirects both)."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    base = Path(env) if env else Path.home() / ".cache" / "repro" / "autotune.json"
+    return base.with_name("machine.json")
+
+
+_loaded: dict[Path, dict] = {}
+
+
+def invalidate_cache() -> None:
+    """Forget loaded calibrations (tests; after save_calibration)."""
+    _loaded.clear()
+
+
+def _calibrations(path: Path) -> dict:
+    if path not in _loaded:
+        try:
+            data = json.loads(Path(path).read_text())
+            _loaded[path] = dict(data.get("backends", {}))
+        except (OSError, ValueError):
+            _loaded[path] = {}
+    return _loaded[path]
+
+
+def save_calibration(backend: str, model: MachineModel,
+                     path: Path | None = None) -> Path:
+    """Persist a calibrated model for `backend`; later for_backend() calls
+    prefer it over the builtin reference."""
+    path = Path(path) if path else calibration_path()
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, ValueError):
+        data = {"version": 1, "backends": {}}
+    data.setdefault("backends", {})[backend] = model.as_dict()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(data, indent=1, sort_keys=True))
+    tmp.replace(path)
+    invalidate_cache()
+    return path
+
+
+def for_backend(backend: str | None = None, *,
+                prefer_calibrated: bool = True) -> MachineModel:
+    """The machine model every dispatch decision prices against: the
+    calibrated model for this backend when one has been recorded, else the
+    v5e reference instance (see module docstring for why the reference —
+    not the CPU instance — is the uncalibrated default everywhere)."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    if prefer_calibrated:
+        entry = _calibrations(calibration_path()).get(backend)
+        if entry is not None:
+            return MachineModel.from_dict(entry)
+    return V5E

@@ -1,0 +1,400 @@
+"""The unified execution planner — one code path for every "should we?".
+
+Every dispatch decision the repo makes — which block config a Pallas kernel
+runs with, BSR-vs-dense for a sparse shard, fused-vs-unfused composite
+gradients, the BSR block size, the SVD mode — used to live in a different
+module with its own copy of the machine constants.  ``plan()`` is now the
+single entry point: it prices the alternatives against ONE
+``MachineModel`` (launch/machine.py — calibrated per backend when sweep
+timings have been recorded) and returns an ``ExecutionPlan`` that names the
+chosen path, the block config, the modeled cost, and an ``explain()``
+breakdown of why.
+
+    >>> from repro.launch import planner
+    >>> p = planner.plan("sparse_matmul",
+    ...                  {"m": 4096, "n": 2048, "nx": 1, "ell": 2, "bs": 128})
+    >>> p.choice
+    'bsr'
+    >>> print(p.explain())          # roofline terms + alternatives
+
+Supported ops:
+
+  kernel block selection   "gemm" | "tsgram" | "randsketch" | "fusedgrad" |
+                           "flash_attention" | "selective_scan" | "bsr"
+                           (dims = the kernel's logical dims; choice is the
+                           kernel name, blocks the selected config — memo /
+                           persistent sweep cache / model ranking, exactly
+                           the ops-wrapper ``tune="auto"`` path)
+  "sparse_matmul"          {m, n, nx, ell, bs} per-shard BSR-vs-dense
+  "grad"                   {m, n} per-shard fused-vs-unfused composite
+                           gradient (one A read vs two)
+  "bsr_bs"                 {m, n, nx} + context {"ell_by_bs": {bs: ell}}
+                           block-size selection on actual ELL widths
+  "svd"                    {m, n, k} + context {"kind": "row"|"sparse"|
+                           "other", thresholds} → gram | randomized | lanczos
+
+Decision functions are memoized (the shard_map bodies consult them at trace
+time); ``kernels.autotune.reset()`` clears every layer at once.
+"""
+from __future__ import annotations
+
+import functools
+import json
+from dataclasses import dataclass, field
+from typing import Mapping
+
+from repro.kernels import autotune as at
+from repro.launch import machine as _machine
+from repro.launch.machine import LANE, CostTerms, MachineModel
+
+KERNEL_OPS = tuple(at.KERNELS)
+DECISION_OPS = ("sparse_matmul", "grad", "bsr_bs", "svd")
+
+# BSR block-size candidates — the one definition (SparseRowMatrix's
+# bs="auto" constructors and plan("bsr_bs") both sweep this list).
+BS_CANDIDATES = (8, 16, 32, 64, 128)
+
+# SVD auto-mode gates (paper §3.1 dispatch; see core/linalg/svd.py for the
+# derivations of the two numbers).
+GRAM_THRESHOLD = 8192
+RANDOMIZED_K_THRESHOLD = 128
+
+
+def _us(s: float) -> str:
+    return f"{s * 1e6:.2f} us"
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """What to run and why — the planner's answer for one op instance."""
+    op: str
+    choice: str                       # chosen kernel/path/mode
+    blocks: Mapping[str, int]         # block config ({} for path decisions)
+    cost_s: float                     # modeled seconds of the choice
+    dims: Mapping[str, int]
+    dtype: str
+    backend: str
+    machine: str                      # MachineModel.name
+    calibrated: bool                  # modeled with calibrated efficiencies?
+    breakdown: Mapping[str, float] = field(default_factory=dict)
+    alternatives: tuple = ()          # ((label, modeled_s), ...) ascending
+    notes: tuple = ()
+
+    def explain(self) -> str:
+        """Human-readable roofline breakdown of the decision."""
+        dims = " ".join(f"{k}={v}" for k, v in self.dims.items())
+        lines = [
+            f"plan({self.op}) -> {self.choice}"
+            + (f" {dict(self.blocks)}" if self.blocks else ""),
+            f"  dims: {dims}  dtype={self.dtype}  backend={self.backend}",
+            f"  machine: {self.machine}"
+            f" ({'calibrated' if self.calibrated else 'builtin constants'})",
+            f"  modeled: {_us(self.cost_s)}",
+        ]
+        b = self.breakdown
+        if b:
+            lines.append(
+                f"  roofline: compute {_us(b['compute_s'])}"
+                f" | memory {_us(b['memory_s'])}"
+                f" | steps {_us(b['step_s'])}  -> {b['bound']}-bound")
+        if self.alternatives:
+            selected = {self.choice,
+                        json.dumps(dict(self.blocks), sort_keys=True)}
+            lines.append("  alternatives:")
+            for label, s in self.alternatives:
+                marker = "*" if label in selected else " "
+                lines.append(f"   {marker} {label}: {_us(s)}")
+        for n in self.notes:
+            lines.append(f"  note: {n}")
+        return "\n".join(lines)
+
+
+def invalidate_cache() -> None:
+    """Forget memoized decisions (recalibration / tests)."""
+    _decide_cached.cache_clear()
+
+
+def plan(op: str, dims: Mapping[str, int], dtype="float32", *,
+         backend: str | None = None, machine: MachineModel | None = None,
+         context: Mapping | None = None, top: int = 0) -> ExecutionPlan:
+    """Price the alternatives for `op` and return the chosen ExecutionPlan.
+
+    `backend` defaults to the jax default backend; `machine` overrides the
+    calibrated-model lookup (and bypasses the decision memo).  `top` > 0
+    attaches the top-N ranked block configs as alternatives for kernel ops.
+    `context` carries op-specific non-shape inputs (see module docstring).
+    """
+    import jax
+    import jax.numpy as jnp
+    backend = backend or jax.default_backend()
+    dtype_name = jnp.dtype(dtype).name
+    if op in KERNEL_OPS:
+        return _plan_kernel(op, dict(dims), dtype_name, backend,
+                            machine, top)
+    if op not in DECISION_OPS:
+        raise ValueError(f"unknown op {op!r}; expected one of "
+                         f"{KERNEL_OPS + DECISION_OPS}")
+    dims_key = tuple(sorted((k, int(v)) for k, v in dims.items()))
+    ctx_key = _freeze(context or {})
+    if machine is not None:
+        return _decide(op, dims_key, dtype_name, backend, ctx_key, machine)
+    return _decide_cached(op, dims_key, dtype_name, backend, ctx_key)
+
+
+def _freeze(obj):
+    if isinstance(obj, Mapping):
+        return tuple(sorted((k, _freeze(v)) for k, v in obj.items()))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    return obj
+
+
+def _thaw_ctx(ctx_key) -> dict:
+    out = {}
+    for k, v in ctx_key:
+        out[k] = dict(v) if isinstance(v, tuple) and v \
+            and isinstance(v[0], tuple) else v
+    return out
+
+
+# -- kernel block selection ----------------------------------------------------
+
+def _plan_kernel(op: str, dims: dict, dtype_name: str, backend: str,
+                 machine: MachineModel | None, top: int) -> ExecutionPlan:
+    explicit = machine is not None
+    machine = machine or _machine.for_backend(backend)
+    if explicit:
+        blocks = at.rank(op, {k: at.bucket(int(v)) for k, v in dims.items()},
+                         dtype_name, machine=machine)[0][1]
+    else:
+        # The memo → persistent sweep cache → ranking path the ops wrappers
+        # have always dispatched through (kernels/autotune.get_config).
+        blocks = at.get_config(op, dims, dtype_name, backend=backend)
+    terms = at.cost_terms(op, blocks, dims, dtype_name)
+    br = machine.breakdown(terms, dtype_name)
+    alts = ()
+    if top > 0:
+        ranked = at.rank(op, dims, dtype_name, machine=machine)[:top]
+        alts = tuple((json.dumps(b, sort_keys=True), s) for s, b in ranked)
+    return ExecutionPlan(
+        op=op, choice=op, blocks=dict(blocks), cost_s=br["total_s"],
+        dims=dims, dtype=dtype_name, backend=backend, machine=machine.name,
+        calibrated=machine.source == "calibrated", breakdown=br,
+        alternatives=alts)
+
+
+# -- path decisions ------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def _decide_cached(op, dims_key, dtype_name, backend, ctx_key):
+    return _decide(op, dims_key, dtype_name, backend, ctx_key,
+                   _machine.for_backend(backend))
+
+
+def _decide(op, dims_key, dtype_name, backend, ctx_key,
+            machine: MachineModel) -> ExecutionPlan:
+    d = dict(dims_key)
+    ctx = _thaw_ctx(ctx_key)
+    kw = dict(dims=d, dtype=dtype_name, backend=backend,
+              machine=machine.name,
+              calibrated=machine.source == "calibrated")
+    if op == "sparse_matmul":
+        return _decide_sparse(d, dtype_name, machine, kw)
+    if op == "grad":
+        return _decide_grad(d, dtype_name, machine, kw)
+    if op == "bsr_bs":
+        return _decide_bsr_bs(d, dtype_name, machine, ctx, kw)
+    return _decide_svd(d, dtype_name, machine, ctx, kw)
+
+
+def _decide_sparse(d, dtype_name, machine, kw) -> ExecutionPlan:
+    """Per-shard BSR-vs-dense for an (m × n) BlockELL shard with `ell`
+    stored blocks per block-row of size `bs`, times an (n × nx) operand
+    (nx=1 for SpMV).  The BSR side pays lane/sublane padding on every
+    stored block plus a per-block grid step; the dense side streams the
+    full m·n at the best-ranked GEMM tiling."""
+    m, n, nx = d["m"], d["n"], max(d.get("nx", 1), 1)
+    bsr_dims = {"m": m, "n": n, "nx": nx, "ell": d["ell"]}
+    bsr_terms = at.cost_terms("bsr", {"bs": d["bs"]}, bsr_dims, dtype_name)
+    bsr_s = machine.time(bsr_terms, dtype_name)
+    gemm_dims = {"m": m, "k": n, "n": nx}
+    dense_s, dense_blocks = at.rank("gemm", gemm_dims, dtype_name,
+                                    machine=machine)[0]
+    use_bsr = bsr_s <= dense_s
+    chosen_terms = bsr_terms if use_bsr else at.cost_terms(
+        "gemm", dense_blocks, gemm_dims, dtype_name)
+    return ExecutionPlan(
+        op="sparse_matmul", choice="bsr" if use_bsr else "dense",
+        blocks={"bs": d["bs"]} if use_bsr else dict(dense_blocks),
+        cost_s=min(bsr_s, dense_s),
+        breakdown=machine.breakdown(chosen_terms, dtype_name),
+        alternatives=tuple(sorted((("bsr", bsr_s), ("dense", dense_s)),
+                                  key=lambda t: t[1])),
+        notes=(f"stored-block fraction ell/nbc = "
+               f"{d['ell'] / max(n // d['bs'], 1):.3f}",), **kw)
+
+
+def _decide_grad(d, dtype_name, machine, kw) -> ExecutionPlan:
+    """Fused single-pass gradient vs apply + adjoint for an (m × n) shard.
+
+    The fused side is the best-ranked fusedgrad config (ONE A read, but its
+    t/w/z vector strips force lane-aligned row blocks).  The unfused side is
+    two independent streaming passes, each priced on its OWN sublane-aligned
+    layout — that asymmetry is the real trade: one read vs two, against
+    lane-padding waste, so tiny row shards (m ≪ 128) pick unfused."""
+    import jax.numpy as jnp
+    m, n = d["m"], d["n"]
+    db = jnp.dtype(dtype_name).itemsize
+    fused_s, fused_blocks = at.rank("fusedgrad", {"m": m, "n": n},
+                                    dtype_name, machine=machine)[0]
+    mp = at._rup(m, at.sublane(dtype_name))
+    np_ = at._rup(n, LANE)
+    bm = min(512, mp)
+    pass_terms = CostTerms(flops=2.0 * mp * np_,
+                           hbm_bytes=(mp * np_ + mp + np_) * db,
+                           steps=-(-mp // bm))
+    unfused_s = 2.0 * machine.time(pass_terms, dtype_name)
+    use_fused = fused_s <= unfused_s
+    # Breakdown of the CHOSEN side: the fused kernel's terms, or both
+    # unfused passes together (2× one pass — max and steps scale alike).
+    chosen_terms = at.cost_terms(
+        "fusedgrad", fused_blocks, {"m": m, "n": n}, dtype_name) \
+        if use_fused else CostTerms(flops=2 * pass_terms.flops,
+                                    hbm_bytes=2 * pass_terms.hbm_bytes,
+                                    steps=2 * pass_terms.steps)
+    return ExecutionPlan(
+        op="grad", choice="fused" if use_fused else "unfused",
+        blocks=dict(fused_blocks) if use_fused else {},
+        cost_s=min(fused_s, unfused_s),
+        breakdown=machine.breakdown(chosen_terms, dtype_name),
+        alternatives=tuple(sorted((("fused", fused_s),
+                                   ("unfused", unfused_s)),
+                                  key=lambda t: t[1])),
+        notes=("unfused = 2 sublane-padded streaming passes; "
+               "fused = 1 lane-padded pass",), **kw)
+
+
+def _decide_bsr_bs(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
+    """Block-size selection on the *actual* per-candidate ELL widths
+    (context["ell_by_bs"]) — the nnz-only estimate of the "bsr" kernel op
+    assumes uniform scatter, which is pessimistic for block-structured
+    sparsity.  Used by SparseRowMatrix's bs="auto" constructors."""
+    ell_by_bs = {int(k): int(v) for k, v in ctx["ell_by_bs"].items()}
+    nx = max(d.get("nx", 1), 1)
+    sub = at.sublane(dtype_name)
+    scored = []
+    for bs in ctx.get("bs_candidates", BS_CANDIDATES):
+        if bs % sub or bs not in ell_by_bs:
+            continue
+        bdims = {"m": at._rup(d["m"], bs), "n": at._rup(d["n"], bs),
+                 "nx": nx, "ell": ell_by_bs[bs]}
+        scored.append((at.model_time("bsr", {"bs": bs}, bdims, dtype_name,
+                                     machine=machine), bs))
+    scored.sort()
+    best_s, best_bs = scored[0]
+    bdims = {"m": at._rup(d["m"], best_bs), "n": at._rup(d["n"], best_bs),
+             "nx": nx, "ell": ell_by_bs[best_bs]}
+    terms = at.cost_terms("bsr", {"bs": best_bs}, bdims, dtype_name)
+    return ExecutionPlan(
+        op="bsr_bs", choice=f"bs={best_bs}", blocks={"bs": best_bs},
+        cost_s=best_s, breakdown=machine.breakdown(terms, dtype_name),
+        alternatives=tuple((f"bs={bs}", s) for s, bs in scored),
+        notes=("priced on actual ELL widths, not the uniform-scatter "
+               "estimate",), **kw)
+
+
+def _decide_svd(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
+    """compute_svd mode auto-dispatch (paper §3.1): gram while the n×n Gram
+    is a comfortable replicated object, the randomized sketch when A is too
+    wide for Gram but k is small, matrix-free Lanczos for everything else
+    (and always for sparse operators — matvec cost ∝ nnz, no dense Gram).
+
+    The structural gates decide; the modeled A-pass costs of all three
+    modes are attached so explain() shows what each gate saved."""
+    import jax.numpy as jnp
+    m, n, k = d["m"], d["n"], d["k"]
+    kind = ctx.get("kind", "row")
+    gram_threshold = int(ctx.get("gram_threshold", GRAM_THRESHOLD))
+    rand_k = int(ctx.get("randomized_k_threshold", RANDOMIZED_K_THRESHOLD))
+    q = int(ctx.get("power_iters", 2))
+    p = int(ctx.get("oversampling", 8))
+    db = jnp.dtype(dtype_name).itemsize
+    nnz = int(ctx.get("nnz", m * n))
+    a_bytes = (nnz if kind == "sparse" else m * n) * db
+
+    # Modeled pass structure per mode (informational; iteration counts are
+    # a-priori estimates, not convergence guarantees).
+    gram = CostTerms(flops=2.0 * m * n * n, hbm_bytes=a_bytes + n * n * db)
+    sketch_passes = 2 + 2 * q
+    rand = CostTerms(flops=2.0 * m * n * (k + p) * sketch_passes,
+                     hbm_bytes=a_bytes * sketch_passes)
+    lanczos_iters = min(max(2 * k + 10, 20), min(m, n))
+    lz = CostTerms(flops=4.0 * (nnz if kind == "sparse" else m * n)
+                   * lanczos_iters,
+                   hbm_bytes=2.0 * a_bytes * lanczos_iters)
+    costs = {"gram": machine.time(gram, dtype_name),
+             "randomized": machine.time(rand, dtype_name),
+             "lanczos": machine.time(lz, dtype_name)}
+
+    notes = []
+    if kind == "sparse":
+        choice = "lanczos"
+        notes.append("sparse operator: matrix-free iteration, no dense Gram")
+    elif kind == "row" and n <= gram_threshold:
+        choice = "gram"
+        notes.append(f"n={n} <= gram_threshold={gram_threshold}: "
+                     "one all-reduce + local eigh")
+    elif kind == "row" and k <= rand_k:
+        choice = "randomized"
+        notes.append(f"k={k} <= randomized_k_threshold={rand_k}: "
+                     f"{sketch_passes}-pass sketch beats k sequential "
+                     "Lanczos directions")
+    else:
+        choice = "lanczos"
+        notes.append("wide + large-k (or no sketch primitives): "
+                     "matrix-free Lanczos")
+    terms = {"gram": gram, "randomized": rand, "lanczos": lz}[choice]
+    return ExecutionPlan(
+        op="svd", choice=choice, blocks={}, cost_s=costs[choice],
+        breakdown=machine.breakdown(terms, dtype_name),
+        alternatives=tuple(sorted(costs.items(), key=lambda t: t[1])),
+        notes=tuple(notes), **kw)
+
+
+# -- calibration plumbing ------------------------------------------------------
+
+def calibration_record(kernel: str, dims: Mapping[str, int],
+                       blocks: Mapping[str, int], dtype,
+                       measured_s: float) -> dict:
+    """One MachineModel.calibrate() record from a measured kernel run:
+    the raw roofline terms (efficiency-1 work description) + the wall
+    time.  bench_autotune/bench_planner build these from their sweeps."""
+    import jax.numpy as jnp
+    t = at.cost_terms(kernel, blocks, dims, jnp.dtype(dtype))
+    return {"kernel": kernel, "dims": dict(dims), "blocks": dict(blocks),
+            "dtype": jnp.dtype(dtype).name, "flops": t.flops,
+            "hbm_bytes": t.hbm_bytes, "steps": t.steps,
+            "mxu_util": t.mxu_util, "measured_s": float(measured_s)}
+
+
+def calibrate(records, backend: str | None = None, *,
+              write: bool = True) -> tuple[MachineModel, float, float]:
+    """Fit the backend's machine model to measured records; returns
+    (calibrated model, mean relative error before, after).  With
+    write=True the fit is persisted next to the autotune cache and every
+    subsequent plan() on this backend prefers it."""
+    import jax
+    backend = backend or jax.default_backend()
+    # "before" = the model plan() was actually using for this backend (the
+    # v5e reference until a calibration exists); the fit itself starts from
+    # the backend's builtin instance so the efficiencies stay interpretable.
+    reference = _machine.for_backend(backend, prefer_calibrated=False)
+    fitted = _machine.builtin(backend).calibrate(records)
+    err_before, err_after = reference.error(records), fitted.error(records)
+    if write:
+        _machine.save_calibration(backend, fitted)
+        # Every memo layer must drop pre-calibration selections — including
+        # autotune's get_config memo, whose ranked block configs were priced
+        # on the old efficiencies (at.reset clears this cache too).
+        at.reset()
+    return fitted, err_before, err_after

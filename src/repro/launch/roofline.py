@@ -19,9 +19,13 @@ import re
 
 import numpy as np
 
-PEAK_FLOPS = 197e12      # bf16 per chip
-HBM_BW = 819e9           # bytes/s per chip
-LINK_BW = 50e9           # bytes/s per link
+from repro.launch.machine import V5E
+
+# Machine constants come from the one MachineModel home (launch/machine.py);
+# the dry-run roofline prices bf16 training steps on the v5e reference.
+PEAK_FLOPS = V5E.mxu_flops[2]      # bf16 per chip
+HBM_BW = V5E.hbm_bw                # bytes/s per chip
+LINK_BW = V5E.link_bw              # bytes/s per link
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

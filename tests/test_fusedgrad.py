@@ -12,9 +12,9 @@ from repro.core.distmat import RowMatrix, SparseRowMatrix
 from repro.core.distmat import types as T
 from repro.core.optim import make_problem, minimize, composite_value
 from repro.core.tfocs import (CountingLinop, LinopMatrix, ProxZero,
-                              SmoothHuberL1, SmoothLogLoss, SmoothQuad,
-                              TfocsOptions, fused_gradient_enabled,
-                              row_separable, tfocs)
+                              SmoothHuber, SmoothHuberL1, SmoothLogLoss,
+                              SmoothPoisson, SmoothQuad, TfocsOptions,
+                              fused_gradient_enabled, row_separable, tfocs)
 from repro.kernels import ops, ref
 from repro.kernels.bsr import BlockELL
 
@@ -124,7 +124,7 @@ class TestKernelParity:
     def test_bad_loss_rejected(self):
         a, x, t, w = _data(16, 8, np.float32)
         with pytest.raises(ValueError):
-            ops.fused_grad(a, x, t, w, loss="huber")
+            ops.fused_grad(a, x, t, w, loss="hinge")
 
 
 class TestDistmatFusedGrad:
@@ -301,3 +301,114 @@ class TestSolverParity:
         xw, _ = minimize(pw, "gra", max_iters=30)
         x, _ = minimize(p, "gra", max_iters=30)
         np.testing.assert_allclose(np.asarray(xw), np.asarray(x), rtol=1e-6)
+
+
+class TestNewLossParity:
+    """huber + poisson separable losses (ROADMAP fused-grad follow-on):
+    kernel parity on the dense AND the BSR paths, smooth-object consistency,
+    and a fused-vs-unfused solver run over SmoothHuber."""
+
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("loss,param", [("huber", 0.6), ("huber", 2.0),
+                                            ("poisson", 1.0)])
+    @pytest.mark.parametrize("m,n", [(96, 48), (130, 70)])  # multi-tile+pad
+    def test_dense_kernel_matches_oracle(self, dtype, loss, param, m, n):
+        a, x, t, w = _data(m, n, dtype, seed=m + n)
+        x = x * 0.1                        # keep e^z in float32 range
+        if loss == "poisson":
+            t = jnp.abs(t)                 # counts-like targets
+        got = ops.fused_grad(a, x, t, w, loss=loss, param=param,
+                             force_pallas=True)
+        want = ref.fused_grad_ref(a, x, t, w, loss=loss, param=param)
+        tol = TOL[dtype]
+        np.testing.assert_allclose(got[0], want[0], **tol)
+        np.testing.assert_allclose(np.asarray(got[1], np.float32),
+                                   np.asarray(want[1], np.float32), **tol)
+        np.testing.assert_allclose(got[2], want[2], **tol)
+
+    @pytest.mark.parametrize("loss,param", [("huber", 0.5), ("poisson", 1.0)])
+    @pytest.mark.parametrize("bs", [8, 16])
+    def test_bsr_kernel_matches_oracle(self, loss, param, bs):
+        rng = np.random.default_rng(11)
+        nbr, nbc = 5, 7
+        mask = rng.random((nbr, nbc)) < 0.4
+        dense = (np.kron(mask, np.ones((bs, bs)))
+                 * rng.normal(size=(nbr * bs, nbc * bs))).astype(np.float32)
+        bell = BlockELL.from_dense(dense, bs=bs)
+        m, n = dense.shape
+        x = jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32)
+        t = jnp.asarray(rng.poisson(2.0, m), jnp.float32) \
+            if loss == "poisson" else jnp.asarray(
+                rng.normal(size=m), jnp.float32)
+        w = jnp.asarray(rng.random(m), jnp.float32)
+        got = ops.fused_grad_bsr(bell, x, t, w, loss=loss, param=param,
+                                 force_pallas=True)
+        want = ref.fused_grad_ref(bell, x, t, w, loss=loss, param=param)
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got[2], want[2], rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("cls,loss", [(SmoothHuber, "huber"),
+                                          (SmoothPoisson, "poisson")])
+    def test_smooth_advertises_row_separable(self, cls, loss):
+        rng = np.random.default_rng(5)
+        t = jnp.asarray(np.abs(rng.normal(size=64)), jnp.float32)
+        sm = cls(t, weights=None) if loss == "poisson" \
+            else cls(t, delta=0.7, weights=None)
+        sep = row_separable(sm)
+        assert sep is not None and sep.kind == loss
+        # the kernel's row-local math IS the smooth's value/grad
+        from repro.kernels.fusedgrad import row_loss_grad
+        z = jnp.asarray(rng.normal(size=64) * 0.3, jnp.float32)
+        f, r = row_loss_grad(z, sep.target, jnp.ones(64, jnp.float32),
+                             loss, sep.param)
+        np.testing.assert_allclose(float(f), float(sm.value(z)), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(sm.grad(z)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_distmat_parity_dense_and_bsr(self):
+        """RowMatrix.fused_grad and SparseRowMatrix.fused_grad (both
+        dispatch arms) agree with apply + value/grad + adjoint for the new
+        losses."""
+        rng = np.random.default_rng(7)
+        mask = rng.random((4, 6)) < 0.3
+        dense = (np.kron(mask, np.ones((16, 16)))
+                 * rng.normal(size=(64, 96))).astype(np.float32)
+        x = jnp.asarray(rng.normal(size=96) * 0.1, jnp.float32)
+        for A in (RowMatrix.create(dense),
+                  SparseRowMatrix.from_dense(dense, bs=16)):
+            linop = LinopMatrix(A)
+            t = linop.pad_data(jnp.asarray(
+                np.abs(rng.normal(size=64)), jnp.float32))
+            for sm in (SmoothHuber(t, delta=0.8,
+                                   weights=linop.row_weights()),
+                       SmoothPoisson(t, weights=linop.row_weights())):
+                f, g, z = linop.fused_grad(x, row_separable(sm))
+                z2 = linop.apply(x)
+                f2, g2 = sm.value(z2), linop.adjoint(sm.grad(z2))
+                np.testing.assert_allclose(float(f), float(f2), rtol=1e-5)
+                np.testing.assert_allclose(np.asarray(g), np.asarray(g2),
+                                           rtol=1e-4, atol=1e-4)
+                np.testing.assert_allclose(np.asarray(z)[:64],
+                                           np.asarray(z2)[:64],
+                                           rtol=1e-5, atol=1e-5)
+
+    def test_huber_solver_fused_matches_unfused(self):
+        """gra over SmoothHuber: the fused engine (one A-pass per attempt)
+        reaches the same solution as the unfused baseline."""
+        rng = np.random.default_rng(9)
+        A = RowMatrix.create(rng.normal(size=(160, 24)).astype(np.float32))
+        linop = LinopMatrix(A)
+        b = jnp.asarray(rng.normal(size=160), jnp.float32)
+        sm = SmoothHuber(linop.pad_data(b), delta=0.5,
+                         weights=linop.row_weights())
+        outs = {}
+        for fused in (True, False):
+            outs[fused], info = tfocs(
+                sm, linop, ProxZero(), jnp.zeros(24),
+                TfocsOptions(max_iters=60, accel=False, backtracking=True,
+                             fused=fused))
+            assert bool(info["fused"]) == fused
+        np.testing.assert_allclose(np.asarray(outs[True]),
+                                   np.asarray(outs[False]),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,10 +1,13 @@
-"""Perf-smoke: structural guard on the optimizer hot path.
+"""Perf-smoke: structural guards on the optimizer hot path and the planner.
 
-Runs the tiny bench_optim fused-vs-unfused config and asserts the fused
-path's *counted* A-passes never exceed the unfused path's.  The counts are
-trace-level (CountingLinop: while-loop bodies trace once), so this is a
-structural property — deterministic and non-flaky — that fails the moment a
-refactor silently reintroduces the second streaming pass over A.
+Two deterministic, non-flaky properties that fail the moment a refactor
+regresses a dispatch decision:
+
+  * the fused gradient path's *counted* A-passes never exceed the unfused
+    path's (counts are trace-level — CountingLinop: while-loop bodies trace
+    once);
+  * planner.plan() on the golden shape table (benchmarks/bench_planner)
+    reproduces the recorded decisions against the reference machine model.
 """
 import pytest
 
@@ -12,6 +15,7 @@ bench_optim = pytest.importorskip(
     "benchmarks.bench_optim",
     reason="benchmarks package needs the repo root on sys.path "
            "(run as `python -m pytest` from the checkout)")
+bench_planner = pytest.importorskip("benchmarks.bench_planner")
 
 
 @pytest.mark.perf_smoke
@@ -27,3 +31,15 @@ def test_fused_a_passes_not_worse(pname, method):
     assert fused["per_attempt"] == 1, fused
     assert unfused["per_attempt"] == 2, unfused
     assert fused["counts"]["apply"] == fused["counts"]["adjoint"] == 0, fused
+
+
+@pytest.mark.perf_smoke
+def test_planner_decisions_stable_on_cpu():
+    """Dispatch regressions fail fast: every golden-shape plan() decision
+    matches the recorded expectation on the reference machine (priced
+    explicitly against machine.V5E, so a stray user calibration file on
+    the runner cannot flip it)."""
+    for rec in bench_planner.golden_plans():
+        assert rec["stable"], (
+            f"planner decision drifted for {rec['op']} {rec['dims']}: "
+            f"got {rec['choice']}, expected {rec['expected']}")

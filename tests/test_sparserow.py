@@ -9,7 +9,7 @@ from repro.core.linalg import compute_svd
 from repro.kernels import ops, ref
 from repro.kernels import autotune as at
 from repro.kernels.bsr import BlockELL
-from repro.launch import costmodel
+from repro.launch import planner
 
 
 def block_sparse(m, n, bs, block_density, seed=0):
@@ -104,10 +104,16 @@ class TestAutotunerBsr:
 
 class TestDensityDispatch:
     def test_break_even_moves_with_ell(self):
-        d_sparse = costmodel.sparse_dispatch(1024, 4096, 128, 2, 128)
-        d_dense = costmodel.sparse_dispatch(1024, 4096, 128, 32, 128)
-        assert d_sparse.use_bsr and not d_dense.use_bsr
-        assert d_sparse.bsr_s < d_sparse.dense_s < d_dense.bsr_s
+        d_sparse = planner.plan("sparse_matmul", {"m": 1024, "n": 4096,
+                                                  "nx": 128, "ell": 2,
+                                                  "bs": 128})
+        d_dense = planner.plan("sparse_matmul", {"m": 1024, "n": 4096,
+                                                 "nx": 128, "ell": 32,
+                                                 "bs": 128})
+        assert d_sparse.choice == "bsr" and d_dense.choice == "dense"
+        costs = {p: dict(d.alternatives)
+                 for p, d in (("s", d_sparse), ("d", d_dense))}
+        assert costs["s"]["bsr"] < costs["s"]["dense"] < costs["d"]["bsr"]
 
     def test_both_paths_agree_numerically(self):
         dense = block_sparse(64, 64, 8, 0.9, seed=7)   # dense-ish shard
