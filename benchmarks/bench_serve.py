@@ -1,0 +1,134 @@
+"""Serving-frontend benchmark — requests/sec and tail latency under a
+synthetic shared-matrix trace.
+
+The trace is the multi-user regime the solver server exists for: K solve
+requests against the SAME design matrix (distinct right-hand sides).  Two
+deployments answer it:
+
+  * ``serial``  — a 1-slot server: requests run one at a time, each paying
+    its own A-passes (the no-batching baseline);
+  * ``batched`` — a K-slot server: the group shares ONE fused multi-RHS
+    A-pass per solver iteration (continuous batching, launch/serve).
+
+Emits one ``BENCH {json}`` line per config with requests/sec for both,
+p50/p99 submit→finish latency, the batched:serial throughput ratio, and
+the counted group A-passes (grouped ≪ serial — the pass sharing is where
+the throughput comes from).  Wired into ``run.py --only serve``; the
+perf-smoke serving canary asserts the structural half (grouped A-passes <
+serial A-passes) without timing anything.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+
+def _trace(m: int, n: int, k: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    bs = [(A @ rng.normal(size=n) + 0.01 * rng.normal(size=m))
+          .astype(np.float32) for _ in range(k)]
+    return A, bs
+
+
+def _serve(server, A, bs, *, tol: float = 1e-6, max_iters: int = 200):
+    """Run the trace through `server`; returns (wall_s, latencies,
+    group_a_passes, results).  Timing a LONG-LIVED server is the point:
+    the first trace through a server compiles the group step closures, so
+    callers warm the same server with the same matrix before timing (a
+    serving deployment answers a stream, not a cold start)."""
+    from repro import api
+    passes0 = server.stats["a_passes"]
+    events0 = len(server._events)
+    t0 = time.perf_counter()
+    ids = [server.submit(api.SolveRequest(A=A, b=b, loss="quad",
+                                          method="gra", tol=tol,
+                                          max_iters=max_iters))
+           for b in bs]
+    server.run()
+    wall = time.perf_counter() - t0
+    res = [server.result(i) for i in ids]
+    assert all(r is not None for r in res)
+    lats = sorted(t1 - t0_ for _, t0_, t1 in server._events[events0:])
+    return wall, lats, server.stats["a_passes"] - passes0, res
+
+
+def group_pass_counts(m: int = 200, n: int = 32, k: int = 4,
+                      iters: int = 10) -> dict:
+    """Structural A-pass comparison, no timing: a k-request group run to a
+    fixed iteration count vs k sequential single-request runs on the same
+    engine.  Deterministic — the perf-smoke serving canary asserts
+    grouped < serial on these numbers."""
+    import jax.numpy as jnp
+    from repro import api
+    from repro.core.tfocs import CountingLinop
+    from repro.core.tfocs.linop import LinopMatrix
+    from repro.launch.serve import GroupRunner
+
+    A, bs = _trace(m, n, k, seed=1)
+
+    def run(reqs_per_group):
+        lin = CountingLinop(LinopMatrix(jnp.asarray(A)))
+        runner = GroupRunner(lin, "quad", slots=max(reqs_per_group, 1))
+        passes = 0
+        for start in range(0, k, reqs_per_group):
+            for b in bs[start:start + reqs_per_group]:
+                runner.admit(api.SolveRequest(A=A, b=b, loss="quad",
+                                              tol=0.0, max_iters=iters))
+            while runner.busy():
+                runner.step()
+        return runner.a_passes, dict(lin.counts)
+
+    grouped, gcounts = run(k)
+    serial, scounts = run(1)
+    return {"k": k, "iters": iters, "grouped_a_passes": grouped,
+            "serial_a_passes": serial,
+            "grouped_trace_counts": gcounts,
+            "serial_trace_counts": scounts,
+            "a_pass_ratio": serial / max(grouped, 1)}
+
+
+def run(full: bool = False) -> list[tuple[str, float, str]]:
+    configs = [(2000, 256, 8), (2000, 256, 16)] if full \
+        else [(512, 64, 8)]
+    rows = []
+    from repro.launch.serve import SolverServer
+    for m, n, k in configs:
+        A, bs = _trace(m, n, k)
+        batched, serial = SolverServer(slots=k), SolverServer(slots=1)
+        # Warm both servers on the same matrix at a tiny iteration budget:
+        # the first trace compiles each server's group step closure (one
+        # per slot width), which must not be billed to the steady state.
+        _serve(batched, A, bs, max_iters=2)
+        _serve(serial, A, bs[:1], max_iters=2)
+
+        wall_b, lats, passes_b, res_b = _serve(batched, A, bs)
+        wall_s, _, passes_s, res_s = _serve(serial, A, bs)
+
+        rps_b, rps_s = k / wall_b, k / wall_s
+        rec = {"suite": "serve", "m": m, "n": n, "requests": k,
+               "batched": {"wall_s": round(wall_b, 4),
+                           "requests_per_s": round(rps_b, 2),
+                           "p50_latency_ms": round(
+                               lats[len(lats) // 2] * 1e3, 3),
+                           "p99_latency_ms": round(
+                               lats[min(int(len(lats) * 0.99),
+                                        len(lats) - 1)] * 1e3, 3),
+                           "group_a_passes": passes_b},
+               "serial": {"wall_s": round(wall_s, 4),
+                          "requests_per_s": round(rps_s, 2),
+                          "total_a_passes": passes_s},
+               "throughput_ratio": round(rps_b / max(rps_s, 1e-12), 3),
+               "a_pass_ratio": round(passes_s / max(passes_b, 1), 3),
+               "structural": group_pass_counts()}
+        print("BENCH " + json.dumps(rec))
+        rows.append((
+            f"serve_{m}x{n}_k{k}",
+            wall_b / k * 1e6,
+            f"rps_batched={rps_b:.1f};rps_serial={rps_s:.1f};"
+            f"throughput_ratio={rps_b / max(rps_s, 1e-12):.2f};"
+            f"p99_ms={rec['batched']['p99_latency_ms']:.1f};"
+            f"a_pass_ratio={rec['a_pass_ratio']:.2f}"))
+    return rows

@@ -10,7 +10,9 @@ planner = execution-planner golden decisions + machine-model calibration
 from measured timings, persisted next to the autotune cache).
 bench_optim additionally emits ``BENCH {json}`` lines for the fused-vs-
 unfused gradient hot path (wall time, iterations/sec, counted A-passes
-per attempt: 2 unfused → 1 fused).
+per attempt: 2 unfused → 1 fused); serve = the solver serving frontend
+(bench_serve: requests/sec + p50/p99 latency under a shared-matrix trace,
+batched-vs-serial throughput ratio, grouped-vs-serial A-pass counts).
 """
 from __future__ import annotations
 
@@ -25,11 +27,11 @@ def main() -> None:
                     help="paper-size problems (slow on one core)")
     ap.add_argument("--only", default=None,
                     help="run a single suite: "
-                         "svd|optim|gemm|sparse|autotune|planner")
+                         "svd|optim|gemm|sparse|autotune|planner|serve")
     args = ap.parse_args()
 
     from benchmarks import (bench_svd, bench_optim, bench_gemm, bench_sparse,
-                            bench_autotune, bench_planner)
+                            bench_autotune, bench_planner, bench_serve)
     suites = {
         "svd": lambda: bench_svd.run(),
         "optim": lambda: bench_optim.run(full=args.full),
@@ -37,6 +39,7 @@ def main() -> None:
         "sparse": lambda: bench_sparse.run(),
         "autotune": lambda: bench_autotune.run(),
         "planner": lambda: bench_planner.run(),
+        "serve": lambda: bench_serve.run(full=args.full),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

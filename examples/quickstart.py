@@ -131,3 +131,32 @@ print(p.explain())                       # why gram beats lanczos here
 # "tightened" line), writes machine.json, and re-plans a golden shape to
 # show `calibrated: true`.  `python -m benchmarks.run --only planner`
 # runs the same thing inside the benchmark harness.
+
+# --- Serving: many users, one A-pass --------------------------------------
+# launch/serve.py turns the solver into a frontend.  Requests that share a
+# design matrix are grouped, and the WHOLE group advances with ONE fused
+# multi-RHS A-pass per solver iteration — three users below cost the same
+# matrix traffic per iteration as one.  The queue is continuously batched
+# (requests join/leave between iterations, not between solves) and
+# admission is planner-priced: plan() prices each request, the scheduler
+# packs a device-time budget per step, joining an active group is free.
+from repro import api
+from repro.launch.serve import SolverServer
+
+server = SolverServer(slots=8)
+b1, b2, b3 = (jnp.asarray((A @ rng.normal(size=64)).astype(np.float32))
+              for _ in range(3))
+ids = [server.submit(api.SolveRequest(A=A, b=bi, loss="quad",
+                                      method="gra", tol=1e-6))
+       for bi in (b1, b2, b3)]
+server.run()
+infos = [server.result(i).info for i in ids]
+print(f"\nserved {len(ids)} requests in one group "
+      f"(plan: {infos[0]['plan']}); amortized A-passes per request: "
+      f"{[int(i['a_passes']) for i in infos]} — one fused pass per "
+      f"iteration covers the whole group")
+
+# Benchmark it as a service (requests/sec, p50/p99 latency, batched-vs-
+# serial throughput under a shared-matrix trace):
+#
+#     PYTHONPATH=src python -m benchmarks.run --only serve

@@ -139,6 +139,32 @@ class RowMatrix(T.DistMatrix):
             out_specs=(P(), P(), P(self.row_axes)))(self.rows, x, t, w)
         return f, g, z
 
+    def fused_grad_multi(self, x: Array, smooths
+                         ) -> tuple[Array, Array, Array]:
+        """Request-batched fused gradients: (f, g, z) for a GROUP of k
+        right-hand sides in ONE streaming pass over the shard — each HBM
+        read of an A block is amortized across every request.  `x` is
+        (k × n); `smooths` is a sequence of k row-separable smooths sharing
+        one loss kind/param (or a single smooth with stacked 2-D targets).
+        Returns (replicated (k,) values, replicated (k × n) gradients,
+        image sharded (k × m) over the row axes)."""
+        from repro.kernels import ops as _ops
+        axes = self.row_axes
+        kind, t, w, prm = T.row_separable_batch_inputs(
+            smooths, self.rows.shape[0], self._row_mask)
+        x = jnp.atleast_2d(jnp.asarray(x))
+
+        def body(a, x, t, w):
+            f, g, z = _ops.fused_grad_multi(a, x, t, w, loss=kind, param=prm)
+            return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
+
+        f, g, z = self._smap(
+            body,
+            in_specs=(self._spec, P(), P(None, self.row_axes),
+                      P(None, self.row_axes)),
+            out_specs=(P(), P(), P(None, self.row_axes)))(self.rows, x, t, w)
+        return f, g, z
+
     def multiply_local(self, B: Array) -> "RowMatrix":
         """A @ B for a small replicated B — the `U = A (VΣ⁻¹)` pattern:
         broadcast the small factor, then embarrassingly parallel (autotuned

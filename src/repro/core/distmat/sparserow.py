@@ -341,6 +341,44 @@ class SparseRowMatrix(T.DistMatrix):
             out_specs=(P(), P(), P(axes)))(self.data, self.cols, xp, t, w)
         return f, g[:n], z
 
+    def fused_grad_multi(self, x: Array, smooths, *,
+                         dispatch: str = "auto"
+                         ) -> tuple[Array, Array, Array]:
+        """Request-batched fused gradients over the stored blocks: a GROUP
+        of k right-hand sides answered with ONE read of each stored block
+        (the BSR multi-RHS kernel), under the same density-aware dispatch
+        as fused_grad.  `x` (k × n); `smooths` a sequence of k
+        row-separable smooths sharing one loss kind/param.  Returns
+        (replicated (k,) values, replicated (k × n) gradients, image
+        sharded (k × m_pad) over the row axes)."""
+        from repro.kernels import ops as _ops
+        use_bsr = self._use_bsr(1, dispatch)
+        axes = self.row_axes
+        n = self.dims[1]
+        kind, t, w, prm = T.row_separable_batch_inputs(smooths, self.m_pad,
+                                                       self._row_mask)
+        x = jnp.atleast_2d(jnp.asarray(x))
+        xp = jnp.pad(x, ((0, 0), (0, self.n_pad - x.shape[1]))) \
+            if x.shape[1] < self.n_pad else x
+
+        def body(data, cols, xp, t, w):
+            local = self._local(data, cols)
+            if use_bsr:
+                f, g, z = _ops.fused_grad_bsr_multi(local, xp, t, w,
+                                                    loss=kind, param=prm)
+            else:
+                f, g, z = _ops.fused_grad_multi(local.to_dense(), xp, t, w,
+                                                loss=kind, param=prm)
+            return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
+
+        f, g, z = self._smap(
+            body,
+            in_specs=(self._dspec, self._dspec, P(), P(None, axes),
+                      P(None, axes)),
+            out_specs=(P(), P(), P(None, axes)))(
+            self.data, self.cols, xp, t, w)
+        return f, g[:, :n], z
+
     def gram(self, *, dispatch: str = "auto") -> Array:
         """AᵀA, replicated — per-shard AᵀA with the sparse operand on the
         transpose side (flops ∝ stored blocks · n), then a tree all-reduce.

@@ -105,6 +105,53 @@ def row_separable_inputs(smooth, m_pad: int, row_mask_fn):
     return sep.kind, t, w, float(getattr(sep, "param", 1.0))
 
 
+def row_separable_batch_inputs(smooths, m_pad: int, row_mask_fn):
+    """Resolve a *group* of row-separable smooths into multi-RHS fused
+    kernel inputs: (kind, targets (k × m_pad), weights (k × m_pad), param).
+
+    `smooths` is either a sequence of k smooths (all must share the same
+    loss kind and static param — that is what makes them one servable
+    group) or a single smooth whose target/weights are already stacked
+    2-D (k × m) arrays.  Shared by RowMatrix.fused_grad_multi and
+    SparseRowMatrix.fused_grad_multi."""
+    def resolve(s):
+        sep = s if hasattr(s, "kind") else (
+            s.as_row_separable() if hasattr(s, "as_row_separable") else None)
+        if sep is None:
+            raise ValueError("fused_grad_multi needs row-separable smooths")
+        return sep
+
+    if not isinstance(smooths, (list, tuple)):
+        sep = resolve(smooths)
+        t = jnp.atleast_2d(jnp.asarray(sep.target))
+        seps = [sep]
+        ts = [t[i] for i in range(t.shape[0])]
+        ws = ([None] * t.shape[0] if sep.weights is None else
+              [jnp.atleast_2d(jnp.asarray(sep.weights))[i]
+               for i in range(t.shape[0])])
+    else:
+        seps = [resolve(s) for s in smooths]
+        ts = [jnp.asarray(s.target) for s in seps]
+        ws = [None if s.weights is None else jnp.asarray(s.weights)
+              for s in seps]
+
+    kinds = {s.kind for s in seps}
+    params = {float(getattr(s, "param", 1.0)) for s in seps}
+    if len(kinds) != 1 or len(params) != 1:
+        raise ValueError(
+            f"a fused group must share one loss kind/param, got "
+            f"{sorted(kinds)} / {sorted(params)}")
+
+    mask = row_mask_fn()
+
+    def pad1(v):
+        return jnp.pad(v, (0, m_pad - v.shape[0])) if v.shape[0] < m_pad else v
+
+    t2 = jnp.stack([pad1(t) for t in ts])
+    w2 = jnp.stack([mask if w is None else pad1(w) for w in ws])
+    return kinds.pop(), t2, w2, params.pop()
+
+
 def dimsum_variance(s2: Array, p: Array) -> Array:
     """Per-pair sampled-DIMSUM estimator variance,
         Var[ŝᵢⱼ] = Σ_k (ã_ki ã_kj)² · (1/(pᵢpⱼ) − 1),

@@ -126,8 +126,11 @@ def lanczos_eigsh(op: Callable[[Array], Array], n: int, k: int,
     final = jax.lax.while_loop(cond, cycle, init)
     vals = final.ritz[:k]
     vecs = final.V[:k].T                               # (n, k)
+    # op_calls is structural: the first cycle runs ncv expand steps, every
+    # later cycle resumes from the k retained Ritz vectors (ncv − k steps).
+    op_calls = ncv + jnp.maximum(final.restarts - 1, 0) * (ncv - k)
     info = {"restarts": final.restarts, "resid": final.resid[:k],
-            "converged": final.done}
+            "converged": final.done, "ncv": ncv, "op_calls": op_calls}
     return vals, vecs, info
 
 

@@ -152,6 +152,10 @@ def compute_svd(A, k: int, *, compute_u: bool = True,
         mode = _planner.plan("svd", {"m": m, "n": n, "k": k},
                              context=ctx).choice
 
+    # All branches report the standardized info keys (iterations / a_passes
+    # / converged / plan) alongside their native diagnostics; the native
+    # mode-specific keys ("mode", "restarts", "passes_over_A", ...) are
+    # deprecated aliases kept for one release.
     if mode == "gram":
         # §3.1.2 tall-and-skinny: one all-reduce builds AᵀA, the
         # eigendecomposition is a driver-local (replicated) op.
@@ -159,7 +163,8 @@ def compute_svd(A, k: int, *, compute_u: bool = True,
         w, V = jnp.linalg.eigh(G)
         w, V = w[::-1][:k], V[:, ::-1][:, :k]
         s = jnp.sqrt(jnp.maximum(w, 0.0))
-        info = {"mode": "gram"}
+        info = {"mode": "gram", "plan": "gram", "iterations": 0,
+                "a_passes": 1, "converged": True}
     elif mode == "randomized":
         # Few-pass sketch path: U falls out of the range basis for free, so
         # recover it there instead of paying _recover_u's extra pass.
@@ -169,14 +174,21 @@ def compute_svd(A, k: int, *, compute_u: bool = True,
         U, s, V, info = _randsvd.randomized_svd(
             A, k, oversampling=oversampling, power_iters=power_iters,
             seed=seed, compute_u=compute_u)
+        info = dict(info, plan="randomized", iterations=power_iters,
+                    a_passes=info["passes_over_A"], converged=True)
         return SVDResult(U=U, s=s, V=V, info=info)
     else:
         # §3.1.1 square/sparse: ARPACK-analogue matrix-free Lanczos.
         s, V, info = _lanczos.svd_via_lanczos(A, k, seed=seed, **lanczos_kw)
-        info = dict(info, mode="lanczos")
+        # Each normal-equations op call is a matvec + rmatvec = 2 A-passes.
+        info = dict(info, mode="lanczos", plan="lanczos",
+                    iterations=info["restarts"],
+                    a_passes=2 * info["op_calls"])
 
     U = _recover_u(A, s, V, rcond) if (
         compute_u and isinstance(A, (RowMatrix, SparseRowMatrix))) else None
+    if U is not None:
+        info = dict(info, a_passes=info["a_passes"] + 1)  # the U = A(VΣ⁻¹) pass
     return SVDResult(U=U, s=s, V=V, info=info)
 
 

@@ -25,9 +25,12 @@ def minimize(problem: Problem, method: str, *, max_iters: int = 200,
         raise ValueError(f"method must be one of {METHODS}")
     L0 = (1.0 / step_size) if step_size else problem.L
     if method == "lbfgs":
+        from repro.core.tfocs.solver import fused_gradient_enabled
+        ppe = 1 if fused_gradient_enabled(problem.smooth, problem.linop,
+                                          fused) else 2
         x, info = lbfgs(lbfgs_value_and_grad(problem, fused=fused),
                         jnp.zeros(problem.linop.in_shape),
-                        max_iters=max_iters, tol=tol)
+                        max_iters=max_iters, tol=tol, passes_per_eval=ppe)
         return x, info
     opts = TfocsOptions(max_iters=max_iters, tol=tol, L0=L0, fused=fused)
     return minimize_first_order(method, problem.smooth, problem.linop,

@@ -1,0 +1,301 @@
+"""Request-batched solver engines for the serving frontend (launch/serve).
+
+The paper's driver/cluster split prices every optimizer iteration in
+streaming passes over the distributed matrix.  When k requests share the
+same design matrix A — the multi-user regime the serving frontend exists
+for — their iterations can share those passes: the multi-RHS fused kernels
+(kernels/fusedgrad) evaluate f(Ax), Aᵀ∇f(Ax) and Ax for a whole GROUP of
+right-hand sides in ONE streaming read of A, so a group of k requests
+consumes exactly as many A-passes per iteration as a single request.
+
+Two engines, both operating on a fixed number of SLOTS with per-slot
+convergence masks (the vLLM continuous-batching idiom transplanted to
+solvers — the server admits/retires requests between iterations by editing
+slot rows, and the step functions freeze inactive slots):
+
+  * ``gra``   — proximal gradient with per-slot backtracking Lipschitz
+    estimation (the θ ≡ 1 fused TFOCS engine of core/tfocs/solver, with the
+    backtracking attempt loop shared across the group: every attempt is one
+    group A-pass, and slots whose step already passed recompute the same
+    accepted candidate deterministically while stragglers halve their step);
+  * ``lbfgs`` — L-BFGS with the two-loop recursion vmapped over slots and a
+    shared backtracking Armijo line search (each probe is one group A-pass).
+
+Both step functions return the number of group A-passes they consumed, so
+the server can meter per-request amortized cost; the structural parity —
+group passes == single-request passes — is what tests/test_serve.py counts.
+
+Only the fused (row-separable) path is provided: serving groups exist to
+share A-passes, and the fused kernels are how a pass is shared.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optim.lbfgs import _two_loop
+from repro.core.tfocs.smooth import RowSeparable
+
+Array = jax.Array
+
+REGS = ("none", "l1", "l2")
+
+
+def prox_batch(reg: str, X: Array, step: Array, lam: Array) -> Array:
+    """Per-slot prox over stacked iterates: X (S × n), step/lam (S,).
+    Matches ProxZero / ProxL1 / ProxL2Sq (core/tfocs/prox) row-wise."""
+    if reg == "none":
+        return X
+    tl = (step * lam)[:, None]
+    if reg == "l1":
+        return jnp.sign(X) * jnp.maximum(jnp.abs(X) - tl, 0.0)
+    if reg == "l2":
+        return X / (1.0 + tl)
+    raise ValueError(f"reg must be one of {REGS}, got {reg!r}")
+
+
+def prox_value_batch(reg: str, X: Array, lam: Array) -> Array:
+    """Per-slot h(x): (S,) regularizer values for the stacked iterates."""
+    if reg == "none":
+        return jnp.zeros(X.shape[0], jnp.float32)
+    if reg == "l1":
+        return lam * jnp.sum(jnp.abs(X), axis=1)
+    if reg == "l2":
+        return 0.5 * lam * jnp.sum(X * X, axis=1)
+    raise ValueError(f"reg must be one of {REGS}, got {reg!r}")
+
+
+def _group_vag(linop, kind: str, param: float, X: Array, T: Array, W: Array):
+    """(F, G) for the whole group in ONE A-pass: the stacked RowSeparable
+    carries per-slot targets/weights (inactive slots have zero weights, so
+    their value/gradient are exactly 0)."""
+    sep = RowSeparable(kind, T, W, param)
+    f, g, _ = linop.fused_grad_multi(X, sep)
+    return f, g
+
+
+# -- batched proximal gradient (gra) ------------------------------------------
+
+class GraGroupState(NamedTuple):
+    X: Array        # (S, n) per-slot iterates
+    F: Array        # (S,)  smooth value at X (carried, no recompute)
+    G: Array        # (S, n) x-space gradient at X (carried)
+    L: Array        # (S,)  per-slot Lipschitz estimates
+    k: Array        # (S,)  per-slot completed iterations
+    done: Array     # (S,)  per-slot convergence flag
+    obj: Array      # (S,)  last composite objective f + h
+    bt: Array       # (S,)  per-slot cumulative backtracks
+
+
+def gra_group_init(slots: int, n: int, L0: float = 1.0) -> GraGroupState:
+    return GraGroupState(
+        X=jnp.zeros((slots, n), jnp.float32),
+        F=jnp.zeros((slots,), jnp.float32),
+        G=jnp.zeros((slots, n), jnp.float32),
+        L=jnp.full((slots,), L0, jnp.float32),
+        k=jnp.zeros((slots,), jnp.int32),
+        done=jnp.zeros((slots,), bool),
+        obj=jnp.full((slots,), jnp.nan, jnp.float32),
+        bt=jnp.zeros((slots,), jnp.int32))
+
+
+def make_gra_group(linop, kind: str, param: float = 1.0, *,
+                   reg: str = "none", alpha: float = 2.0, beta: float = 0.9,
+                   max_backtracks: int = 30, backtracking: bool = True,
+                   tol_eps: float = 1e-12):
+    """Build (seed_fn, step_fn) for a batched proximal-gradient group.
+
+    seed_fn(state, T, W, lam)                → (state, passes)
+        recompute F/G (and obj) for every slot — ONE group A-pass; called
+        after the server edits slot rows (admission), and a no-op change
+        for untouched slots (same inputs, same outputs).
+    step_fn(state, T, W, lam, tol, active)   → (state, passes)
+        one outer iteration for all active slots; `passes` is the number
+        of group A-passes consumed (1 + extra backtracking attempts).
+    Inactive slots are frozen bit-for-bit.
+    """
+    if reg not in REGS:
+        raise ValueError(f"reg must be one of {REGS}, got {reg!r}")
+
+    def seed(state: GraGroupState, T: Array, W: Array, lam: Array):
+        F, G = _group_vag(linop, kind, param, state.X, T, W)
+        obj = F + prox_value_batch(reg, state.X, lam)
+        return state._replace(F=F, G=G, obj=obj), jnp.int32(1)
+
+    def step(state: GraGroupState, T: Array, W: Array, lam: Array,
+             tol: Array, active: Array):
+        act = active & ~state.done
+        L0 = jnp.where(act, state.L * (beta if backtracking else 1.0),
+                       state.L)
+
+        def attempt(L):
+            stepsz = jnp.where(act, 1.0 / L, 1.0)
+            Xn = prox_batch(reg, state.X - stepsz[:, None] * state.G,
+                            stepsz, lam)
+            Xn = jnp.where(act[:, None], Xn, state.X)
+            Fn, Gn = _group_vag(linop, kind, param, Xn, T, W)   # ← ONE pass
+            dX = Xn - state.X
+            rhs = (state.F + jnp.sum(state.G * dX, axis=1)
+                   + 0.5 * L * jnp.sum(dX * dX, axis=1))
+            ok = Fn <= rhs + tol_eps * jnp.abs(state.F)
+            return Xn, Fn, Gn, ok
+
+        Xn, Fn, Gn, ok = attempt(L0)
+        carry = (L0, Xn, Fn, Gn, ok, jnp.int32(1),
+                 jnp.zeros_like(state.bt))
+
+        if backtracking:
+            def bt_cond(c):
+                _, _, _, _, ok, tries, _ = c
+                return jnp.any(act & ~ok) & (tries < max_backtracks)
+
+            def bt_body(c):
+                L, _, _, _, ok, tries, bt = c
+                fail = act & ~ok
+                L = jnp.where(fail, L * alpha, L)
+                bt = bt + fail.astype(jnp.int32)
+                # Passed slots recompute the same accepted candidate (same
+                # L, same carried state → identical), so one shared attempt
+                # is still ONE group A-pass for everybody.
+                Xn, Fn, Gn, ok = attempt(L)
+                return (L, Xn, Fn, Gn, ok, tries + 1, bt)
+
+            carry = jax.lax.while_loop(bt_cond, bt_body, carry)
+
+        L, Xn, Fn, Gn, _, tries, bt = carry
+        dX = Xn - state.X
+        rel = (jnp.linalg.norm(dX, axis=1)
+               / jnp.maximum(1.0, jnp.linalg.norm(Xn, axis=1)))
+        conv = act & (rel < tol)
+        obj = Fn + prox_value_batch(reg, Xn, lam)
+        sel = act[:, None]
+        return GraGroupState(
+            X=jnp.where(sel, Xn, state.X),
+            F=jnp.where(act, Fn, state.F),
+            G=jnp.where(sel, Gn, state.G),
+            L=jnp.where(act, L, state.L),
+            k=state.k + act.astype(jnp.int32),
+            done=state.done | conv,
+            obj=jnp.where(act, obj, state.obj),
+            bt=state.bt + bt), tries
+
+    return seed, step
+
+
+# -- batched L-BFGS -----------------------------------------------------------
+
+class LbfgsGroupState(NamedTuple):
+    X: Array        # (S, n)
+    F: Array        # (S,)
+    G: Array        # (S, n)
+    S_: Array       # (S, mem, n) s-history
+    Y: Array        # (S, mem, n) y-history
+    rho: Array      # (S, mem)
+    idx: Array      # (S,) circular write pointers
+    filled: Array   # (S,) valid history pairs
+    k: Array        # (S,)
+    done: Array     # (S,)
+    obj: Array      # (S,)
+
+
+def lbfgs_group_init(slots: int, n: int, mem: int = 10) -> LbfgsGroupState:
+    return LbfgsGroupState(
+        X=jnp.zeros((slots, n), jnp.float32),
+        F=jnp.zeros((slots,), jnp.float32),
+        G=jnp.zeros((slots, n), jnp.float32),
+        S_=jnp.zeros((slots, mem, n), jnp.float32),
+        Y=jnp.zeros((slots, mem, n), jnp.float32),
+        rho=jnp.zeros((slots, mem), jnp.float32),
+        idx=jnp.zeros((slots,), jnp.int32),
+        filled=jnp.zeros((slots,), jnp.int32),
+        k=jnp.zeros((slots,), jnp.int32),
+        done=jnp.zeros((slots,), bool),
+        obj=jnp.full((slots,), jnp.nan, jnp.float32))
+
+
+def make_lbfgs_group(linop, kind: str, param: float = 1.0, *,
+                     c1: float = 1e-4, max_ls: int = 25,
+                     init_step: float = 1.0):
+    """Build (seed_fn, step_fn) for a batched L-BFGS group: the two-loop
+    recursion is vmapped over slots and the Armijo backtracking line search
+    is shared — each probe evaluates the WHOLE group in one A-pass, with
+    per-slot step halving.  Same (state, T, W, tol, active) → (state,
+    passes) contract as the gra engine (no regularizer: L-BFGS needs a
+    smooth objective, exactly like lbfgs_composite)."""
+
+    def seed(state: LbfgsGroupState, T: Array, W: Array):
+        F, G = _group_vag(linop, kind, param, state.X, T, W)
+        return state._replace(F=F, G=G, obj=F), jnp.int32(1)
+
+    def step(state: LbfgsGroupState, T: Array, W: Array,
+             tol: Array, active: Array):
+        act = active & ~state.done
+        mem = state.S_.shape[1]
+
+        d = -jax.vmap(_two_loop)(state.G, state.S_, state.Y, state.rho,
+                                 state.idx, state.filled)
+        gd = jnp.sum(state.G * d, axis=1)
+        bad = gd >= 0
+        d = jnp.where(bad[:, None], -state.G, d)
+        gd = jnp.where(bad, -jnp.sum(state.G * state.G, axis=1), gd)
+
+        gnorm = jnp.linalg.norm(state.G, axis=1)
+        t0 = jnp.where(state.filled > 0, 1.0,
+                       init_step / jnp.maximum(gnorm, 1e-12))
+
+        def probe(t):
+            Xp = jnp.where(act[:, None], state.X + t[:, None] * d, state.X)
+            Fp, Gp = _group_vag(linop, kind, param, Xp, T, W)    # ← ONE pass
+            return Fp, Gp
+
+        F1, G1 = probe(t0)
+
+        def ls_cond(c):
+            t, Fn, _, tries = c
+            fail = act & (Fn > state.F + c1 * t * gd)
+            return jnp.any(fail) & (tries < max_ls)
+
+        def ls_body(c):
+            t, Fn, _, tries = c
+            fail = act & (Fn > state.F + c1 * t * gd)
+            t = jnp.where(fail, 0.5 * t, t)
+            Fn, Gn = probe(t)
+            return t, Fn, Gn, tries + 1
+
+        t, Fn, Gn, tries = jax.lax.while_loop(
+            ls_cond, ls_body, (t0, F1, G1, jnp.int32(1)))
+
+        Xn = state.X + t[:, None] * d
+        s = Xn - state.X
+        y = Gn - state.G
+        sy = jnp.sum(s * y, axis=1)
+        keep = act & (sy > 1e-10 * jnp.linalg.norm(s, axis=1)
+                      * jnp.linalg.norm(y, axis=1))
+
+        # Per-slot circular write without dynamic indices: one-hot the write
+        # slot, masked by the curvature guard.
+        onehot = (jnp.arange(mem)[None, :] == state.idx[:, None]) \
+            & keep[:, None]                                   # (S, mem)
+        S_ = jnp.where(onehot[:, :, None], s[:, None, :], state.S_)
+        Y = jnp.where(onehot[:, :, None], y[:, None, :], state.Y)
+        rho = jnp.where(onehot, (1.0 / jnp.maximum(sy, 1e-30))[:, None],
+                        state.rho)
+        idx = jnp.where(keep, (state.idx + 1) % mem, state.idx)
+        filled = jnp.where(keep, jnp.minimum(state.filled + 1, mem),
+                           state.filled)
+
+        gnorm_new = jnp.linalg.norm(Gn, axis=1)
+        conv = act & (gnorm_new < tol * jnp.maximum(1.0, jnp.abs(Fn)))
+        sel = act[:, None]
+        return LbfgsGroupState(
+            X=jnp.where(sel, Xn, state.X),
+            F=jnp.where(act, Fn, state.F),
+            G=jnp.where(sel, Gn, state.G),
+            S_=S_, Y=Y, rho=rho, idx=idx, filled=filled,
+            k=state.k + act.astype(jnp.int32),
+            done=state.done | conv,
+            obj=jnp.where(act, Fn, state.obj)), tries
+
+    return seed, step

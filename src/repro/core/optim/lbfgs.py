@@ -73,7 +73,11 @@ def _two_loop(g: Array, S: Array, Y: Array, rho: Array, idx: Array,
 def lbfgs(value_and_grad: Callable[[Array], tuple[Array, Array]],
           x0: Array, *, mem: int = 10, max_iters: int = 500,
           tol: float = 1e-8, c1: float = 1e-4, max_ls: int = 25,
-          init_step: float = 1.0) -> tuple[Array, dict]:
+          init_step: float = 1.0,
+          passes_per_eval: int = 2) -> tuple[Array, dict]:
+    """`passes_per_eval` is how many streaming A-passes one
+    `value_and_grad` call costs (1 for the fused single-pass gradient, 2
+    for apply + adjoint) — it only feeds the info dict's `a_passes`."""
     n = x0.shape[0]
 
     def outer(state: LbfgsState) -> LbfgsState:
@@ -138,7 +142,14 @@ def lbfgs(value_and_grad: Callable[[Array], tuple[Array, Array]],
         done=jnp.asarray(False), n_evals=jnp.int32(1))
     final = jax.lax.while_loop(
         lambda s: (~s.done) & (s.k < max_iters), outer, init)
-    return final.x, {"iterations": final.k, "history": final.hist,
+    # Standardized keys (iterations / a_passes / converged / plan) plus
+    # solver-specific detail; n_evals stays as the native count (deprecated
+    # as a primary key — a_passes is the cross-solver currency).
+    return final.x, {"iterations": final.k,
+                     "a_passes": final.n_evals * passes_per_eval,
+                     "converged": final.done,
+                     "plan": "fused" if passes_per_eval == 1 else "two-pass",
+                     "history": final.hist,
                      "n_evals": final.n_evals,
                      "objective": final.f}
 
@@ -167,9 +178,14 @@ def lbfgs_composite(smooth, linop, prox=None, x0: Array | None = None,
         def value_and_grad(x):
             f, g, _ = linop.fused_grad(x, sep)       # ← ONE A-pass
             return f, g
+
+        passes_per_eval = 1
     else:
         def value_and_grad(x):
             z = linop.apply(x)
             return smooth.value(z), linop.adjoint(smooth.grad(z))
 
-    return lbfgs(value_and_grad, x0, max_iters=opts.max_iters, tol=opts.tol)
+        passes_per_eval = 2
+
+    return lbfgs(value_and_grad, x0, max_iters=opts.max_iters, tol=opts.tol,
+                 passes_per_eval=passes_per_eval)

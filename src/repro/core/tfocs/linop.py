@@ -75,6 +75,22 @@ class LinopMatrix:
                                loss=sep.kind,
                                param=float(getattr(sep, "param", 1.0)))
 
+    def fused_grad_multi(self, x: Array, seps) -> tuple[Array, Array, Array]:
+        """Request-batched fused gradients: (f (k,), g (k × n), z (k × m))
+        for a GROUP of k right-hand sides in one streaming pass over A —
+        each HBM read of A is amortized across every request in the group.
+        `x` is (k × n); `seps` a sequence of k RowSeparable smooths sharing
+        one loss kind/param (or a single stacked-target smooth)."""
+        if isinstance(self.A, _DIST):
+            return self.A.fused_grad_multi(x, seps)
+        from repro.core.distmat import types as _T
+        from repro.kernels import ops as _ops
+        kind, t, w, prm = _T.row_separable_batch_inputs(
+            seps, self.out_shape[0], lambda: self.row_weights())
+        return _ops.fused_grad_multi(jnp.asarray(self.A),
+                                     jnp.atleast_2d(jnp.asarray(x)), t, w,
+                                     loss=kind, param=prm)
+
     def operand_dtype(self):
         """dtype of the matrix operand (the planner dispatch input)."""
         A = self.A
@@ -143,7 +159,7 @@ class CountingLinop:
     the perf-smoke test rely on this)."""
     base: object
     counts: dict = field(default_factory=lambda: {
-        "apply": 0, "adjoint": 0, "fused_grad": 0})
+        "apply": 0, "adjoint": 0, "fused_grad": 0, "fused_grad_multi": 0})
 
     @property
     def in_shape(self):
@@ -171,6 +187,12 @@ class CountingLinop:
     def fused_grad(self, x: Array, sep):
         self.counts["fused_grad"] += 1
         return self.base.fused_grad(x, sep)
+
+    def fused_grad_multi(self, x: Array, seps):
+        # ONE pass over A regardless of group width — that equality is
+        # exactly what the serving parity tests assert.
+        self.counts["fused_grad_multi"] += 1
+        return self.base.fused_grad_multi(x, seps)
 
     def operand_dtype(self):
         return self.base.operand_dtype()

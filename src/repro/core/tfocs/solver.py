@@ -219,7 +219,14 @@ def _tfocs_fused(smooth, linop, prox, x0: Array, opts: TfocsOptions,
         hist=jnp.full((opts.max_iters,), jnp.nan, jnp.float32),
         done=jnp.asarray(False), n_backtracks=jnp.int32(0))
     final = jax.lax.while_loop(cond, outer, init)
-    info = {"iterations": final.k, "history": final.hist,
+    # Standardized info keys (iterations / a_passes / converged / plan) plus
+    # solver-specific detail; "fused" is a deprecated alias of plan=="fused"
+    # kept for one release.  a_passes: seed + one per attempt (iteration +
+    # extra backtracks), each exactly one streaming read of A.
+    info = {"iterations": final.k,
+            "a_passes": 1 + final.k + final.n_backtracks,
+            "converged": final.done, "plan": "fused",
+            "history": final.hist,
             "n_backtracks": final.n_backtracks,
             "n_restarts": jnp.int32(0), "fused": True,
             "objective": final.hist[jnp.maximum(final.k - 1, 0)]}
@@ -324,7 +331,12 @@ def tfocs(smooth, linop, prox, x0: Array,
         done=jnp.asarray(False),
         n_backtracks=jnp.int32(0), n_restarts=jnp.int32(0))
     final = jax.lax.while_loop(cond, outer, init)
-    info = {"iterations": final.k, "history": final.hist,
+    # Standardized keys as in _tfocs_fused; the cached accelerated scheme
+    # pays apply + adjoint (two passes) per attempt, plus the seed apply.
+    info = {"iterations": final.k,
+            "a_passes": 1 + 2 * (final.k + final.n_backtracks),
+            "converged": final.done, "plan": "cached",
+            "history": final.hist,
             "n_backtracks": final.n_backtracks,
             "n_restarts": final.n_restarts, "fused": False,
             "objective": final.hist[jnp.maximum(final.k - 1, 0)]}

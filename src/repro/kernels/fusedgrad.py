@@ -50,10 +50,12 @@ Array = jax.Array
 LOSSES = ("quad", "logistic", "huber", "poisson")
 
 
-def row_loss_grad(z: Array, t: Array, w: Array, loss: str,
+def row_loss_elem(z: Array, t: Array, w: Array, loss: str,
                   param: float = 1.0) -> tuple[Array, Array]:
-    """(Σ wᵢ ℓ(zᵢ, tᵢ), w ∘ ℓ'(z, t)) in float32 — the row-local residual
-    shared by the kernels and the structured jnp paths.
+    """Elementwise (w ∘ ℓ(z, t), w ∘ ℓ'(z, t)) in float32 — the row-local
+    residual shared by the kernels and the structured jnp paths.  Keeping
+    the loss un-summed lets the multi-RHS kernels accumulate a per-request
+    value over any axis layout.
 
       quad:     ℓ(z, b) = ½ (z − b)²,            ℓ' = z − b
       logistic: ℓ(z, y) = log(1 + e^(−y z)),     ℓ' = −y σ(−y z)
@@ -68,24 +70,29 @@ def row_loss_grad(z: Array, t: Array, w: Array, loss: str,
     w = w.astype(jnp.float32)
     if loss == "quad":
         d = z - t
-        r = w * d
-        return 0.5 * jnp.sum(r * d), r
+        return 0.5 * w * d * d, w * d
     if loss == "logistic":
         mz = -t * z
-        f = jnp.sum(w * jnp.logaddexp(0.0, mz))
-        return f, w * (-t) * jax.nn.sigmoid(mz)
+        return w * jnp.logaddexp(0.0, mz), w * (-t) * jax.nn.sigmoid(mz)
     if loss == "huber":
         delta = jnp.float32(param)
         d = z - t
         a = jnp.abs(d)
-        f = jnp.sum(w * jnp.where(a <= delta, 0.5 * d * d,
-                                  delta * (a - 0.5 * delta)))
-        return f, w * jnp.clip(d, -delta, delta)
+        le = w * jnp.where(a <= delta, 0.5 * d * d,
+                           delta * (a - 0.5 * delta))
+        return le, w * jnp.clip(d, -delta, delta)
     if loss == "poisson":
         ez = jnp.exp(z)
-        f = jnp.sum(w * (ez - t * z))
-        return f, w * (ez - t)
+        return w * (ez - t * z), w * (ez - t)
     raise ValueError(f"loss must be one of {LOSSES}, got {loss!r}")
+
+
+def row_loss_grad(z: Array, t: Array, w: Array, loss: str,
+                  param: float = 1.0) -> tuple[Array, Array]:
+    """(Σ wᵢ ℓ(zᵢ, tᵢ), w ∘ ℓ'(z, t)) in float32 — the fully-reduced form
+    of `row_loss_elem` (the single-RHS kernels and jnp paths use this)."""
+    le, r = row_loss_elem(z, t, w, loss, param)
+    return jnp.sum(le), r
 
 
 # -- dense tall-skinny kernel -------------------------------------------------
@@ -270,6 +277,202 @@ def fused_grad_bsr(a: BlockELL, x: Array, t: Array, w: Array, *, loss: str,
     return f[0, 0], g.reshape(n), z[0]
 
 
+# -- multi-RHS (request-batched) dense kernel ---------------------------------
+
+def _fused_grad_multi_kernel(a_ref, x_ref, t_ref, w_ref, f_ref, g_ref, z_ref,
+                             g_acc, f_acc, *, m_steps: int, loss: str,
+                             param: float):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        f_acc[...] = jnp.zeros_like(f_acc)
+
+    blk = a_ref[...]                                     # (bm, n)
+    x = x_ref[...]                                       # (kp, n)
+    # One block read serves every request: z = X Aᵀ is a (kp × n)·(n × bm)
+    # product over the block already in VMEM — the whole point of grouping.
+    z = jnp.dot(x, blk.T, preferred_element_type=jnp.float32)   # (kp, bm)
+    le, r = row_loss_elem(z, t_ref[...], w_ref[...], loss, param)
+    z_ref[...] = z
+    g_acc[...] += jnp.dot(r.astype(blk.dtype), blk,
+                          preferred_element_type=jnp.float32)
+    # Per-request loss: fold the lane-aligned bm axis down to one 128-lane
+    # strip (bm % 128 == 0 by layout contract); the host sums the strip.
+    kp, bm = le.shape
+    f_acc[...] += le.reshape(kp, bm // 128, 128).sum(axis=1)
+
+    @pl.when(pl.program_id(0) == m_steps - 1)
+    def _flush():
+        g_ref[...] = g_acc[...]
+        f_ref[...] = f_acc[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "param", "bm", "interpret"))
+def fused_grad_multi(a: Array, x: Array, t: Array, w: Array, *, loss: str,
+                     bm: int, param: float = 1.0, interpret: bool = False
+                     ) -> tuple[Array, Array, Array]:
+    """Request-batched fused gradients: (f, g, z) for kp right-hand sides
+    in ONE streaming pass over A — each A block is read from HBM once and
+    amortized across every request in the group.  Layout: a (m × n) with
+    m % bm == 0, bm % 128 == 0, n % 128 == 0; x (kp × n); t, w (kp × m)
+    with kp a multiple of 8 (sublane) — ops.fused_grad_multi pads.
+    Outputs are float32: f (kp × 128) [sum axis 1 for the per-request
+    values], g (kp × n), z (kp × m)."""
+    m, n = a.shape
+    kp = x.shape[0]
+    assert m % bm == 0 and bm % 128 == 0, (m, bm)
+    assert kp % 8 == 0, kp
+    assert x.shape == (kp, n) and t.shape == (kp, m) and w.shape == (kp, m), \
+        (a.shape, x.shape, t.shape, w.shape)
+    m_steps = m // bm
+
+    return pl.pallas_call(
+        functools.partial(_fused_grad_multi_kernel, m_steps=m_steps,
+                          loss=loss, param=float(param)),
+        grid=(m_steps,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((kp, n), lambda i: (0, 0)),
+            pl.BlockSpec((kp, bm), lambda i: (0, i)),
+            pl.BlockSpec((kp, bm), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((kp, 128), lambda i: (0, 0)),
+            pl.BlockSpec((kp, n), lambda i: (0, 0)),
+            pl.BlockSpec((kp, bm), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, 128), jnp.float32),
+            jax.ShapeDtypeStruct((kp, n), jnp.float32),
+            jax.ShapeDtypeStruct((kp, m), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kp, n), jnp.float32),
+                        pltpu.VMEM((kp, 128), jnp.float32)],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="repro_fused_grad_multi",
+    )(a, x, t, w)
+
+
+# -- multi-RHS BlockELL (BSR) kernel ------------------------------------------
+
+def fused_grad_bsr_multi_vmem(a: BlockELL, kp: int) -> int:
+    """Resident VMEM working-set estimate for the multi-RHS BSR fused
+    kernel: the per-request copies of x, the gradient accumulator, and the
+    t/w/z strips all scale with kp; the staged block-row does not."""
+    bs, ell = a.bs, a.ell
+    nbc = a.shape[1] // bs
+    db = jnp.dtype(a.data.dtype).itemsize
+    return (2 * ell * bs * bs * db          # block-row stream, double-buffered
+            + nbc * kp * bs * db            # resident x (nbc × kp × bs)
+            + 2 * nbc * kp * bs * 4         # g accumulator + g out (f32)
+            + kp * bs * 4                   # f accumulator strip
+            + 6 * kp * bs * 4)              # t, w, z (kp × bs) strips
+
+
+def _fused_grad_bsr_multi_kernel(cols_ref, a_ref, x_ref, t_ref, w_ref,
+                                 f_ref, g_ref, z_ref, g_acc, f_acc, *,
+                                 nbr: int, ell: int, loss: str, param: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        f_acc[...] = jnp.zeros_like(f_acc)
+
+    blocks = a_ref[0]                                    # (ell, bs, bs)
+    bs = blocks.shape[-1]
+    kp = x_ref.shape[1]
+    xall = x_ref[...]                                    # (nbc, kp, bs)
+
+    # z for the whole block-row, all requests at once: each staged block is
+    # contracted against the (kp × bs) slab of x for its block-column.
+    def zstep(j, zacc):
+        c = cols_ref[i * ell + j]
+        xj = jax.lax.dynamic_index_in_dim(xall, c, 0, keepdims=False)
+        bj = jax.lax.dynamic_index_in_dim(blocks, j, 0, keepdims=False)
+        return zacc + jnp.dot(xj, bj.T, preferred_element_type=jnp.float32)
+
+    z = jax.lax.fori_loop(0, ell, zstep, jnp.zeros((kp, bs), jnp.float32))
+    le, r = row_loss_elem(z, t_ref[...], w_ref[...], loss, param)
+    z_ref[...] = z
+    f_acc[...] += le                                     # (kp, bs), summed on host
+
+    # Second sweep over the SAME staged blocks (no HBM re-read): scatter-add
+    # each (kp × bs) Aᵢⱼᵀ r slab into the resident block-column accumulator.
+    def gstep(j, carry):
+        c = cols_ref[i * ell + j]
+        bj = jax.lax.dynamic_index_in_dim(blocks, j, 0, keepdims=False)
+        contrib = jnp.dot(r.astype(bj.dtype), bj,
+                          preferred_element_type=jnp.float32)
+        cur = pl.load(g_acc, (pl.ds(c, 1), slice(None), slice(None)))
+        pl.store(g_acc, (pl.ds(c, 1), slice(None), slice(None)),
+                 cur + contrib[None])
+        return carry
+
+    jax.lax.fori_loop(0, ell, gstep, 0)
+
+    @pl.when(i == nbr - 1)
+    def _flush():
+        g_ref[...] = g_acc[...]
+        f_ref[...] = f_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "param", "interpret"))
+def fused_grad_bsr_multi(a: BlockELL, x: Array, t: Array, w: Array, *,
+                         loss: str, param: float = 1.0,
+                         interpret: bool = False
+                         ) -> tuple[Array, Array, Array]:
+    """Request-batched fused (f, g, z) for a BlockELL shard: every stored
+    block is read from HBM exactly once and serves all kp requests.
+    x (kp, n), t/w (kp, m) over the padded BlockELL dims, kp % 8 == 0;
+    outputs f (kp,), g (kp, n), z (kp, m) in float32."""
+    m, n = a.shape
+    kp = x.shape[0]
+    assert kp % 8 == 0, kp
+    assert x.shape == (kp, n) and t.shape == (kp, m) and w.shape == (kp, m), \
+        (a.shape, x.shape, t.shape, w.shape)
+    bs, ell = a.bs, a.ell
+    nbr, nbc = m // bs, n // bs
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nbr,),
+        in_specs=[
+            pl.BlockSpec((1, ell, bs, bs), lambda i, cols: (i, 0, 0, 0)),
+            pl.BlockSpec((nbc, kp, bs), lambda i, cols: (0, 0, 0)),
+            pl.BlockSpec((kp, bs), lambda i, cols: (0, i)),
+            pl.BlockSpec((kp, bs), lambda i, cols: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((kp, bs), lambda i, cols: (0, 0)),
+            pl.BlockSpec((nbc, kp, bs), lambda i, cols: (0, 0, 0)),
+            pl.BlockSpec((kp, bs), lambda i, cols: (0, i)),
+        ],
+        scratch_shapes=[pltpu.VMEM((nbc, kp, bs), jnp.float32),
+                        pltpu.VMEM((kp, bs), jnp.float32)],
+    )
+    f, g, z = pl.pallas_call(
+        functools.partial(_fused_grad_bsr_multi_kernel, nbr=nbr, ell=ell,
+                          loss=loss, param=float(param)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, bs), jnp.float32),
+            jax.ShapeDtypeStruct((nbc, kp, bs), jnp.float32),
+            jax.ShapeDtypeStruct((kp, m), jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="repro_fused_grad_bsr_multi",
+    )(a.cols.reshape(-1), a.data.reshape(nbr, ell, bs, bs),
+      x.reshape(kp, nbc, bs).transpose(1, 0, 2),
+      t.reshape(kp, m), w.reshape(kp, m))
+    return f.sum(axis=1), g.transpose(1, 0, 2).reshape(kp, n), z
+
+
 # -- structured jnp forms (off-TPU dispatch targets) --------------------------
 
 def fused_grad_jnp(a: Array, x: Array, t: Array, w: Array, *,
@@ -304,3 +507,38 @@ def fused_grad_bsr_jnp(a: BlockELL, x: Array, t: Array, w: Array, *,
     g = jnp.zeros((nbc, bs), jnp.float32).at[a.cols.reshape(-1)].add(
         partial.reshape(nbr * ell, bs))
     return f, g.reshape(a.shape[1]), z
+
+
+def fused_grad_multi_jnp(a: Array, x: Array, t: Array, w: Array, *,
+                         loss: str, param: float = 1.0
+                         ) -> tuple[Array, Array, Array]:
+    """Dense multi-RHS (f, g, z) with the kernel's row-local loss math:
+    x (k, n), t/w (k, m) → f (k,), g (k, n), z (k, m).  One logical pass
+    over A shared by all k requests (XLA reads A once per contraction)."""
+    z = jnp.dot(x, a.T, preferred_element_type=jnp.float32)
+    le, r = row_loss_elem(z, t, w, loss, param)
+    g = jnp.dot(r.astype(a.dtype), a, preferred_element_type=jnp.float32)
+    return le.sum(axis=1), g, z
+
+
+def fused_grad_bsr_multi_jnp(a: BlockELL, x: Array, t: Array, w: Array, *,
+                             loss: str, param: float = 1.0
+                             ) -> tuple[Array, Array, Array]:
+    """BlockELL multi-RHS (f, g, z) via gather/einsum + scatter-add —
+    flops ∝ stored blocks × k, no densification (the CPU dispatch target).
+    x (k, n), t/w (k, m) → f (k,), g (k, n), z (k, m)."""
+    bs = a.bs
+    nbr, ell = a.data.shape[0], a.ell
+    nbc = a.shape[1] // bs
+    k = x.shape[0]
+    xb = x.reshape(k, nbc, bs)
+    gathered = xb[:, a.cols]                              # (k, nbr, ell, bs)
+    z = jnp.einsum("reij,krej->kri", a.data, gathered,
+                   preferred_element_type=jnp.float32).reshape(k, a.shape[0])
+    le, r = row_loss_elem(z, t, w, loss, param)
+    rb = r.astype(a.data.dtype).reshape(k, nbr, bs)
+    partial = jnp.einsum("reij,kri->krej", a.data, rb,
+                         preferred_element_type=jnp.float32)
+    g = jnp.zeros((k, nbc, bs), jnp.float32).at[:, a.cols.reshape(-1)].add(
+        partial.reshape(k, nbr * ell, bs))
+    return le.sum(axis=1), g.reshape(k, a.shape[1]), z

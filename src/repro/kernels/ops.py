@@ -187,6 +187,67 @@ def fused_grad_bsr(a: "_bsr.BlockELL", x: Array, target: Array,
     return f, g.astype(x.dtype), z
 
 
+def fused_grad_multi(a: Array, x: Array, target: Array, weights: Array, *,
+                     loss: str, param: float = 1.0, bm: int | None = None,
+                     tune: str = "auto", force_pallas: bool = False
+                     ) -> tuple[Array, Array, Array]:
+    """Request-batched fused gradients for a dense row shard: k right-hand
+    sides answered in ONE streaming pass over A.  x (k, n), target/weights
+    (k, m) → f (k,) float32, g (k, n) in x.dtype, z (k, m) float32.
+    Padding request slots carry zero weights, so they contribute nothing."""
+    if loss not in _fg.LOSSES:
+        raise ValueError(f"loss must be one of {_fg.LOSSES}, got {loss!r}")
+    m, n = a.shape
+    k = x.shape[0]
+    if not (_on_tpu() or force_pallas):
+        f, g, z = _fg.fused_grad_multi_jnp(a, x, target, weights, loss=loss,
+                                           param=param)
+        return f, g.astype(x.dtype), z
+    cfg = _tune.resolve("fusedgrad", {"m": m, "n": n}, a.dtype, {"bm": bm},
+                        tune=tune)
+    bm_ = min(cfg["bm"], _rup(m, 128))
+    ap = _pad_to(_pad_to(a, 0, bm_), 1, 128)
+    # Pad the request axis to the f32 sublane multiple (8) and the feature
+    # axis to the lane multiple; padding rows AND padding request slots get
+    # weight 0, so they contribute nothing to f or g.
+    xp = _pad_to(_pad_to(x, 0, 8), 1, 128)
+    tp = _pad_to(_pad_to(target, 0, 8), 1, bm_)
+    wp = _pad_to(_pad_to(weights, 0, 8), 1, bm_)
+    f, g, z = _fg.fused_grad_multi(ap, xp, tp, wp, loss=loss, param=param,
+                                   bm=bm_, interpret=not _on_tpu())
+    return (f.sum(axis=1)[:k], g[:k, :n].astype(x.dtype), z[:k, :m])
+
+
+def fused_grad_bsr_multi(a: "_bsr.BlockELL", x: Array, target: Array,
+                         weights: Array, *, loss: str, param: float = 1.0,
+                         force_pallas: bool = False
+                         ) -> tuple[Array, Array, Array]:
+    """Request-batched fused (f, g, z) for a BlockELL shard — every stored
+    block read once, serving all k requests.  x (k, n), target/weights
+    (k, m) over the padded BlockELL dims → f (k,), g (k, n), z (k, m).
+    Falls back to a two-pass composition of the VMEM-safe BSR kernels when
+    the kp-scaled resident working set cannot fit VMEM."""
+    if loss not in _fg.LOSSES:
+        raise ValueError(f"loss must be one of {_fg.LOSSES}, got {loss!r}")
+    k = x.shape[0]
+    if not (_on_tpu() or force_pallas):
+        f, g, z = _fg.fused_grad_bsr_multi_jnp(a, x, target, weights,
+                                               loss=loss, param=param)
+        return f, g.astype(x.dtype), z
+    kp = _rup(k, 8)
+    if _fg.fused_grad_bsr_multi_vmem(a, kp) > _tune.VMEM_BUDGET:
+        z = bsr_matmul(a, x.T, force_pallas=force_pallas).T
+        le, r = _fg.row_loss_elem(z, target, weights, loss, param)
+        g = bsr_rmatmul(a, r.astype(x.dtype).T, force_pallas=force_pallas).T
+        return le.sum(axis=1), g.astype(x.dtype), z.astype(jnp.float32)
+    xp = _pad_to(x, 0, 8)
+    tp = _pad_to(target, 0, 8)
+    wp = _pad_to(weights, 0, 8)
+    f, g, z = _fg.fused_grad_bsr_multi(a, xp, tp, wp, loss=loss, param=param,
+                                       interpret=not _on_tpu())
+    return f[:k], g[:k].astype(x.dtype), z[:k]
+
+
 def bsr_block_size(m: int, n: int, nnz: int, *, nx: int = 128,
                    dtype=jnp.float32, tune: str = "auto") -> int:
     """Autotuned BSR block size for an (m × n) matrix with `nnz` nonzeros.

@@ -1,83 +1,424 @@
-"""Serving driver: batched prefill + token-by-token decode.
+"""Solver serving frontend — concurrent matrix jobs, one A-pass per group.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --requests 16 --m 512 --n 64
 
-Demonstrates the full serving path (prefill → KV/SSM cache → decode loop →
-greedy sampling) on real devices; the same prefill/decode functions are
-what the dry-run lowers at production shapes.
+The paper prices every iterative method in streaming passes over the
+distributed matrix.  A serving deployment amortizes them: when several
+clients solve against the SAME design matrix A (multi-user regression,
+per-target least squares, one-vs-rest logistic), their iterations can share
+each pass.  This module is that frontend:
+
+  * ``SolverServer.submit`` enqueues the ``repro.api`` request objects
+    (SolveRequest / SvdRequest / SimilarityRequest) — the exact dataclasses
+    the direct call path uses;
+  * solve requests sharing (A, loss, param, reg, engine) form a GROUP
+    served by one ``GroupRunner``: per-request TFOCS/L-BFGS state is
+    batched over the request axis and every solver iteration is ONE fused
+    multi-RHS A-pass (kernels/fusedgrad via core/optim/batched), so a
+    group of k requests costs the same passes per iteration as one;
+  * the serving loop is continuous batching (the vLLM idiom, transplanted
+    to solvers): a fixed number of slots per group, requests admitted and
+    retired BETWEEN solver iterations by editing slot rows, inactive slots
+    frozen by the engines' per-slot masks — no tail latency from waiting
+    for the slowest request in a static batch;
+  * admission control is planner-priced: ``launch/planner.plan`` prices a
+    group's per-iteration device time on the calibrated machine model, and
+    the scheduler packs groups into a per-step device-time budget.
+    Joining an already-active group is FREE (the same pass serves one more
+    right-hand side) — only opening a new group consumes budget.  The
+    queue is strictly FIFO: a request that cannot be admitted (budget or
+    slots) blocks those behind it, so overload degrades in arrival order.
+
+SVD / similarity requests and non-batchable solves (escape-hatch problems,
+accelerated variants whose momentum point defeats pass sharing) run as
+one-shot jobs through the same FIFO queue and budget, via the same
+``repro.api`` executors.
+
+Every answer is a ``repro.api.Result`` whose info carries the standardized
+keys; for served solves ``a_passes`` is the number of GROUP passes consumed
+while the request was resident — the amortized cost the batching buys down.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.launch.mesh import make_host_mesh
-from repro.models import build, smoke_config
-from repro.models.sharding import use_mesh
+from repro import api
+from repro.core.optim import batched as _batched
+from repro.launch import planner as _planner
 
+Array = jax.Array
+
+# Engines the group runner batches; everything else is served one-shot.
+GROUP_METHODS = ("gra", "lbfgs")
+
+
+def group_key(req: api.SolveRequest):
+    """Requests with equal keys can share fused A-passes: same matrix
+    object, same row-separable loss, same static loss scalar, same reg
+    KIND (per-slot lam rides in the batched prox), same engine."""
+    return (id(req.A), req.loss, float(req.param), req.reg, req.method)
+
+
+def batchable(req: Any) -> bool:
+    return (isinstance(req, api.SolveRequest) and req.problem is None
+            and req.smooth is None and req.prox is None
+            and req.method in GROUP_METHODS)
+
+
+# Module-level jitted slot writers: admission/retirement edit one row of
+# the batched state between iterations, and doing the dozen scatters
+# eagerly costs more host dispatch than a whole solver step — jit folds
+# each into one program, cached by array shape across ALL runners.
+@jax.jit
+def _write_slot_gra(state, T, W, lam, tol, i, t, w, lamv, tolv, x0, L0):
+    state = state._replace(
+        X=state.X.at[i].set(x0), F=state.F.at[i].set(0.0),
+        G=state.G.at[i].set(0.0), L=state.L.at[i].set(L0),
+        k=state.k.at[i].set(0), done=state.done.at[i].set(False),
+        obj=state.obj.at[i].set(jnp.nan), bt=state.bt.at[i].set(0))
+    return (state, T.at[i].set(t), W.at[i].set(w), lam.at[i].set(lamv),
+            tol.at[i].set(tolv))
+
+
+@jax.jit
+def _write_slot_lbfgs(state, T, W, lam, tol, i, t, w, lamv, tolv, x0, L0):
+    state = state._replace(
+        X=state.X.at[i].set(x0), F=state.F.at[i].set(0.0),
+        G=state.G.at[i].set(0.0), S_=state.S_.at[i].set(0.0),
+        Y=state.Y.at[i].set(0.0), rho=state.rho.at[i].set(0.0),
+        idx=state.idx.at[i].set(0), filled=state.filled.at[i].set(0),
+        k=state.k.at[i].set(0), done=state.done.at[i].set(False),
+        obj=state.obj.at[i].set(jnp.nan))
+    return (state, T.at[i].set(t), W.at[i].set(w), lam.at[i].set(lamv),
+            tol.at[i].set(tolv))
+
+
+@jax.jit
+def _clear_row(W, i):
+    return W.at[i].set(0.0)
+
+
+class GroupRunner:
+    """Continuous-batching executor for one request group.
+
+    Owns `slots` lanes of batched solver state (core/optim/batched) over a
+    shared linop; `admit` writes a request into a free lane, `step` runs
+    one solver iteration for every active lane in ONE fused group A-pass
+    (plus shared backtracking attempts) and returns the lanes that
+    finished as `api.Result`s.  Slots freed by retirement are reusable on
+    the next admit — the engines freeze inactive lanes bit-for-bit, so
+    residents never observe their neighbours churning.
+    """
+
+    def __init__(self, linop, kind: str, param: float = 1.0, *,
+                 reg: str = "none", method: str = "gra", slots: int = 8,
+                 mem: int = 10):
+        if method not in GROUP_METHODS:
+            raise ValueError(f"method must be one of {GROUP_METHODS}")
+        if method == "lbfgs" and reg != "none":
+            raise ValueError("lbfgs groups need reg='none'")
+        self.linop, self.kind, self.param = linop, kind, param
+        self.reg, self.method, self.slots = reg, method, slots
+        self.n = linop.in_shape[0]
+        self.m_pad = linop.out_shape[0]
+        if method == "gra":
+            seed, step = _batched.make_gra_group(linop, kind, param, reg=reg)
+            self.state = _batched.gra_group_init(slots, self.n)
+        else:
+            seed, step = _batched.make_lbfgs_group(linop, kind, param)
+            self.state = _batched.lbfgs_group_init(slots, self.n, mem=mem)
+        self._seed, self._step = jax.jit(seed), jax.jit(step)
+        self.T = jnp.zeros((slots, self.m_pad), jnp.float32)
+        self.W = jnp.zeros((slots, self.m_pad), jnp.float32)
+        self.lam = jnp.zeros((slots,), jnp.float32)
+        self.tol = jnp.full((slots,), 1e-8, jnp.float32)
+        self.active = np.zeros(slots, bool)          # host-side slot map
+        self.meta: list[dict | None] = [None] * slots
+        self.a_passes = 0          # lifetime group passes (the shared cost)
+        self._dirty = False        # admissions since the last seed pass
+        self._price_cache = 0.0    # planner-modeled seconds per iteration
+
+    # -- slot management ------------------------------------------------------
+
+    def free_slots(self) -> int:
+        return int(self.slots - self.active.sum())
+
+    def busy(self) -> bool:
+        return bool(self.active.any())
+
+    def admit(self, req: api.SolveRequest) -> int:
+        """Write `req` into a free slot; costs no pass by itself (the next
+        step's seed recomputes F/G for the whole group in one)."""
+        i = int(np.flatnonzero(~self.active)[0])
+        x0 = jnp.zeros((self.n,), jnp.float32) if req.x0 is None \
+            else jnp.asarray(req.x0, jnp.float32)
+        write = _write_slot_gra if self.method == "gra" \
+            else _write_slot_lbfgs
+        self.state, self.T, self.W, self.lam, self.tol = write(
+            self.state, self.T, self.W, self.lam, self.tol, i,
+            self.linop.pad_data(jnp.asarray(req.b, jnp.float32)),
+            self.linop.row_weights(), float(req.lam), float(req.tol),
+            x0, float(req.L0))
+        self.active[i] = True
+        self.meta[i] = {"req": req, "admit_passes": self.a_passes}
+        self._dirty = True
+        return i
+
+    # -- the iteration --------------------------------------------------------
+
+    def step(self) -> list[api.Result]:
+        """One solver iteration for every active slot (one group A-pass plus
+        shared backtracking/line-search attempts); returns retired lanes."""
+        if not self.busy():
+            return []
+        if self._dirty:
+            if self.method == "gra":
+                self.state, p = self._seed(self.state, self.T, self.W,
+                                           self.lam)
+            else:
+                self.state, p = self._seed(self.state, self.T, self.W)
+            self.a_passes += int(p)
+            self._dirty = False
+        act = jnp.asarray(self.active)
+        if self.method == "gra":
+            self.state, tries = self._step(self.state, self.T, self.W,
+                                           self.lam, self.tol, act)
+        else:
+            self.state, tries = self._step(self.state, self.T, self.W,
+                                           self.tol, act)
+        self.a_passes += int(tries)
+        done = np.asarray(self.state.done)
+        k = np.asarray(self.state.k)
+        out = []
+        for i in range(self.slots):
+            if self.active[i] and (
+                    done[i] or k[i] >= self.meta[i]["req"].max_iters):
+                out.append(self._retire(i, bool(done[i])))
+        return out
+
+    def _retire(self, i: int, converged: bool) -> api.Result:
+        meta = self.meta[i]
+        req = meta["req"]
+        info = {"iterations": int(self.state.k[i]),
+                # Group passes consumed while resident: the amortized cost
+                # (each pass also served every co-resident request).
+                "a_passes": self.a_passes - meta["admit_passes"],
+                "converged": converged, "plan": "fused-group",
+                "objective": float(self.state.obj[i]),
+                "slot": i}
+        # Zero the weight row so the retired lane contributes nothing to
+        # subsequent group passes; state rows are reset on the next admit.
+        self.W = _clear_row(self.W, i)
+        self.active[i] = False
+        self.meta[i] = None
+        return api.Result(x=jnp.asarray(self.state.X[i]), info=info,
+                          request_id=req.request_id)
+
+
+class SolverServer:
+    """FIFO request queue + planner-priced admission + continuous batching.
+
+    ``submit`` enqueues any repro.api request; ``step`` admits what the
+    per-step device-time budget allows, runs one solver iteration per
+    active group, and returns the requests that finished.  ``run`` drives
+    steps until the queue and all groups drain.
+    """
+
+    def __init__(self, *, slots: int = 8, budget_s: float | None = None,
+                 backend: str | None = None):
+        self.slots = slots
+        self.budget_s = budget_s
+        self.backend = backend
+        self._queue: list[Any] = []
+        self._runners: dict[Any, GroupRunner] = {}
+        self._results: dict[str, api.Result] = {}
+        self._submit_t: dict[str, float] = {}
+        self._events: list[tuple[str, float, float]] = []
+        self.stats = {"steps": 0, "a_passes": 0, "admitted": 0,
+                      "oneshot": 0, "deferred_steps": 0}
+
+    # -- queue ----------------------------------------------------------------
+
+    def submit(self, req) -> str:
+        if isinstance(req, api.SolveRequest) and req.problem is None \
+                and req.smooth is None and req.method == "lbfgs" \
+                and req.reg != "none":
+            raise ValueError("method='lbfgs' needs reg='none'")
+        self._queue.append(req)
+        self._submit_t[req.request_id] = time.perf_counter()
+        return req.request_id
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def result(self, request_id: str) -> api.Result | None:
+        return self._results.get(request_id)
+
+    def latencies(self) -> list[float]:
+        """Per-request submit→finish wall seconds, in completion order."""
+        return [t1 - t0 for _, t0, t1 in self._events]
+
+    # -- planner pricing ------------------------------------------------------
+
+    def _price(self, req) -> float:
+        """Modeled device-seconds: per-ITERATION for a group (one fused
+        pass — independent of how many requests share it), whole-job for
+        one-shots."""
+        if isinstance(req, api.SolveRequest):
+            m, n = (req.problem.linop.out_shape[0],
+                    req.problem.linop.in_shape[0]) if req.problem is not None \
+                else req.A.shape
+            return _planner.plan("fusedgrad", {"m": int(m), "n": int(n)},
+                                 backend=self.backend).cost_s
+        if isinstance(req, api.SvdRequest):
+            m, n = req.A.shape
+            return _planner.plan("svd", {"m": int(m), "n": int(n),
+                                         "k": int(req.k)},
+                                 backend=self.backend).cost_s
+        # Similarity: the Gram pass is the whole job — price it as the
+        # gram-mode SVD of the same matrix minus nothing material.
+        m, n = req.A.shape
+        return _planner.plan("svd", {"m": int(m), "n": int(n), "k": 1},
+                             backend=self.backend).cost_s
+
+    def _active_cost(self) -> float:
+        return sum(r._price_cache for r in self._runners.values()
+                   if r.busy())
+
+    # -- scheduling -----------------------------------------------------------
+
+    def _admit(self) -> list[api.Result]:
+        """FIFO admission under the device-time budget.  Joining an active
+        group is free; opening a group (or running a one-shot) consumes
+        budget.  The head of the queue blocks everything behind it — strict
+        arrival-order degradation under overload.  When nothing is spending
+        budget the head is always admitted, so a budget smaller than one
+        group's iteration cannot deadlock the queue.  Returns the results
+        of any one-shot jobs it ran."""
+        done = []
+        spent = self._active_cost()
+        while self._queue:
+            req = self._queue[0]
+            if batchable(req):
+                key = group_key(req)
+                runner = self._runners.get(key)
+                if runner is not None and runner.busy():
+                    if runner.free_slots() == 0:
+                        break                      # group full → wait
+                    runner.admit(req)              # marginal cost: zero
+                else:
+                    cost = self._price(req)
+                    if self.budget_s is not None and spent > 0 \
+                            and spent + cost > self.budget_s:
+                        break                      # no budget → wait
+                    if runner is None:
+                        runner = GroupRunner(
+                            api.solve_linop(req), req.loss, req.param,
+                            reg=req.reg, method=req.method,
+                            slots=self.slots)
+                        runner._price_cache = cost
+                        self._runners[key] = runner
+                    runner.admit(req)
+                    spent += cost
+                self.stats["admitted"] += 1
+                self._queue.pop(0)
+            else:
+                cost = self._price(req)
+                if self.budget_s is not None and spent > 0 \
+                        and spent + cost > self.budget_s:
+                    break
+                self._queue.pop(0)
+                res = self._run_oneshot(req)
+                self._finish(res)
+                done.append(res)
+                spent += cost
+                self.stats["oneshot"] += 1
+        return done
+
+    def _run_oneshot(self, req) -> api.Result:
+        if isinstance(req, api.SolveRequest):
+            return api.solve(req)
+        if isinstance(req, api.SvdRequest):
+            return api.svd(req)
+        return api.similarities(req)
+
+    def _finish(self, res: api.Result) -> None:
+        self._results[res.request_id] = res
+        self._events.append((res.request_id,
+                             self._submit_t.get(res.request_id,
+                                                time.perf_counter()),
+                             time.perf_counter()))
+
+    # -- the serving loop -----------------------------------------------------
+
+    def step(self) -> list[api.Result]:
+        """One scheduler tick: admit, then one solver iteration per active
+        group; returns the requests that completed this tick."""
+        self.stats["steps"] += 1
+        out = self._admit()
+        if self._queue:
+            self.stats["deferred_steps"] += 1
+        for runner in self._runners.values():
+            if runner.busy():
+                before = runner.a_passes
+                out.extend(runner.step())
+                self.stats["a_passes"] += runner.a_passes - before
+        for res in out:
+            self._finish(res)
+        return out
+
+    def busy(self) -> bool:
+        return bool(self._queue) or any(r.busy()
+                                        for r in self._runners.values())
+
+    def run(self, max_steps: int = 100_000) -> list[api.Result]:
+        out = []
+        while self.busy() and self.stats["steps"] < max_steps:
+            out.extend(self.step())
+        return out
+
+
+# -- demo CLI -----------------------------------------------------------------
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--budget-us", type=float, default=None,
+                    help="per-step device-time budget (modeled µs)")
     args = ap.parse_args()
 
-    cfg = configs.get(args.arch)
-    if args.smoke:
-        cfg = smoke_config(cfg)
-    mesh = make_host_mesh(args.data, args.model)
     rng = np.random.default_rng(0)
-
-    with mesh, use_mesh(mesh):
-        model = build(cfg)
-        params = model.init(jax.random.PRNGKey(0))
-        B, S = args.batch, args.prompt_len
-        total = S + args.gen
-        batch = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
-        if cfg.frontend:
-            flen = S if cfg.family == "encdec" else cfg.frontend_len
-            batch["frontend_embeds"] = jnp.asarray(
-                rng.normal(size=(B, flen, cfg.d_model)) * 0.02, jnp.float32)
-        if cfg.family == "encdec":
-            caches, _ = model.init_caches(B, total, S)
-        else:
-            caches, _ = model.init_caches(B, total)
-
-        prefill = jax.jit(model.prefill)
-        decode = jax.jit(model.decode_step, donate_argnums=(2,))
-
-        t0 = time.time()
-        logits, caches = prefill(params, batch, caches)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
-
-        out_tokens = [jnp.argmax(logits[:, -1], -1)[:, None]]
-        pos = jnp.int32(S)
-        t0 = time.time()
-        for _ in range(args.gen - 1):
-            logits, caches = decode(params, out_tokens[-1], caches, pos)
-            out_tokens.append(jnp.argmax(logits[:, -1], -1)[:, None])
-            pos = pos + 1
-        jax.block_until_ready(out_tokens[-1])
-        t_decode = time.time() - t0
-
-        gen = np.asarray(jnp.concatenate(out_tokens, 1))
-        print(f"prefill: {t_prefill*1e3:.1f}ms for {B}x{S} tokens")
-        print(f"decode : {t_decode/max(args.gen-1,1)*1e3:.1f}ms/token "
-              f"(batch {B})")
-        print("generated token ids (first row):", gen[0][:16])
+    A = rng.normal(size=(args.m, args.n)).astype(np.float32)
+    server = SolverServer(
+        slots=args.slots,
+        budget_s=args.budget_us * 1e-6 if args.budget_us else None)
+    t0 = time.perf_counter()
+    ids = [server.submit(api.SolveRequest(
+        A=A, b=(A @ rng.normal(size=args.n)).astype(np.float32),
+        loss="quad", method="gra", tol=1e-6, max_iters=200))
+        for _ in range(args.requests)]
+    results = server.run()
+    wall = time.perf_counter() - t0
+    lats = sorted(server.latencies())
+    print(f"served {len(results)} requests in {wall:.3f}s "
+          f"({len(results) / wall:.1f} req/s)")
+    print(f"group A-passes: {server.stats['a_passes']} "
+          f"(scheduler steps: {server.stats['steps']})")
+    print(f"latency p50 {lats[len(lats) // 2] * 1e3:.1f}ms  "
+          f"p99 {lats[int(len(lats) * 0.99)] * 1e3:.1f}ms")
+    for rid in ids[:3]:
+        info = server.result(rid).info
+        print(f"  {rid}: iters={info['iterations']} "
+              f"a_passes={info['a_passes']} converged={info['converged']}")
 
 
 if __name__ == "__main__":

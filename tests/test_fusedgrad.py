@@ -208,7 +208,8 @@ class TestSolverStructure:
               TfocsOptions(max_iters=3, accel=False, backtracking=True,
                            fused=True))
         assert counting.counts == {"apply": 0, "adjoint": 0,
-                                   "fused_grad": 3}, counting.counts
+                                   "fused_grad": 3,
+                                   "fused_grad_multi": 0}, counting.counts
 
     def test_unfused_path_two_passes_per_attempt(self):
         smooth, linop = self._composite()
@@ -218,7 +219,8 @@ class TestSolverStructure:
                            fused=False))
         # init apply + (adjoint + apply) per traced attempt site (2 sites)
         assert counting.counts == {"apply": 3, "adjoint": 2,
-                                   "fused_grad": 0}, counting.counts
+                                   "fused_grad": 0,
+                                   "fused_grad_multi": 0}, counting.counts
 
     def test_accelerated_variants_keep_cached_path(self):
         """acc* gradient points are momentum combinations — the cached-image

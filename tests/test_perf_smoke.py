@@ -16,6 +16,7 @@ bench_optim = pytest.importorskip(
     reason="benchmarks package needs the repo root on sys.path "
            "(run as `python -m pytest` from the checkout)")
 bench_planner = pytest.importorskip("benchmarks.bench_planner")
+bench_serve = pytest.importorskip("benchmarks.bench_serve")
 
 
 @pytest.mark.perf_smoke
@@ -31,6 +32,18 @@ def test_fused_a_passes_not_worse(pname, method):
     assert fused["per_attempt"] == 1, fused
     assert unfused["per_attempt"] == 2, unfused
     assert fused["counts"]["apply"] == fused["counts"]["adjoint"] == 0, fused
+
+
+@pytest.mark.perf_smoke
+def test_serving_grouped_passes_below_serial():
+    """Serving canary: a shared-A group answered by the batched engine
+    consumes strictly fewer A-passes than the serial schedule for the same
+    requests (and identical trace-level call sites — one fused pass per
+    attempt regardless of group width).  Deterministic counts, no timing."""
+    rec = bench_serve.group_pass_counts(m=120, n=24, k=4, iters=6)
+    assert rec["grouped_a_passes"] < rec["serial_a_passes"], rec
+    assert rec["grouped_trace_counts"] == rec["serial_trace_counts"], rec
+    assert rec["a_pass_ratio"] >= 2, rec
 
 
 @pytest.mark.perf_smoke

@@ -1,0 +1,336 @@
+"""Solver serving frontend: batched-group parity with sequential solves,
+structural A-pass sharing (a k-request group costs the passes of one),
+continuous-batching slot churn, and planner-priced admission control."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.distmat import RowMatrix
+from repro.core.distmat import types as T
+from repro.core.tfocs import CountingLinop, LinopMatrix
+from repro.launch import planner
+from repro.launch.serve import (GroupRunner, SolverServer, batchable,
+                                group_key)
+
+
+def _meshes():
+    yield None                                     # local / single-device
+    if jax.device_count() > 1:                     # CI forces 8 hosts
+        yield T.make_mesh((jax.device_count(), 1), ("data", "model"))
+
+
+def _trace(m, n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    bs = [(A @ rng.normal(size=n) + 0.01 * rng.normal(size=m))
+          .astype(np.float32) for _ in range(k)]
+    return A, bs
+
+
+def _request(A, b, method="gra", **kw):
+    kw.setdefault("tol", 1e-7)
+    kw.setdefault("max_iters", 400)
+    return api.SolveRequest(A=A, b=b, loss="quad", method=method, **kw)
+
+
+class TestGroupParity:
+    @pytest.mark.parametrize("method", ["gra", "lbfgs"])
+    def test_group_matches_sequential(self, method):
+        """A k-request group solve reaches the same solutions as k
+        sequential single-request solves on the same engine — on the local
+        path and on a multi-device mesh.  (Trajectories may differ in
+        float summation order between slot widths, so parity is asserted
+        at convergence, not per-iterate.)"""
+        m, n, k = 131, 16, 4                       # ragged: padding rows
+        A, bs = _trace(m, n, k)
+        for mesh in _meshes():
+            mat = RowMatrix.create(jnp.asarray(A), mesh) if mesh is not None \
+                else A
+            grouped = SolverServer(slots=k)
+            ids = [grouped.submit(_request(mat, b, method)) for b in bs]
+            grouped.run()
+            serial = SolverServer(slots=1)
+            sids = [serial.submit(_request(mat, b, method)) for b in bs]
+            serial.run()
+            for rid, sid in zip(ids, sids):
+                g, s = grouped.result(rid), serial.result(sid)
+                assert g is not None and s is not None
+                assert g.info["plan"] == "fused-group"
+                err = float(jnp.max(jnp.abs(g.x - s.x)))
+                assert err < 1e-4, (method, mesh, err)
+
+    def test_group_solutions_correct(self):
+        """Group answers match the least-squares truth, all slots."""
+        m, n, k = 120, 12, 5
+        A, bs = _trace(m, n, k, seed=3)
+        srv = SolverServer(slots=k)
+        ids = [srv.submit(_request(A, b)) for b in bs]
+        srv.run()
+        for rid, b in zip(ids, bs):
+            r = srv.result(rid)
+            ref = np.linalg.lstsq(A, b, rcond=None)[0]
+            assert r.info["converged"]
+            assert float(np.max(np.abs(np.asarray(r.x) - ref))) < 1e-3
+            for key in ("iterations", "a_passes", "converged", "plan"):
+                assert key in r.info
+
+    def test_residents_unaffected_by_slot_churn(self):
+        """Per-slot rows are computed independently inside the fused
+        multi-RHS pass, so a resident's trajectory is bit-identical whether
+        its neighbours retire/admit around it or not."""
+        m, n = 96, 8
+        A, bs = _trace(m, n, 3, seed=5)
+        quiet = SolverServer(slots=3)
+        qid = quiet.submit(_request(A, bs[0], max_iters=60, tol=0.0))
+        quiet.run()
+        churn = SolverServer(slots=3)
+        cid = churn.submit(_request(A, bs[0], max_iters=60, tol=0.0))
+        # Neighbours arrive and leave while the watched request runs.
+        churn.submit(_request(A, bs[1], max_iters=5, tol=0.0))
+        for _ in range(10):
+            churn.step()
+        churn.submit(_request(A, bs[2], max_iters=5, tol=0.0))
+        churn.run()
+        np.testing.assert_array_equal(np.asarray(quiet.result(qid).x),
+                                      np.asarray(churn.result(cid).x))
+
+
+class TestAPassSharing:
+    def _run_group(self, A, bs, reqs_per_group, iters):
+        """Serve len(bs) requests in groups of `reqs_per_group` through one
+        CountingLinop-wrapped runner; returns (trace sites, runtime passes)."""
+        lin = CountingLinop(LinopMatrix(jnp.asarray(A)))
+        runner = GroupRunner(lin, "quad", slots=max(reqs_per_group, 1))
+        for start in range(0, len(bs), reqs_per_group):
+            for b in bs[start:start + reqs_per_group]:
+                runner.admit(api.SolveRequest(A=A, b=b, loss="quad",
+                                              tol=0.0, max_iters=iters))
+            while runner.busy():
+                runner.step()
+        return lin.counts["fused_grad_multi"], runner.a_passes
+
+    def test_group_passes_equal_single_request_passes(self):
+        """THE acceptance property: a shared-A group of k requests consumes
+        exactly as many A-passes per iteration as a single request.
+
+        Exactly, in two senses: the trace-level call sites are identical
+        for any group width (structural — one fused pass per attempt), and
+        for k requests with identical backtracking behaviour (same b) the
+        runtime attempt counts are equal too.  With DISTINCT right-hand
+        sides a shared attempt runs whenever ANY slot still fails, so the
+        group pays the worst member's backtracks — still k× cheaper than
+        the serial schedule, which is the last assertion."""
+        m, n, iters = 97, 12, 8
+        A, bs = _trace(m, n, 4, seed=7)
+        sites_1, passes_1 = self._run_group(A, bs[:1], 1, iters)
+        sites_k, passes_k = self._run_group(A, [bs[0]] * 4, 4, iters)
+        assert sites_k == sites_1
+        assert passes_k == passes_1
+        # Distinct b's: same call sites; runtime passes bounded by the
+        # worst single member, and far below the serial sum.
+        singles = [self._run_group(A, [b], 1, iters)[1] for b in bs]
+        sites_d, passes_d = self._run_group(A, bs, 4, iters)
+        assert sites_d == sites_1
+        assert passes_d <= sum(singles) - (len(bs) - 1) * iters
+        assert max(singles) <= passes_d
+        assert sum(singles) > 2 * passes_d
+
+    def test_counting_linop_sees_no_unfused_calls(self):
+        A, bs = _trace(64, 8, 2, seed=9)
+        lin = CountingLinop(LinopMatrix(jnp.asarray(A)))
+        runner = GroupRunner(lin, "quad", slots=2)
+        for b in bs:
+            runner.admit(api.SolveRequest(A=A, b=b, loss="quad",
+                                          tol=0.0, max_iters=3))
+        while runner.busy():
+            runner.step()
+        assert lin.counts["apply"] == lin.counts["adjoint"] == 0
+        assert lin.counts["fused_grad"] == 0
+        assert lin.counts["fused_grad_multi"] > 0
+
+
+class TestScheduler:
+    def test_admission_respects_budget(self):
+        """Two groups (distinct matrices) under a budget that fits one:
+        the second is deferred until the first drains."""
+        m, n = 96, 16
+        A1, bs1 = _trace(m, n, 1, seed=11)
+        A2, bs2 = _trace(m, n, 1, seed=12)
+        cost = planner.plan("fusedgrad", {"m": m, "n": n}).cost_s
+        srv = SolverServer(slots=4, budget_s=cost * 1.5)
+        i1 = srv.submit(_request(A1, bs1[0]))
+        i2 = srv.submit(_request(A2, bs2[0]))
+        srv.step()
+        assert srv.pending() == 1                  # group 2 deferred
+        assert srv.stats["deferred_steps"] >= 1
+        srv.run()
+        assert srv.result(i1) is not None and srv.result(i2) is not None
+        assert [e[0] for e in srv._events] == [i1, i2]
+
+    def test_joining_active_group_is_free(self):
+        """Budget fits ONE group, yet every request sharing that group's
+        matrix is admitted immediately — the same fused pass serves them."""
+        m, n, k = 96, 16, 4
+        A, bs = _trace(m, n, k, seed=13)
+        cost = planner.plan("fusedgrad", {"m": m, "n": n}).cost_s
+        srv = SolverServer(slots=k, budget_s=cost * 1.1)
+        for b in bs:
+            srv.submit(_request(A, b))
+        srv.step()
+        assert srv.pending() == 0                  # all co-admitted
+        srv.run()
+        assert len(srv._events) == k
+
+    def test_retirement_frees_slots_mid_solve(self):
+        """With 2 slots and 3 requests, the third waits for a retirement,
+        then takes the freed slot — and still gets the right answer."""
+        m, n = 120, 12
+        A, bs = _trace(m, n, 3, seed=15)
+        srv = SolverServer(slots=2)
+        ids = [srv.submit(_request(A, b)) for b in bs]
+        srv.step()
+        assert srv.pending() == 1                  # no slot yet for #3
+        runner = next(iter(srv._runners.values()))
+        assert runner.free_slots() == 0
+        srv.run()
+        for rid, b in zip(ids, bs):
+            r = srv.result(rid)
+            ref = np.linalg.lstsq(A, b, rcond=None)[0]
+            assert float(np.max(np.abs(np.asarray(r.x) - ref))) < 1e-3
+        # The late arrival could only start after a retirement freed its
+        # slot, so it cannot finish first.
+        assert [e[0] for e in srv._events][0] != ids[2]
+
+    def test_fifo_fairness_under_overload(self):
+        """More distinct-matrix groups than the budget admits at once:
+        completion order equals arrival order — later arrivals cannot
+        starve the deferred head."""
+        m, n = 64, 8
+        cost = planner.plan("fusedgrad", {"m": m, "n": n}).cost_s
+        srv = SolverServer(slots=2, budget_s=cost * 1.5)
+        ids = []
+        for seed in range(4):
+            A, bs = _trace(m, n, 1, seed=20 + seed)
+            ids.append(srv.submit(_request(A, bs[0])))
+        srv.run()
+        assert [e[0] for e in srv._events] == ids
+
+    def test_lbfgs_with_reg_rejected_at_submit(self):
+        A, bs = _trace(32, 4, 1)
+        srv = SolverServer()
+        with pytest.raises(ValueError):
+            srv.submit(api.SolveRequest(A=A, b=bs[0], loss="quad",
+                                        method="lbfgs", reg="l1", lam=0.1))
+
+    def test_mixed_queue_oneshots(self):
+        """SVD / similarity / non-batchable solves ride the same FIFO
+        queue as one-shot jobs and return standardized Results."""
+        m, n = 96, 12
+        A, bs = _trace(m, n, 1, seed=17)
+        R = RowMatrix.create(jnp.asarray(A))
+        srv = SolverServer(slots=2)
+        s0 = srv.submit(_request(A, bs[0]))
+        s1 = srv.submit(api.SvdRequest(A=R, k=3))
+        s2 = srv.submit(api.SimilarityRequest(A=R))
+        s3 = srv.submit(api.SolveRequest(A=A, b=bs[0], loss="quad",
+                                         method="acc_rb", max_iters=80))
+        res = srv.run()
+        assert len(res) == 4
+        sv = np.linalg.svd(A, compute_uv=False)[:3]
+        got = np.asarray(srv.result(s1).factors[1])
+        np.testing.assert_allclose(got, sv, rtol=1e-3, atol=1e-3)
+        assert srv.result(s2).factors[0].shape == (n, n)
+        assert srv.result(s3).info["plan"] == "cached"
+        assert srv.stats["oneshot"] == 3
+        for rid in (s0, s1, s2, s3):
+            info = srv.result(rid).info
+            for key in ("iterations", "a_passes", "converged", "plan"):
+                assert key in info, (rid, key)
+
+    def test_batchable_and_group_key(self):
+        A, bs = _trace(32, 4, 2)
+        r1, r2 = _request(A, bs[0]), _request(A, bs[1])
+        assert batchable(r1) and group_key(r1) == group_key(r2)
+        assert not batchable(api.SvdRequest(A=A, k=2))
+        assert not batchable(_request(A, bs[0], method="acc"))
+        r3 = _request(A, bs[0])
+        r3 = api.SolveRequest(A=A, b=bs[0], loss="huber", param=0.5)
+        assert group_key(r3) != group_key(r1)
+
+    def test_l1_group_lambda_per_slot(self):
+        """Requests with the same reg KIND but different lam share a group
+        (lam is per-slot in the batched prox) — and each gets its own
+        shrinkage."""
+        m, n = 120, 10
+        A, bs = _trace(m, n, 1, seed=19)
+        srv = SolverServer(slots=2)
+        lo = srv.submit(api.SolveRequest(A=A, b=bs[0], loss="quad", reg="l1",
+                                         lam=1e-4, tol=1e-7, max_iters=400))
+        hi = srv.submit(api.SolveRequest(A=A, b=bs[0], loss="quad", reg="l1",
+                                         lam=5.0, tol=1e-7, max_iters=400))
+        srv.run()
+        assert len(srv._runners) == 1              # one shared group
+        x_lo = np.asarray(srv.result(lo).x)
+        x_hi = np.asarray(srv.result(hi).x)
+        assert np.sum(np.abs(x_hi)) < np.sum(np.abs(x_lo))
+
+
+class TestApiFacade:
+    def test_minimize_wrapper_matches_core(self):
+        from repro.core.optim import make_problem
+        from repro.core.optim import minimize as core_minimize
+        p = make_problem("linear", m=80, n=16, seed=2)
+        for method in ("gra", "acc_rb", "lbfgs"):
+            x1, i1 = core_minimize(p, method, max_iters=25)
+            x2, i2 = api.minimize(p, method, max_iters=25, tol=1e-10)
+            np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+            for key in ("iterations", "a_passes", "converged", "plan"):
+                assert key in i2, (method, key)
+
+    def test_solver_info_deprecated_aliases_survive(self):
+        from repro.core.optim import make_problem
+        p = make_problem("linear", m=80, n=16, seed=2)
+        _, info = api.minimize(p, "gra", max_iters=10)
+        assert "fused" in info and "n_backtracks" in info   # old keys
+        _, info = api.minimize(p, "lbfgs", max_iters=10)
+        assert "n_evals" in info                            # old key
+
+    @pytest.mark.parametrize("mode", ["gram", "lanczos", "randomized"])
+    def test_svd_info_standardized(self, mode):
+        rng = np.random.default_rng(4)
+        A = RowMatrix.create(jnp.asarray(
+            rng.normal(size=(96, 24)).astype(np.float32)))
+        U, s, V, info = api.compute_svd(A, 3, mode=mode)
+        for key in ("iterations", "a_passes", "converged", "plan"):
+            assert key in info, (mode, key)
+        assert info["plan"] == mode
+        sv = np.linalg.svd(np.asarray(A.to_local())[:96],
+                           compute_uv=False)[:3]
+        # rtol covers the sketch error of the randomized mode on a flat
+        # Gaussian spectrum; gram/lanczos are far tighter.
+        np.testing.assert_allclose(np.asarray(s), sv, rtol=5e-2)
+
+    def test_solve_request_validation(self):
+        A = np.eye(4, dtype=np.float32)
+        b = np.ones(4, np.float32)
+        with pytest.raises(ValueError):
+            api.SolveRequest(A=A, b=b, loss="hinge")
+        with pytest.raises(ValueError):
+            api.SolveRequest(A=A, b=b, reg="l3")
+        with pytest.raises(ValueError):
+            api.SolveRequest(A=A)
+        with pytest.raises(ValueError):
+            api.solve(api.SolveRequest(A=A, b=b, method="lbfgs",
+                                       reg="l1", lam=0.1))
+
+    def test_column_similarities_wrapper(self):
+        rng = np.random.default_rng(6)
+        A = rng.normal(size=(64, 8)).astype(np.float32)
+        R = RowMatrix.create(jnp.asarray(A))
+        sim, info = api.column_similarities(R)
+        ref = (A.T @ A) / np.outer(np.linalg.norm(A, axis=0),
+                                   np.linalg.norm(A, axis=0))
+        np.testing.assert_allclose(np.asarray(sim), ref, atol=1e-5)
+        assert info["a_passes"] == 1 and info["plan"] == "gram"
