@@ -16,6 +16,13 @@ the counted group A-passes (grouped ≪ serial — the pass sharing is where
 the throughput comes from).  Wired into ``run.py --only serve``; the
 perf-smoke serving canary asserts the structural half (grouped A-passes <
 serial A-passes) without timing anything.
+
+A second ``BENCH`` line (suite ``serve_recovery``) measures the
+fault-tolerance overhead: the same k-request group solved under 0, 1 and
+2 injected straggler episodes (train.faults.FaultyLinop), each detected
+by the ShardMonitor and healed by a mid-solve re-mesh.  It reports
+requests/sec per straggler count and the recovery latency — wall seconds
+from straggler onset to the completed re-mesh, re-JIT included.
 """
 from __future__ import annotations
 
@@ -90,6 +97,99 @@ def group_pass_counts(m: int = 200, n: int = 32, k: int = 4,
             "a_pass_ratio": serial / max(grouped, 1)}
 
 
+def recovery_overhead(m: int = 256, n: int = 32, k: int = 4,
+                      max_iters: int = 300, delay_s: float = 0.02,
+                      straggler_counts: tuple[int, ...] = (0, 1, 2)) -> dict:
+    """Throughput of a k-request elastic group under injected straggler
+    episodes.  Each episode arms a delay on shard 0 a few iterations
+    ahead; the ShardMonitor trips on the telemetry, the executor
+    re-meshes mid-solve (clearing the delay with the dropped shard), and
+    the next episode is armed.  Recovery latency is measured from the
+    first delayed iteration to the completed re-mesh — so it prices
+    detection, the matrix move AND the engine re-JIT."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.distmat import RowMatrix
+    from repro.core.distmat.types import make_mesh
+    from repro.core.optim.elastic import ElasticConfig, ElasticGroup
+    from repro.core.tfocs.linop import LinopMatrix
+    from repro.train.faults import FaultPlan, FaultyLinop, FaultyMesh
+    from repro.train.straggler import ShardMonitor, StragglerConfig
+
+    A, bs = _trace(m, n, k, seed=7)
+    out = {"suite": "serve_recovery", "m": m, "n": n, "requests": k,
+           "delay_s": delay_s, "stragglers": {}}
+    for count in straggler_counts:
+        mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+        fm = FaultyMesh(mesh)
+        lin = FaultyLinop(LinopMatrix(RowMatrix.create(jnp.asarray(A),
+                                                       mesh)),
+                          FaultPlan())
+        cfg = ElasticConfig(
+            monitor=ShardMonitor(lin.row_shards(),
+                                 StragglerConfig(warmup_steps=2,
+                                                 threshold=2.0,
+                                                 trip_limit=2)),
+            remesh_to=fm.drop)
+        grp = ElasticGroup(lin, "quad", slots=k, elastic=cfg)
+        # Warm pass: compile the group step closure at full width so the
+        # timed trace prices steady-state iterations, not the cold start
+        # (re-JIT after a re-mesh IS billed — that is recovery cost).
+        for b in bs:
+            grp.admit_slot(b, tol=0.0, x0=None)
+        while grp.iteration < 2:
+            grp.step_iteration()
+        for i in range(k):
+            grp.clear_slot(i)
+
+        def arm(step_from):
+            # Mutate the SHARED dict/plan in place: after a re-mesh the
+            # live wrapper is a dataclasses.replace copy that aliases
+            # them — rebinding `lin.delays` would arm a dead instance.
+            lin.delays[0] = delay_s
+            lin.plan.delay_from = step_from
+            return step_from
+
+        for b in bs:
+            grp.admit_slot(b, tol=1e-6)
+        episodes_left = count
+        armed_from = arm(grp.iteration + 2) if episodes_left else None
+        onset = None
+        recov = []
+        it_cap = grp.iteration + max_iters
+        t0 = time.perf_counter()
+        while grp.busy() and grp.iteration < it_cap:
+            if armed_from is not None and onset is None \
+                    and grp.iteration >= armed_from:
+                onset = time.perf_counter()
+            seen = grp.remeshes
+            grp.step_iteration()
+            if grp.remeshes > seen and onset is not None:
+                recov.append(time.perf_counter() - onset)
+                onset = None
+                episodes_left -= 1
+                armed_from = arm(grp.iteration + 2) if episodes_left \
+                    else None
+            done = np.asarray(grp.state.done)
+            if bool(done[grp.active].all()):
+                break
+        wall = time.perf_counter() - t0
+        out["stragglers"][str(count)] = {
+            "wall_s": round(wall, 4),
+            "requests_per_s": round(k / wall, 2),
+            "iterations": grp.iteration,
+            "remeshes": grp.remeshes,
+            "recovery_latency_s": [round(r, 4) for r in recov],
+        }
+    clean = out["stragglers"].get("0")
+    if clean is not None:
+        for rec in out["stragglers"].values():
+            rec["throughput_vs_clean"] = round(
+                rec["requests_per_s"] / max(clean["requests_per_s"],
+                                            1e-12), 3)
+    return out
+
+
 def run(full: bool = False) -> list[tuple[str, float, str]]:
     configs = [(2000, 256, 8), (2000, 256, 16)] if full \
         else [(512, 64, 8)]
@@ -131,4 +231,16 @@ def run(full: bool = False) -> list[tuple[str, float, str]]:
             f"throughput_ratio={rps_b / max(rps_s, 1e-12):.2f};"
             f"p99_ms={rec['batched']['p99_latency_ms']:.1f};"
             f"a_pass_ratio={rec['a_pass_ratio']:.2f}"))
+
+    rec = recovery_overhead()
+    print("BENCH " + json.dumps(rec))
+    s = rec["stragglers"]
+    recov = [x for r in s.values() for x in r["recovery_latency_s"]]
+    rows.append((
+        f"serve_recovery_{rec['m']}x{rec['n']}_k{rec['requests']}",
+        (max(recov) if recov else 0.0) * 1e6,
+        ";".join(f"rps_s{c}={r['requests_per_s']:.1f}"
+                 for c, r in s.items())
+        + f";remeshes={sum(r['remeshes'] for r in s.values())}"
+        + (f";recovery_p100_ms={max(recov) * 1e3:.1f}" if recov else "")))
     return rows

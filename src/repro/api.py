@@ -21,6 +21,8 @@ Every `Result.info` carries the standardized keys
   converged  — whether the stopping test fired before the iteration cap
   plan       — which execution plan answered it ("fused", "cached",
                "gram", "randomized", "lanczos", ...)
+  degraded   — None for a full-quality answer, else why it was cut short
+               ("deadline", "max_iterations", "fault", "overloaded")
 
 plus solver-native detail; pre-existing solver-specific keys ("fused",
 "n_evals", "mode", "passes_over_A", ...) remain as deprecated aliases for
@@ -29,6 +31,8 @@ one release.
 from __future__ import annotations
 
 import itertools
+import math
+import time
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -56,6 +60,26 @@ def _next_id(prefix: str) -> str:
     return f"{prefix}-{next(_ids)}"
 
 
+def _check_scalar(name: str, value, *, minimum=None,
+                  exclusive: bool = False, optional: bool = False):
+    """Shared typed validation for request scalars: finite, and bounded
+    below when asked.  Rejecting NaN/negative knobs at construction keeps
+    both entry paths (direct call and serving queue) from discovering a
+    bad deadline or tolerance mid-solve."""
+    if value is None:
+        if optional:
+            return
+        raise ValueError(f"{name} must be set")
+    v = float(value)
+    if math.isnan(v) or math.isinf(v):
+        raise ValueError(f"{name} must be finite, got {value!r}")
+    if minimum is not None:
+        if exclusive and not v > minimum:
+            raise ValueError(f"{name} must be > {minimum}, got {value!r}")
+        if not exclusive and not v >= minimum:
+            raise ValueError(f"{name} must be >= {minimum}, got {value!r}")
+
+
 @dataclass
 class SolveRequest:
     """minimize f(Ax) + h(x): the work unit of both solve paths.
@@ -77,6 +101,11 @@ class SolveRequest:
     max_iters: int = 200
     L0: float = 1.0               # initial Lipschitz estimate (1/step)
     x0: Any = None
+    # fault tolerance / resumability (see core.optim.elastic):
+    deadline_s: float | None = None     # wall budget; past it → best iterate
+    checkpoint_dir: str | None = None   # periodic resumable snapshots
+    checkpoint_every: int = 10          # iterations between snapshots
+    resume: bool = False                # restore from checkpoint_dir first
     # escape hatches (direct path; served without cross-request batching):
     problem: Problem | None = None
     smooth: Any = None
@@ -94,6 +123,26 @@ class SolveRequest:
             if self.A is None or self.b is None:
                 raise ValueError("SolveRequest needs (A, b) or a "
                                  "problem/smooth escape hatch")
+        _check_scalar("tol", self.tol, minimum=0.0)
+        _check_scalar("lam", self.lam, minimum=0.0)
+        _check_scalar("L0", self.L0, minimum=0.0, exclusive=True)
+        _check_scalar("param", self.param)
+        _check_scalar("max_iters", self.max_iters, minimum=0,
+                      exclusive=True)
+        _check_scalar("deadline_s", self.deadline_s, minimum=0.0,
+                      exclusive=True, optional=True)
+        _check_scalar("checkpoint_every", self.checkpoint_every, minimum=0,
+                      exclusive=True)
+        if self.checkpoint_dir is not None:
+            if self.problem is not None or self.smooth is not None \
+                    or self.prox is not None:
+                raise ValueError("checkpoint_dir needs the (A, b) request "
+                                 "form (escape hatches aren't resumable)")
+            if self.method not in ("gra", "lbfgs"):
+                raise ValueError("checkpoint_dir needs method 'gra' or "
+                                 f"'lbfgs', got {self.method!r}")
+        if self.resume and self.checkpoint_dir is None:
+            raise ValueError("resume=True needs checkpoint_dir")
 
 
 @dataclass
@@ -104,7 +153,13 @@ class SvdRequest:
     compute_u: bool = True
     mode: str = "auto"            # auto | gram | lanczos | randomized
     options: dict = field(default_factory=dict)   # extra compute_svd kwargs
+    deadline_s: float | None = None
     request_id: str = field(default_factory=lambda: _next_id("svd"))
+
+    def __post_init__(self):
+        _check_scalar("k", self.k, minimum=0, exclusive=True)
+        _check_scalar("deadline_s", self.deadline_s, minimum=0.0,
+                      exclusive=True, optional=True)
 
 
 @dataclass
@@ -114,18 +169,42 @@ class SimilarityRequest:
     threshold: float = 0.0
     gamma: float | None = None
     seed: int = 0
+    deadline_s: float | None = None
     request_id: str = field(default_factory=lambda: _next_id("sim"))
+
+    def __post_init__(self):
+        _check_scalar("threshold", self.threshold, minimum=0.0)
+        _check_scalar("deadline_s", self.deadline_s, minimum=0.0,
+                      exclusive=True, optional=True)
 
 
 @dataclass
 class Result:
     """Uniform answer envelope: `x` for solves, `factors` for SVD
     ((U, s, V)) and similarities ((sim,)), `info` with the standardized
-    keys (iterations / a_passes / converged / plan)."""
+    keys (iterations / a_passes / converged / plan, plus `degraded` — None
+    for a full-quality answer, else why it was cut short: "deadline",
+    "max_iterations", "fault", "overloaded")."""
     x: Array | None = None
     factors: tuple | None = None
     info: dict = field(default_factory=dict)
     request_id: str = ""
+
+
+@dataclass
+class Overloaded(Result):
+    """Typed load-shed answer: the server refused the request at submit
+    because its admission budget/queue bound was exhausted — carries no
+    solution, only `info["degraded"] == "overloaded"`.  A typed result
+    (instead of unbounded queueing or an exception mid-drain) lets clients
+    distinguish "retry later" from "failed"."""
+
+    def __post_init__(self):
+        self.info.setdefault("degraded", "overloaded")
+        self.info.setdefault("iterations", 0)
+        self.info.setdefault("a_passes", 0)
+        self.info.setdefault("converged", False)
+        self.info.setdefault("plan", "rejected")
 
 
 # -- request construction helpers (shared with launch/serve) ------------------
@@ -171,13 +250,39 @@ def solve_prox(req: SolveRequest):
 
 # -- direct call path ---------------------------------------------------------
 
+def _solve_elastic(req: SolveRequest) -> Result:
+    """Host-driven resumable/deadline-aware path (core.optim.elastic):
+    taken when a direct-form gra/lbfgs request asks for a checkpoint or a
+    wall deadline — the lax.while_loop solvers can't be interrupted or
+    snapshotted mid-flight, the per-iteration driver can."""
+    from repro.core.optim import elastic as _elastic
+    ckpt = None
+    if req.checkpoint_dir is not None:
+        ckpt = _elastic.SolveCheckpoint(req.checkpoint_dir,
+                                        every=req.checkpoint_every)
+    cfg = _elastic.ElasticConfig(checkpoint=ckpt)
+    x, info = _elastic.solve_elastic(
+        solve_linop(req), req.loss, req.b, param=req.param, reg=req.reg,
+        lam=req.lam, method=req.method, tol=req.tol,
+        max_iters=req.max_iters, L0=req.L0, x0=req.x0,
+        deadline_s=req.deadline_s, resume=req.resume, elastic=cfg)
+    return Result(x=x, info=info, request_id=req.request_id)
+
+
 def solve(req: SolveRequest, *, fused: bool | str = "auto") -> Result:
     """Run one SolveRequest immediately (no queue, no batching)."""
     if req.problem is not None:
         x, info = _minimize(req.problem, req.method,
                             max_iters=req.max_iters, tol=req.tol,
                             fused=fused)
-        return Result(x=x, info=dict(info), request_id=req.request_id)
+        info = dict(info)
+        info.setdefault("degraded", None)
+        return Result(x=x, info=info, request_id=req.request_id)
+    if (req.checkpoint_dir is not None
+            or (req.deadline_s is not None
+                and req.method in ("gra", "lbfgs")
+                and req.smooth is None and req.prox is None)):
+        return _solve_elastic(req)
 
     from repro.core.optim.first_order import minimize_first_order
     from repro.core.tfocs.solver import TfocsOptions
@@ -191,16 +296,30 @@ def solve(req: SolveRequest, *, fused: bool | str = "auto") -> Result:
     if req.method == "lbfgs" and not isinstance(prox, ProxZero):
         raise ValueError("method='lbfgs' needs reg='none' (fold the "
                          "regularizer into a smooth loss)")
+    t0 = time.perf_counter()
     x, info = minimize_first_order(req.method, smooth, linop, prox,
                                    x0=x0, opts=opts)
-    return Result(x=x, info=dict(info), request_id=req.request_id)
+    info = dict(info)
+    info.setdefault("degraded", None)
+    if req.deadline_s is not None \
+            and time.perf_counter() - t0 > req.deadline_s:
+        # The accelerated while_loop variants can't stop mid-flight; the
+        # overrun is reported post-hoc so callers still learn the budget
+        # was blown.
+        info["degraded"] = "deadline"
+    return Result(x=x, info=info, request_id=req.request_id)
 
 
 def svd(req: SvdRequest) -> Result:
+    t0 = time.perf_counter()
     res = _compute_svd(req.A, req.k, compute_u=req.compute_u,
                        mode=req.mode, **req.options)
     info = dict(res.info or {})
     info.setdefault("converged", True)
+    info.setdefault("degraded", None)
+    if req.deadline_s is not None \
+            and time.perf_counter() - t0 > req.deadline_s:
+        info["degraded"] = "deadline"
     return Result(factors=(res.U, res.s, res.V), info=info,
                   request_id=req.request_id)
 
@@ -215,6 +334,7 @@ def similarities(req: SimilarityRequest) -> Result:
     info.setdefault("a_passes", 1)
     info.setdefault("converged", True)
     info.setdefault("plan", "dimsum" if req.threshold > 0 else "gram")
+    info.setdefault("degraded", None)
     return Result(factors=(sim,), info=info, request_id=req.request_id)
 
 

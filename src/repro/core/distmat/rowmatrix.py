@@ -305,6 +305,15 @@ class RowMatrix(T.DistMatrix):
         var = T.dimsum_variance(s2, p)
         return sim, {"gamma": g, "p": p, "variance": var}
 
+    def remesh(self, mesh: Mesh, row_axes: Sequence[str] | None = None
+               ) -> "RowMatrix":
+        """Re-shard the SAME logical matrix onto a different mesh (elastic
+        re-mesh, train/elastic): strip the old mesh's padding rows, re-pad
+        for the new shard count and device_put with the new sharding.  Used
+        mid-solve after a straggler/device loss — the solver state (driver
+        vectors) is mesh-independent, so only the matrix moves."""
+        return RowMatrix.create(self.rows[: self.n_rows], mesh, row_axes)
+
     def to_sparse_row_matrix(self, bs: int | str = "auto"):
         """Block-compress into the BSR-backed sparse type (driver-scale,
         like the other format conversions)."""

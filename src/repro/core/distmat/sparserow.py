@@ -176,6 +176,32 @@ class SparseRowMatrix(T.DistMatrix):
                                dims=(m, n), nnz=nnz, mesh=mesh,
                                row_axes=row_axes)
 
+    def remesh(self, mesh: Mesh, row_axes: Sequence[str] | None = None
+               ) -> "SparseRowMatrix":
+        """Re-shard the SAME logical matrix onto a different mesh (elastic
+        re-mesh, train/elastic): the block-row strips are re-padded for the
+        new shard count (padding block-rows are all-zero blocks with column
+        0, which contribute nothing) and device_put with the new sharding.
+        Block size, ELL width and the stored blocks are unchanged."""
+        mesh = mesh or T.single_device_mesh()
+        row_axes = tuple(row_axes) if row_axes else T.row_axes_for(mesh)
+        nshards = T.axes_size(mesh, row_axes)
+        nbr_true = _rup(self.dims[0], self.bs) // self.bs
+        nbr_pad = _rup(nbr_true, nshards)
+        data, cols = self.data, self.cols
+        if nbr_pad <= data.shape[0]:
+            data, cols = data[:nbr_pad], cols[:nbr_pad]
+        else:
+            extra = nbr_pad - data.shape[0]
+            data = jnp.concatenate(
+                [data, jnp.zeros((extra,) + data.shape[1:], data.dtype)])
+            cols = jnp.concatenate(
+                [cols, jnp.zeros((extra,) + cols.shape[1:], cols.dtype)])
+        sh = NamedSharding(mesh, P(row_axes))
+        return SparseRowMatrix(T.put(data, sh), T.put(cols, sh),
+                               dims=self.dims, nnz=self.nnz, mesh=mesh,
+                               row_axes=row_axes)
+
     # -- bookkeeping ---------------------------------------------------------
     @property
     def shape(self) -> tuple[int, int]:

@@ -3,7 +3,11 @@ from .lbfgs import lbfgs, lbfgs_composite
 from .problems import make_problem, Problem, composite_value, \
     lbfgs_value_and_grad
 from .api import minimize
+from .elastic import (DeviceLostError, ElasticConfig, ElasticGroup,
+                      SolveCheckpoint, TransientShardError, solve_elastic)
 
 __all__ = ["minimize_first_order", "METHODS", "lbfgs", "lbfgs_composite",
            "make_problem", "Problem", "composite_value",
-           "lbfgs_value_and_grad", "minimize"]
+           "lbfgs_value_and_grad", "minimize",
+           "ElasticGroup", "ElasticConfig", "SolveCheckpoint",
+           "solve_elastic", "TransientShardError", "DeviceLostError"]

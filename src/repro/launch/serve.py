@@ -34,6 +34,20 @@ accelerated variants whose momentum point defeats pass sharing) run as
 one-shot jobs through the same FIFO queue and budget, via the same
 ``repro.api`` executors.
 
+The frontend is hardened for real fleets (see the "fault tolerance &
+resumable solves" section of examples/quickstart.py):
+
+  * every GroupRunner drives core/optim/elastic.ElasticGroup, so a server
+    built with an ElasticConfig gets straggler detection, mid-solve
+    re-meshing and bounded retry-with-backoff per group — and the planner
+    re-prices the group on its new shard shape after a re-mesh;
+  * per-request ``deadline_s`` / ``max_iters`` degrade gracefully: an
+    expired resident is retired with its best iterate, ``converged=False``
+    and ``info["degraded"]`` naming the reason, instead of blocking the
+    group;
+  * ``max_pending`` sheds load at submit with a typed ``api.Overloaded``
+    result instead of queueing without bound.
+
 Every answer is a ``repro.api.Result`` whose info carries the standardized
 keys; for served solves ``a_passes`` is the number of GROUP passes consumed
 while the request was resident — the amortized cost the batching buys down.
@@ -49,13 +63,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
-from repro.core.optim import batched as _batched
+from repro.core.optim import elastic as _elastic
 from repro.launch import planner as _planner
 
 Array = jax.Array
 
 # Engines the group runner batches; everything else is served one-shot.
-GROUP_METHODS = ("gra", "lbfgs")
+GROUP_METHODS = _elastic.GROUP_METHODS
 
 
 def group_key(req: api.SolveRequest):
@@ -66,42 +80,13 @@ def group_key(req: api.SolveRequest):
 
 
 def batchable(req: Any) -> bool:
+    # Checkpointed solves run one-shot through the resumable elastic path:
+    # their snapshots capture a single request's state, not a shared
+    # group's.
     return (isinstance(req, api.SolveRequest) and req.problem is None
             and req.smooth is None and req.prox is None
-            and req.method in GROUP_METHODS)
-
-
-# Module-level jitted slot writers: admission/retirement edit one row of
-# the batched state between iterations, and doing the dozen scatters
-# eagerly costs more host dispatch than a whole solver step — jit folds
-# each into one program, cached by array shape across ALL runners.
-@jax.jit
-def _write_slot_gra(state, T, W, lam, tol, i, t, w, lamv, tolv, x0, L0):
-    state = state._replace(
-        X=state.X.at[i].set(x0), F=state.F.at[i].set(0.0),
-        G=state.G.at[i].set(0.0), L=state.L.at[i].set(L0),
-        k=state.k.at[i].set(0), done=state.done.at[i].set(False),
-        obj=state.obj.at[i].set(jnp.nan), bt=state.bt.at[i].set(0))
-    return (state, T.at[i].set(t), W.at[i].set(w), lam.at[i].set(lamv),
-            tol.at[i].set(tolv))
-
-
-@jax.jit
-def _write_slot_lbfgs(state, T, W, lam, tol, i, t, w, lamv, tolv, x0, L0):
-    state = state._replace(
-        X=state.X.at[i].set(x0), F=state.F.at[i].set(0.0),
-        G=state.G.at[i].set(0.0), S_=state.S_.at[i].set(0.0),
-        Y=state.Y.at[i].set(0.0), rho=state.rho.at[i].set(0.0),
-        idx=state.idx.at[i].set(0), filled=state.filled.at[i].set(0),
-        k=state.k.at[i].set(0), done=state.done.at[i].set(False),
-        obj=state.obj.at[i].set(jnp.nan))
-    return (state, T.at[i].set(t), W.at[i].set(w), lam.at[i].set(lamv),
-            tol.at[i].set(tolv))
-
-
-@jax.jit
-def _clear_row(W, i):
-    return W.at[i].set(0.0)
+            and req.method in GROUP_METHODS
+            and req.checkpoint_dir is None)
 
 
 class GroupRunner:
@@ -118,56 +103,59 @@ class GroupRunner:
 
     def __init__(self, linop, kind: str, param: float = 1.0, *,
                  reg: str = "none", method: str = "gra", slots: int = 8,
-                 mem: int = 10):
-        if method not in GROUP_METHODS:
-            raise ValueError(f"method must be one of {GROUP_METHODS}")
-        if method == "lbfgs" and reg != "none":
-            raise ValueError("lbfgs groups need reg='none'")
-        self.linop, self.kind, self.param = linop, kind, param
+                 mem: int = 10,
+                 elastic: _elastic.ElasticConfig | None = None):
+        # All solver state lives in the elastic executor; the runner adds
+        # the serving concerns on top (request metadata, deadlines,
+        # retirement into api.Results, planner price cache).
+        self._eg = _elastic.ElasticGroup(linop, kind, param, reg=reg,
+                                         method=method, slots=slots,
+                                         mem=mem, elastic=elastic)
+        self.kind, self.param = kind, param
         self.reg, self.method, self.slots = reg, method, slots
-        self.n = linop.in_shape[0]
-        self.m_pad = linop.out_shape[0]
-        if method == "gra":
-            seed, step = _batched.make_gra_group(linop, kind, param, reg=reg)
-            self.state = _batched.gra_group_init(slots, self.n)
-        else:
-            seed, step = _batched.make_lbfgs_group(linop, kind, param)
-            self.state = _batched.lbfgs_group_init(slots, self.n, mem=mem)
-        self._seed, self._step = jax.jit(seed), jax.jit(step)
-        self.T = jnp.zeros((slots, self.m_pad), jnp.float32)
-        self.W = jnp.zeros((slots, self.m_pad), jnp.float32)
-        self.lam = jnp.zeros((slots,), jnp.float32)
-        self.tol = jnp.full((slots,), 1e-8, jnp.float32)
-        self.active = np.zeros(slots, bool)          # host-side slot map
         self.meta: list[dict | None] = [None] * slots
-        self.a_passes = 0          # lifetime group passes (the shared cost)
-        self._dirty = False        # admissions since the last seed pass
         self._price_cache = 0.0    # planner-modeled seconds per iteration
+        self._priced_remeshes = 0  # re-price when the shard shape changes
+
+    # -- delegated solver state (the executor owns it) ------------------------
+
+    @property
+    def linop(self):
+        return self._eg.linop
+
+    @property
+    def state(self):
+        return self._eg.state
+
+    @property
+    def active(self):
+        return self._eg.active
+
+    @property
+    def a_passes(self) -> int:
+        return self._eg.a_passes
+
+    @property
+    def remeshes(self) -> int:
+        return self._eg.remeshes
 
     # -- slot management ------------------------------------------------------
 
     def free_slots(self) -> int:
-        return int(self.slots - self.active.sum())
+        return self._eg.free_slots()
 
     def busy(self) -> bool:
-        return bool(self.active.any())
+        return self._eg.busy()
 
     def admit(self, req: api.SolveRequest) -> int:
         """Write `req` into a free slot; costs no pass by itself (the next
         step's seed recomputes F/G for the whole group in one)."""
-        i = int(np.flatnonzero(~self.active)[0])
-        x0 = jnp.zeros((self.n,), jnp.float32) if req.x0 is None \
-            else jnp.asarray(req.x0, jnp.float32)
-        write = _write_slot_gra if self.method == "gra" \
-            else _write_slot_lbfgs
-        self.state, self.T, self.W, self.lam, self.tol = write(
-            self.state, self.T, self.W, self.lam, self.tol, i,
-            self.linop.pad_data(jnp.asarray(req.b, jnp.float32)),
-            self.linop.row_weights(), float(req.lam), float(req.tol),
-            x0, float(req.L0))
-        self.active[i] = True
-        self.meta[i] = {"req": req, "admit_passes": self.a_passes}
-        self._dirty = True
+        i = self._eg.admit_slot(req.b, lam=float(req.lam),
+                                tol=float(req.tol), x0=req.x0,
+                                L0=float(req.L0))
+        self.meta[i] = {"req": req, "admit_passes": self.a_passes,
+                        "deadline_at": (time.monotonic() + req.deadline_s
+                                        if req.deadline_s else None)}
         return i
 
     # -- the iteration --------------------------------------------------------
@@ -177,45 +165,65 @@ class GroupRunner:
         shared backtracking/line-search attempts); returns retired lanes."""
         if not self.busy():
             return []
-        if self._dirty:
-            if self.method == "gra":
-                self.state, p = self._seed(self.state, self.T, self.W,
-                                           self.lam)
-            else:
-                self.state, p = self._seed(self.state, self.T, self.W)
-            self.a_passes += int(p)
-            self._dirty = False
-        act = jnp.asarray(self.active)
-        if self.method == "gra":
-            self.state, tries = self._step(self.state, self.T, self.W,
-                                           self.lam, self.tol, act)
-        else:
-            self.state, tries = self._step(self.state, self.T, self.W,
-                                           self.tol, act)
-        self.a_passes += int(tries)
+        out = self._expire_deadlines()
+        if not self.busy():
+            return out
+        try:
+            self._eg.step_iteration()
+        except (_elastic.TransientShardError,
+                _elastic.DeviceLostError) as e:
+            # Recovery exhausted (or no re-mesh policy): fail the resident
+            # requests gracefully with their best iterates rather than
+            # poisoning the serving loop.
+            for i in range(self.slots):
+                if self.active[i]:
+                    out.append(self._retire(i, False, degraded="fault",
+                                            error=str(e)))
+            return out
         done = np.asarray(self.state.done)
         k = np.asarray(self.state.k)
-        out = []
         for i in range(self.slots):
             if self.active[i] and (
                     done[i] or k[i] >= self.meta[i]["req"].max_iters):
                 out.append(self._retire(i, bool(done[i])))
         return out
 
-    def _retire(self, i: int, converged: bool) -> api.Result:
+    def _expire_deadlines(self) -> list[api.Result]:
+        """Retire residents whose wall deadline passed — best iterate,
+        converged=False, degraded="deadline" — so one slow request cannot
+        hold its slot (or block the group) past its budget."""
+        if not any(m is not None and m["deadline_at"] is not None
+                   for m in self.meta):
+            return []
+        now = time.monotonic()
+        out = []
+        for i in range(self.slots):
+            m = self.meta[i]
+            if self.active[i] and m is not None \
+                    and m["deadline_at"] is not None \
+                    and now > m["deadline_at"]:
+                out.append(self._retire(i, False, degraded="deadline"))
+        return out
+
+    def _retire(self, i: int, converged: bool, *,
+                degraded: str | None = None,
+                error: str | None = None) -> api.Result:
         meta = self.meta[i]
         req = meta["req"]
+        if degraded is None and not converged:
+            degraded = "max_iterations"
         info = {"iterations": int(self.state.k[i]),
                 # Group passes consumed while resident: the amortized cost
                 # (each pass also served every co-resident request).
                 "a_passes": self.a_passes - meta["admit_passes"],
                 "converged": converged, "plan": "fused-group",
                 "objective": float(self.state.obj[i]),
-                "slot": i}
+                "slot": i, "degraded": degraded}
+        if error is not None:
+            info["error"] = error
         # Zero the weight row so the retired lane contributes nothing to
         # subsequent group passes; state rows are reset on the next admit.
-        self.W = _clear_row(self.W, i)
-        self.active[i] = False
+        self._eg.clear_slot(i)
         self.meta[i] = None
         return api.Result(x=jnp.asarray(self.state.X[i]), info=info,
                           request_id=req.request_id)
@@ -231,17 +239,26 @@ class SolverServer:
     """
 
     def __init__(self, *, slots: int = 8, budget_s: float | None = None,
-                 backend: str | None = None):
+                 backend: str | None = None,
+                 max_pending: int | None = None,
+                 elastic_factory=None):
         self.slots = slots
         self.budget_s = budget_s
         self.backend = backend
+        # Load-shedding bound: submits past this queue depth are refused
+        # with a typed api.Overloaded result instead of queueing unboundedly.
+        self.max_pending = max_pending
+        # () -> core.optim.elastic.ElasticConfig, called once per group so
+        # each runner gets its own monitor/checkpoint instances.
+        self.elastic_factory = elastic_factory
         self._queue: list[Any] = []
         self._runners: dict[Any, GroupRunner] = {}
         self._results: dict[str, api.Result] = {}
         self._submit_t: dict[str, float] = {}
         self._events: list[tuple[str, float, float]] = []
         self.stats = {"steps": 0, "a_passes": 0, "admitted": 0,
-                      "oneshot": 0, "deferred_steps": 0}
+                      "oneshot": 0, "deferred_steps": 0, "shed": 0,
+                      "expired": 0, "remeshes": 0}
 
     # -- queue ----------------------------------------------------------------
 
@@ -250,6 +267,12 @@ class SolverServer:
                 and req.smooth is None and req.method == "lbfgs" \
                 and req.reg != "none":
             raise ValueError("method='lbfgs' needs reg='none'")
+        if self.max_pending is not None \
+                and len(self._queue) >= self.max_pending:
+            self._submit_t[req.request_id] = time.perf_counter()
+            self._finish(api.Overloaded(request_id=req.request_id))
+            self.stats["shed"] += 1
+            return req.request_id
         self._queue.append(req)
         self._submit_t[req.request_id] = time.perf_counter()
         return req.request_id
@@ -305,6 +328,12 @@ class SolverServer:
         spent = self._active_cost()
         while self._queue:
             req = self._queue[0]
+            expired = self._expire_queued(req)
+            if expired is not None:
+                self._queue.pop(0)
+                self._finish(expired)
+                done.append(expired)
+                continue
             if batchable(req):
                 key = group_key(req)
                 runner = self._runners.get(key)
@@ -321,7 +350,9 @@ class SolverServer:
                         runner = GroupRunner(
                             api.solve_linop(req), req.loss, req.param,
                             reg=req.reg, method=req.method,
-                            slots=self.slots)
+                            slots=self.slots,
+                            elastic=(self.elastic_factory()
+                                     if self.elastic_factory else None))
                         runner._price_cache = cost
                         self._runners[key] = runner
                     runner.admit(req)
@@ -340,6 +371,24 @@ class SolverServer:
                 spent += cost
                 self.stats["oneshot"] += 1
         return done
+
+    def _expire_queued(self, req) -> api.Result | None:
+        """Dequeue-time deadline check for one-shot jobs: a request whose
+        wall budget was burnt WAITING in the queue is answered degraded
+        immediately instead of spending device time on an answer its
+        client has already abandoned."""
+        deadline = getattr(req, "deadline_s", None)
+        if deadline is None:
+            return None
+        t0 = self._submit_t.get(req.request_id)
+        if t0 is None or time.perf_counter() - t0 <= deadline:
+            return None
+        self.stats["expired"] += 1
+        return api.Result(
+            x=None, info={"iterations": 0, "a_passes": 0,
+                          "converged": False, "plan": "expired",
+                          "degraded": "deadline"},
+            request_id=req.request_id)
 
     def _run_oneshot(self, req) -> api.Result:
         if isinstance(req, api.SolveRequest):
@@ -369,6 +418,17 @@ class SolverServer:
                 before = runner.a_passes
                 out.extend(runner.step())
                 self.stats["a_passes"] += runner.a_passes - before
+                if runner.remeshes != runner._priced_remeshes:
+                    # A mid-solve re-mesh changed the shard shape (and the
+                    # padded row count with it): re-price the group so the
+                    # admission budget sees the post-failure cost.
+                    self.stats["remeshes"] += (runner.remeshes
+                                               - runner._priced_remeshes)
+                    runner._priced_remeshes = runner.remeshes
+                    runner._price_cache = _planner.plan(
+                        "fusedgrad", {"m": int(runner._eg.m_pad),
+                                      "n": int(runner._eg.n)},
+                        backend=self.backend).cost_s
         for res in out:
             self._finish(res)
         return out

@@ -29,6 +29,29 @@ import shutil
 import threading
 from typing import Any
 
+
+def _fsync_file(path: pathlib.Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    # Directory fsync makes the rename/replace itself durable; some
+    # filesystems don't support it — best effort, never fatal.
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - exotic fs
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - exotic fs
+        pass
+    finally:
+        os.close(fd)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -75,33 +98,54 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree,
         }
     np.savez(tmp / "shard_0.npz", **arrays)
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # Durability before the commit point: the shard data and manifest are
+    # fsync'd while still under the .tmp name, so the rename can never
+    # expose a directory whose contents are still in the page cache.
+    _fsync_file(tmp / "shard_0.npz")
+    _fsync_file(tmp / "manifest.json")
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)                       # commit point
+    _fsync_dir(ckpt_dir)
     latest_tmp = ckpt_dir / ".LATEST.tmp"
     latest_tmp.write_text(final.name)
+    # fsync the step marker BEFORE the atomic replace: a crash between the
+    # two leaves the old LATEST intact, never a torn pointer — so
+    # latest_step can never pick up a partially-written checkpoint.
+    _fsync_file(latest_tmp)
     os.replace(latest_tmp, ckpt_dir / "LATEST")  # atomic pointer update
+    _fsync_dir(ckpt_dir)
     return final
 
 
 class AsyncCheckpointer:
-    """Device→host transfer on the caller thread; disk I/O on a worker."""
+    """Device→host transfer on the caller thread; disk I/O on a worker.
+
+    Background-thread write errors are never dropped: the first
+    ``save_async``/``wait`` after a failed write re-raises the worker's
+    exception on the caller thread (and clears it, so one failure is
+    reported exactly once rather than poisoning every later call)."""
 
     def __init__(self, ckpt_dir: str | os.PathLike):
         self.ckpt_dir = pathlib.Path(ckpt_dir)
         self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
         self.last_error: BaseException | None = None
 
     def save_async(self, step: int, tree, specs=None, *, extra=None):
+        # Propagate any pending background failure BEFORE doing new work —
+        # callers learn about a lost checkpoint at the next save, not at
+        # process exit.
+        self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
-        self.wait()
 
         def work():
             try:
                 save(self.ckpt_dir, step, host_tree, specs, extra=extra)
             except BaseException as e:  # noqa: BLE001
-                self.last_error = e
+                with self._lock:
+                    self.last_error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -110,16 +154,33 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self.last_error is not None:
-            raise self.last_error
+        with self._lock:
+            err, self.last_error = self.last_error, None
+        if err is not None:
+            raise err
+
+
+def _complete(step_dir: pathlib.Path) -> bool:
+    return (step_dir / "manifest.json").exists() \
+        and (step_dir / "shard_0.npz").exists()
 
 
 def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
-    ptr = pathlib.Path(ckpt_dir) / "LATEST"
-    if not ptr.exists():
+    """Newest *committed* step.  The LATEST pointer is only trusted when the
+    directory it names is complete (manifest + shard data); otherwise fall
+    back to scanning for the newest complete step directory — a
+    partially-written checkpoint is never picked up."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ptr = ckpt_dir / "LATEST"
+    if ptr.exists():
+        name = ptr.read_text().strip()
+        if name and _complete(ckpt_dir / name):
+            return int(name.split("_")[-1])
+    if not ckpt_dir.exists():
         return None
-    name = ptr.read_text().strip()
-    return int(name.split("_")[-1])
+    steps = sorted((int(d.name.split("_")[-1]) for d in
+                    ckpt_dir.glob("step_*") if _complete(d)), reverse=True)
+    return steps[0] if steps else None
 
 
 def restore(ckpt_dir: str | os.PathLike, tree_like, *,

@@ -1,4 +1,5 @@
-"""Elastic re-meshing: resume training on a different device count.
+"""Elastic re-meshing: resume training — or continue a SOLVE — on a
+different device count.
 
 Failure story on a real fleet: a pod (or host) dies mid-run → the job
 restarts on the surviving slice → `remesh` re-shards the latest checkpoint
@@ -10,10 +11,23 @@ data.pipeline) → training continues with an adjusted per-device batch.
 The global batch is kept constant across re-meshes (more grad-accum
 microbatches on fewer chips), so the optimization trajectory is unchanged
 modulo floating-point reduction order.
+
+The solver loop takes the cheaper road: because its iterate/gradient state
+lives on the driver (replicated vectors), a mid-solve re-mesh only moves
+the distributed MATRIX — `remesh_distmat` re-shards a RowMatrix /
+SparseRowMatrix onto a shrunken mesh (`survivor_mesh` drops the straggling
+shard named by train.straggler.ShardMonitor), `remesh_linop` rebuilds a
+possibly-wrapped LinopMatrix around it, and the elastic executor
+(core/optim/elastic.ElasticGroup) continues from the same iterate without
+restarting.  See the "fault tolerance & resumable solves" section of
+examples/quickstart.py.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from . import checkpoint as ckpt_mod
@@ -44,3 +58,48 @@ def resume(ckpt_dir, tree_like, specs, new_mesh: Mesh, *,
     while global_batch % (mb * new_dp) and mb < global_batch:
         mb += 1
     return tree, extra, mb
+
+
+# -- solver-side elastic re-mesh ----------------------------------------------
+
+def survivor_mesh(mesh: Mesh, drop_shard: int) -> Mesh:
+    """The mesh left after dropping row-shard `drop_shard`'s devices.
+
+    Row shards map to rows of the device grid viewed as
+    (row_shards, model); dropping a shard drops that whole row (its model
+    slice dies with the host).  A 1-shard mesh has no survivors — the last
+    shard is never dropped; the same devices come back as a fresh mesh, so
+    callers can re-mesh unconditionally."""
+    devs = np.asarray(mesh.devices)
+    model = devs.shape[-1] if mesh.axis_names \
+        and mesh.axis_names[-1] == "model" else 1
+    rows = devs.reshape(-1, model)
+    if rows.shape[0] > 1:
+        rows = np.delete(rows, drop_shard % rows.shape[0], axis=0)
+    return Mesh(rows, ("data", "model"))
+
+
+def remesh_distmat(A, new_mesh: Mesh, row_axes=None):
+    """Re-shard a distributed matrix (RowMatrix / SparseRowMatrix — anything
+    with a `.remesh`) onto `new_mesh`; driver-local arrays pass through
+    untouched (there is nothing to move)."""
+    if hasattr(A, "remesh"):
+        return A.remesh(new_mesh, row_axes)
+    return A
+
+
+def remesh_linop(linop, new_mesh: Mesh):
+    """Rebuild a (possibly wrapped) linear operator onto `new_mesh`.
+
+    Wrapper layers that carry a `.base` (CountingLinop, the fault-injection
+    FaultyLinop, LinopAdjoint) are preserved with their state via
+    dataclasses.replace; the LinopMatrix at the bottom gets its distmat
+    re-sharded.  Operators with no distributed operand are returned as-is.
+    """
+    from repro.core.tfocs.linop import LinopMatrix
+    if isinstance(linop, LinopMatrix):
+        return LinopMatrix(remesh_distmat(linop.A, new_mesh))
+    if dataclasses.is_dataclass(linop) and hasattr(linop, "base"):
+        return dataclasses.replace(
+            linop, base=remesh_linop(linop.base, new_mesh))
+    return linop

@@ -7,6 +7,11 @@ production mitigation happens at the *step* granularity:
   * StepMonitor keeps an EMA of step wall time and flags steps slower than
     `threshold`× the EMA — the signal that a host is thermally throttling,
     a link is degraded, or a preemption notice landed;
+  * ShardMonitor runs one StepMonitor per shard over per-iteration,
+    per-shard timing telemetry and names WHICH shard is the straggler — the
+    detector the elastic solver loop (core/optim/elastic.ElasticGroup, the
+    serving frontend's GroupRunner) feeds so it can drop the slow shard and
+    re-shard the distributed matrix mid-solve via train.elastic.remesh;
   * on `trip_limit` consecutive flags the policy callback fires; the default
     policy checkpoints and requests an elastic re-mesh (drop the slow host's
     pod and resume on the survivors — see train.elastic), which is what
@@ -14,12 +19,15 @@ production mitigation happens at the *step* granularity:
   * `deadline_s` turns a hung collective (dead host) into a detectable
     failure instead of an infinite stall.
 
-This is simulation-tested (tests/test_fault_tolerance.py) since the
-container has one host; the monitor math is host-count independent.
+This is simulation-tested (tests/test_fault_tolerance.py, using the
+train.faults injection harness) since the container has one host; the
+monitor math is host-count independent.  The "fault tolerance & resumable
+solves" section of examples/quickstart.py walks through the solver wiring.
 """
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from typing import Callable
 
@@ -87,4 +95,59 @@ class StepMonitor:
             self.trips = 0
             if self.on_straggler is not None:
                 self.on_straggler(dict(verdict, ema=self.ema))
+        return verdict
+
+
+class ShardMonitor:
+    """Per-shard straggler detection from per-iteration step telemetry.
+
+    One StepMonitor per shard; `observe(shard_times)` feeds each shard its
+    own duration.  A shard is named the straggler only when BOTH hold:
+
+      * its own StepMonitor tripped (slower than its own EMA history for
+        `trip_limit` consecutive iterations, or past `deadline_s`) — the
+        thermal-throttle / degraded-link signature; and
+      * it is `threshold`× slower than the median of the OTHER shards this
+        iteration — so a uniform slowdown (new kernel shape, host noise)
+        never looks like a straggler.  On a 1-shard mesh there are no
+        others, so the shard's own trip decides alone.
+
+    The verdict dict mirrors StepMonitor's: `tripped` plus `shard` (the
+    flagged shard index, slowest first when several trip together).  After
+    an elastic re-mesh the caller `reset(new_nshards)`s the monitor — the
+    survivors' history no longer predicts the new shard shapes.
+    """
+
+    def __init__(self, nshards: int,
+                 cfg: StragglerConfig = StragglerConfig(),
+                 on_straggler: Callable[[dict], None] | None = None):
+        self.cfg = cfg
+        self.on_straggler = on_straggler
+        self.reset(nshards)
+
+    def reset(self, nshards: int) -> None:
+        self.nshards = nshards
+        self.monitors = [StepMonitor(self.cfg) for _ in range(nshards)]
+
+    def observe(self, shard_times) -> dict:
+        times = [float(t) for t in shard_times]
+        assert len(times) == self.nshards, (len(times), self.nshards)
+        verdicts = [m.observe(t) for m, t in zip(self.monitors, times)]
+        suspects = []
+        for i, (v, t) in enumerate(zip(verdicts, times)):
+            if not v["tripped"]:
+                continue
+            others = times[:i] + times[i + 1:]
+            if others and t <= self.cfg.threshold * statistics.median(others):
+                continue                     # everybody slowed — not a straggler
+            suspects.append((t, i))
+        shard = max(suspects)[1] if suspects else None
+        verdict = {"tripped": shard is not None, "shard": shard,
+                   "times": times,
+                   "deadline_exceeded": any(v["deadline_exceeded"]
+                                            for v in verdicts),
+                   "flagged": [i for i, v in enumerate(verdicts)
+                               if v["flagged"] or v["tripped"]]}
+        if verdict["tripped"] and self.on_straggler is not None:
+            self.on_straggler(dict(verdict))
         return verdict

@@ -1,7 +1,12 @@
 """Fault tolerance: checkpoint/restart, elastic re-mesh, straggler
-monitor, deterministic data pipeline, failure-recovery integration."""
+monitor, deterministic data pipeline, failure-recovery integration — and
+(the `fault`-marked half) the SOLVER-level story: straggler-triggered
+mid-solve re-mesh, transient-fault retry, resumable solves, and graceful
+degradation in the serving frontend, driven by the train.faults injection
+harness."""
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -12,8 +17,9 @@ from repro.models.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt_mod
-from repro.train.elastic import remesh, resume
-from repro.train.straggler import StepMonitor, StragglerConfig
+from repro.train.elastic import resume
+from repro.train.straggler import (ShardMonitor, StepMonitor,
+                                   StragglerConfig)
 from repro.train.train_step import build_train_step
 
 
@@ -144,3 +150,415 @@ def test_data_pipeline_host_sharding():
     sh1 = next(dp.HostIterator(dc).shard_for(1, 2))
     np.testing.assert_array_equal(
         np.concatenate([sh0["tokens"], sh1["tokens"]]), full["tokens"])
+
+
+# =========================================================================
+# Solver-level fault tolerance (`fault` marker): the elastic executor of
+# core/optim/elastic driven through the train.faults injection harness.
+# Every test is device-count adaptive — on 1 host device the "mesh" is a
+# single shard and survivor_mesh re-meshes onto the same devices; the CI
+# fault leg re-runs them with 8 forced host devices for real sharding.
+# =========================================================================
+
+from repro import api                                     # noqa: E402
+from repro.core.distmat import RowMatrix                  # noqa: E402
+from repro.core.distmat.types import make_mesh            # noqa: E402
+from repro.core.optim.elastic import (ElasticConfig,      # noqa: E402
+                                      ElasticGroup, SolveCheckpoint,
+                                      solve_elastic)
+from repro.core.tfocs.linop import LinopMatrix            # noqa: E402
+from repro.launch.serve import GroupRunner, SolverServer  # noqa: E402
+from repro.train.faults import (FaultPlan, FaultyLinop,   # noqa: E402
+                                FaultyMesh, TransientShardError)
+
+def _nosleep(_dt):
+    """Injected in place of time.sleep: faults without the wall time."""
+
+
+def _lstsq_setup(m=120, n=10, seed=21):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    b = (A @ rng.normal(size=n) + 0.01 * rng.normal(size=m)) \
+        .astype(np.float32)
+    return A, b, np.linalg.lstsq(A, b, rcond=None)[0]
+
+
+def _sharded(A):
+    """A RowMatrix on an explicit mesh over every available device (1 or
+    8), so the re-mesh path is exercised either way."""
+    mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+    return RowMatrix.create(jnp.asarray(A), mesh), mesh
+
+
+@pytest.mark.fault
+class TestShardMonitor:
+    CFG = StragglerConfig(warmup_steps=2, threshold=2.0, trip_limit=2)
+
+    def _warm(self, mon, nshards, steps=6, dt=0.1):
+        for _ in range(steps):
+            v = mon.observe([dt] * nshards)
+            assert not v["tripped"]
+
+    def test_names_the_slow_shard(self):
+        mon = ShardMonitor(4, self.CFG)
+        self._warm(mon, 4)
+        v = mon.observe([0.1, 0.1, 0.5, 0.1])     # first flag: no trip yet
+        assert not v["tripped"] and 2 in v["flagged"]
+        v = mon.observe([0.1, 0.1, 0.5, 0.1])     # consecutive → tripped
+        assert v["tripped"] and v["shard"] == 2
+
+    def test_uniform_slowdown_is_not_a_straggler(self):
+        """Everybody 5× slower (new kernel shape, host noise): own-EMA
+        monitors all trip, but nobody beats the median test — a global
+        slowdown must not cost a shard its job."""
+        mon = ShardMonitor(4, self.CFG)
+        self._warm(mon, 4)
+        for _ in range(4):
+            v = mon.observe([0.5, 0.5, 0.5, 0.5])
+            assert not v["tripped"]
+
+    def test_single_shard_falls_back_to_own_trip(self):
+        mon = ShardMonitor(1, self.CFG)
+        self._warm(mon, 1)
+        mon.observe([0.5])
+        v = mon.observe([0.5])
+        assert v["tripped"] and v["shard"] == 0
+
+    def test_reset_forgets_history(self):
+        mon = ShardMonitor(4, self.CFG)
+        self._warm(mon, 4)
+        mon.reset(3)
+        assert mon.nshards == 3
+        v = mon.observe([0.5, 0.5, 0.5])          # fresh warmup — no trip
+        assert not v["tripped"]
+
+
+@pytest.mark.fault
+class TestCheckpointHardening:
+    def test_async_write_error_surfaces_on_next_save(self, tmp_path):
+        """A background write failure is raised at the NEXT save_async (or
+        wait) — never silently dropped, and reported exactly once."""
+        blocker = tmp_path / "ckpt"
+        blocker.write_text("not a directory")
+        saver = ckpt.AsyncCheckpointer(blocker)
+        saver.save_async(1, {"a": np.zeros(3, np.float32)})
+        with pytest.raises(OSError):
+            saver.save_async(2, {"a": np.zeros(3, np.float32)})
+        saver.wait()                               # cleared: no re-raise
+
+    def test_latest_step_skips_partial_checkpoint(self, tmp_path):
+        """A torn checkpoint (manifest present, shard data missing) is
+        never picked up, even when a stale LATEST names it."""
+        ckpt.save(tmp_path, 1, {"a": np.arange(3, dtype=np.float32)})
+        partial = tmp_path / "step_00000002"
+        partial.mkdir()
+        (partial / "manifest.json").write_text("{}")
+        (tmp_path / "LATEST").write_text(partial.name)
+        assert ckpt.latest_step(tmp_path) == 1
+        tree, _ = ckpt.restore(tmp_path, {"a": np.zeros(3, np.float32)})
+        np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                      np.arange(3, dtype=np.float32))
+
+
+@pytest.mark.fault
+class TestElasticSolve:
+    def test_straggler_detected_remesh_matches_clean_solve(self):
+        """THE acceptance property: a shard that starts straggling
+        mid-solve is detected, the matrix is re-sharded onto the survivor
+        mesh without restarting, and the interrupted solve matches the
+        undisturbed one at solver tolerance."""
+        A, b, ref = _lstsq_setup()
+        mat, mesh = _sharded(A)
+        x_clean, info_clean = solve_elastic(LinopMatrix(mat), "quad", b,
+                                            tol=1e-7, max_iters=400)
+        assert info_clean["converged"] and info_clean["remeshes"] == 0
+
+        lin = FaultyLinop(LinopMatrix(mat),
+                          FaultPlan(shard_delays={0: 0.2}, delay_from=6),
+                          sleep=_nosleep)
+        fm = FaultyMesh(mesh)
+        cfg = ElasticConfig(
+            monitor=ShardMonitor(lin.row_shards(),
+                                 StragglerConfig(warmup_steps=2,
+                                                 threshold=2.0,
+                                                 trip_limit=2)),
+            remesh_to=fm.drop)
+        x, info = solve_elastic(lin, "quad", b, tol=1e-7, max_iters=400,
+                                elastic=cfg)
+        assert info["converged"] and info["degraded"] is None
+        assert info["remeshes"] >= 1 and fm.casualties == [0]
+        assert lin.dropped == [0] and not lin.delays
+        assert float(np.max(np.abs(np.asarray(x) - np.asarray(x_clean)))) \
+            < 5e-4
+        assert float(np.max(np.abs(np.asarray(x) - ref))) < 1e-3
+
+    def test_device_loss_remesh_iterations_monotone(self):
+        """DeviceLostError mid-solve: re-mesh, continue.  The iteration
+        counter advances by at most one per step and never rewinds — no
+        completed iteration is re-run."""
+        A, b, ref = _lstsq_setup(seed=22)
+        mat, mesh = _sharded(A)
+        lin = FaultyLinop(LinopMatrix(mat),
+                          FaultPlan(lose_shard_at=3, lost_shard=0),
+                          sleep=_nosleep)
+        fm = FaultyMesh(mesh)
+        grp = ElasticGroup(lin, "quad", slots=1,
+                           elastic=ElasticConfig(remesh_to=fm.drop))
+        grp.admit_slot(b, tol=1e-7)
+        ks = [0]
+        while not bool(grp.state.done[0]) and ks[-1] < 400:
+            grp.step_iteration()
+            k = int(grp.state.k[0])
+            assert k - ks[-1] in (0, 1) and k >= ks[-1]
+            ks.append(k)
+        assert grp.remeshes == 1 and fm.casualties == [0]
+        assert bool(grp.state.done[0])
+        assert float(np.max(np.abs(np.asarray(grp.state.X[0]) - ref))) \
+            < 1e-3
+
+    def test_transient_fault_retry_is_bit_exact(self):
+        """A transient failed pass (and a NaN-poisoned reduction) roll
+        back and retry; the retried iteration recomputes the identical
+        step, so the whole trajectory is bit-equal to the fault-free run."""
+        A, b, _ = _lstsq_setup(seed=23)
+        x_clean, _ = solve_elastic(LinopMatrix(jnp.asarray(A)), "quad", b,
+                                   tol=0.0, max_iters=30)
+        lin = FaultyLinop(LinopMatrix(jnp.asarray(A)),
+                          FaultPlan(fail_steps=(3,), nan_steps=(7,)),
+                          sleep=_nosleep)
+        cfg = ElasticConfig(backoff_s=1e-4, sleep=_nosleep)
+        x, info = solve_elastic(lin, "quad", b, tol=0.0, max_iters=30,
+                                elastic=cfg)
+        assert info["retries"] == 2                # one fail + one NaN
+        assert info["iterations"] == 30
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(x_clean))
+
+    def test_retries_exhausted_raises(self):
+        A, b, _ = _lstsq_setup(seed=24)
+
+        class AlwaysFailing(FaultyLinop):
+            def fault_hook(self, step, state, dt):
+                raise TransientShardError("permanent injected fault")
+
+        slept = []
+        lin = AlwaysFailing(LinopMatrix(jnp.asarray(A)))
+        cfg = ElasticConfig(max_retries=2, backoff_s=0.01,
+                            sleep=slept.append)
+        with pytest.raises(TransientShardError):
+            solve_elastic(lin, "quad", b, tol=0.0, max_iters=10,
+                          elastic=cfg)
+        assert slept == [0.01, 0.02]               # exponential backoff
+
+    def test_checkpoint_resume_is_bit_exact(self, tmp_path):
+        """Kill a checkpointed solve mid-run, resume from its snapshot:
+        the resumed trajectory continues from the saved iteration (no
+        re-run) and the final iterate is bit-equal to an undisturbed
+        solve."""
+        A, b, _ = _lstsq_setup(seed=25)
+        lin = lambda: LinopMatrix(jnp.asarray(A))  # noqa: E731
+        x_full, info_full = solve_elastic(
+            lin(), "quad", b, tol=0.0, max_iters=40,
+            elastic=ElasticConfig(checkpoint=SolveCheckpoint(
+                tmp_path / "full", every=5, async_save=False)))
+        assert info_full["checkpoint_saves"] == 8
+
+        # "crash" at 20 iterations…
+        cut = ElasticConfig(checkpoint=SolveCheckpoint(
+            tmp_path / "cut", every=5, async_save=False))
+        solve_elastic(lin(), "quad", b, tol=0.0, max_iters=20, elastic=cut)
+        # …and resume from the snapshot in a fresh executor.
+        x2, i2 = solve_elastic(
+            lin(), "quad", b, tol=0.0, max_iters=40, resume=True,
+            elastic=ElasticConfig(checkpoint=SolveCheckpoint(
+                tmp_path / "cut", every=5, async_save=False)))
+        assert i2["resumed_from"] == 20
+        assert i2["iterations"] == 40
+        np.testing.assert_array_equal(np.asarray(x2), np.asarray(x_full))
+
+    def test_async_checkpointed_solve_resumes(self, tmp_path):
+        """The default async checkpointer path: snapshots land durably
+        (wait() at solve end) and the solve resumes from the latest."""
+        A, b, _ = _lstsq_setup(seed=26)
+        ck = SolveCheckpoint(tmp_path, every=4)
+        solve_elastic(LinopMatrix(jnp.asarray(A)), "quad", b, tol=0.0,
+                      max_iters=12, elastic=ElasticConfig(checkpoint=ck))
+        assert ck.latest() == 12
+        _, info = solve_elastic(
+            LinopMatrix(jnp.asarray(A)), "quad", b, tol=0.0, max_iters=16,
+            resume=True,
+            elastic=ElasticConfig(checkpoint=SolveCheckpoint(tmp_path,
+                                                             every=4)))
+        assert info["resumed_from"] == 12 and info["iterations"] == 16
+
+    def test_deadline_returns_best_iterate(self):
+        """A solve that cannot finish inside its wall budget returns the
+        best iterate with converged=False and degraded='deadline' instead
+        of running to the iteration cap."""
+        A, b, _ = _lstsq_setup(seed=27)
+        lin = FaultyLinop(LinopMatrix(jnp.asarray(A)),
+                          FaultPlan(shard_delays={0: 0.02}))
+        x, info = solve_elastic(lin, "quad", b, tol=0.0, max_iters=500,
+                                deadline_s=0.1, elastic=ElasticConfig())
+        assert info["degraded"] == "deadline"
+        assert not info["converged"]
+        assert 0 < info["iterations"] < 500
+        assert np.all(np.isfinite(np.asarray(x)))
+
+    def test_api_routes_checkpointed_request(self, tmp_path):
+        """SolveRequest(checkpoint_dir=..., resume=True) reaches the
+        elastic path through api.solve with standardized info keys."""
+        A, b, _ = _lstsq_setup(seed=28)
+        first = api.solve(api.SolveRequest(
+            A=A, b=b, loss="quad", tol=0.0, max_iters=10,
+            checkpoint_dir=str(tmp_path), checkpoint_every=5))
+        assert first.info["plan"] == "elastic"
+        assert first.info["checkpoint_saves"] == 2
+        res = api.solve(api.SolveRequest(
+            A=A, b=b, loss="quad", tol=0.0, max_iters=20,
+            checkpoint_dir=str(tmp_path), checkpoint_every=5, resume=True))
+        assert res.info["resumed_from"] == 10
+        assert res.info["iterations"] == 20
+        for key in ("iterations", "a_passes", "converged", "plan",
+                    "degraded"):
+            assert key in res.info
+
+
+@pytest.mark.fault
+class TestServingDegradation:
+    def test_request_validation(self):
+        A = np.eye(4, dtype=np.float32)
+        b = np.ones(4, np.float32)
+        for kw in ({"deadline_s": -1.0}, {"deadline_s": float("nan")},
+                   {"tol": -1e-3}, {"max_iters": 0}, {"lam": -0.5},
+                   {"L0": 0.0}, {"resume": True},
+                   {"checkpoint_dir": "/tmp/x", "method": "acc"}):
+            with pytest.raises(ValueError):
+                api.SolveRequest(A=A, b=b, loss="quad", **kw)
+        with pytest.raises(ValueError):
+            api.SvdRequest(A=A, k=0)
+        with pytest.raises(ValueError):
+            api.SimilarityRequest(A=A, threshold=float("nan"))
+
+    def test_deadline_expiry_retires_slot_not_group(self):
+        """An expired resident is retired with its best iterate and
+        degraded='deadline'; its co-resident solves on unharmed."""
+        A, b, ref = _lstsq_setup(seed=29)
+        srv = SolverServer(slots=2)
+        doomed = srv.submit(api.SolveRequest(
+            A=A, b=b, loss="quad", tol=0.0, max_iters=10_000,
+            deadline_s=1e-6))
+        healthy = srv.submit(api.SolveRequest(
+            A=A, b=b, loss="quad", tol=1e-7, max_iters=400))
+        srv.run()
+        r = srv.result(doomed)
+        assert r.info["degraded"] == "deadline"
+        assert not r.info["converged"]
+        assert r.info["iterations"] < 10_000
+        h = srv.result(healthy)
+        assert h.info["converged"] and h.info["degraded"] is None
+        assert float(np.max(np.abs(np.asarray(h.x) - ref))) < 1e-3
+
+    def test_max_iterations_degrades_gracefully(self):
+        A, b, _ = _lstsq_setup(seed=30)
+        srv = SolverServer(slots=1)
+        rid = srv.submit(api.SolveRequest(A=A, b=b, loss="quad",
+                                          tol=0.0, max_iters=5))
+        srv.run()
+        r = srv.result(rid)
+        assert not r.info["converged"]
+        assert r.info["degraded"] == "max_iterations"
+        assert r.info["iterations"] == 5
+
+    def test_load_shedding_returns_typed_overloaded(self):
+        A, b, _ = _lstsq_setup(seed=31)
+        srv = SolverServer(slots=1, max_pending=2)
+        reqs = [api.SolveRequest(A=A, b=b, loss="quad", tol=1e-6,
+                                 max_iters=200) for _ in range(4)]
+        ids = [srv.submit(r) for r in reqs]
+        assert srv.stats["shed"] == 2
+        for rid in ids[2:]:
+            res = srv.result(rid)
+            assert isinstance(res, api.Overloaded)
+            assert res.info["degraded"] == "overloaded"
+            assert res.x is None
+        srv.run()
+        for rid in ids[:2]:
+            assert srv.result(rid).info["converged"]
+
+    def test_oneshot_expired_in_queue_not_run(self):
+        """A one-shot whose deadline died while it waited in the queue is
+        answered degraded at dequeue — no device time spent on it."""
+        A, b, _ = _lstsq_setup(seed=32)
+        srv = SolverServer(slots=1)
+        rid = srv.submit(api.SolveRequest(A=A, b=b, loss="quad",
+                                          method="acc", max_iters=50,
+                                          deadline_s=1e-9))
+        import time as _time
+        _time.sleep(0.01)
+        srv.run()
+        r = srv.result(rid)
+        assert r.info["degraded"] == "deadline"
+        assert r.info["plan"] == "expired" and r.info["a_passes"] == 0
+
+    def test_injected_fault_beyond_retries_degrades_residents(self):
+        """When recovery is exhausted the residents get their best
+        iterates back (degraded='fault'), and the serving loop survives."""
+        A, b, _ = _lstsq_setup(seed=33)
+
+        class AlwaysFailing(FaultyLinop):
+            def fault_hook(self, step, state, dt):
+                if step >= 2:
+                    raise TransientShardError("injected permanent fault")
+                return state, None
+
+        lin = AlwaysFailing(LinopMatrix(jnp.asarray(A)))
+        runner = GroupRunner(
+            lin, "quad", slots=2,
+            elastic=ElasticConfig(max_retries=1, backoff_s=1e-4,
+                                  sleep=_nosleep))
+        runner.admit(api.SolveRequest(A=A, b=b, loss="quad", tol=0.0,
+                                      max_iters=50))
+        runner.admit(api.SolveRequest(A=A, b=b, loss="quad", tol=0.0,
+                                      max_iters=50))
+        out = []
+        while runner.busy():
+            out.extend(runner.step())
+        assert len(out) == 2
+        for r in out:
+            assert r.info["degraded"] == "fault"
+            assert not r.info["converged"]
+            assert r.info["iterations"] >= 2       # kept the best iterate
+            assert "error" in r.info
+
+    def test_server_with_elastic_factory_straggler_recovers(self):
+        """End-to-end serving recovery: a served group hit by a mid-solve
+        straggler re-meshes and still answers correctly; the scheduler
+        re-prices the group on its new shard shape."""
+        A, b, ref = _lstsq_setup(seed=34)
+        mat, mesh = _sharded(A)
+        fm = FaultyMesh(mesh)
+
+        def factory():
+            return ElasticConfig(
+                monitor=ShardMonitor(1, StragglerConfig(warmup_steps=2,
+                                                        threshold=2.0,
+                                                        trip_limit=2)),
+                remesh_to=fm.drop)
+
+        srv = SolverServer(slots=2, elastic_factory=factory)
+        req = api.SolveRequest(A=mat, b=b, loss="quad", tol=1e-7,
+                               max_iters=400)
+        rid = srv.submit(req)
+        srv.step()                                 # group opened
+        runner = next(iter(srv._runners.values()))
+        # Inject the straggler into the live linop mid-solve.
+        runner._eg.linop = FaultyLinop(
+            runner._eg.linop, FaultPlan(shard_delays={0: 0.2},
+                                        delay_from=8),
+            sleep=_nosleep)
+        srv.run()
+        r = srv.result(rid)
+        assert r.info["converged"]
+        assert srv.stats["remeshes"] >= 1
+        assert runner._priced_remeshes == runner._eg.remeshes >= 1
+        assert float(np.max(np.abs(np.asarray(r.x) - ref))) < 1e-3
