@@ -24,11 +24,11 @@ always override, and `tune="off"` restores the legacy constants.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.launch import telemetry
 
 SIZES = [(256, 256, 256), (1024, 1024, 1024), (2048, 2048, 2048),
          (4096, 4096, 512), (10000, 1000, 1000)]
@@ -48,12 +48,7 @@ def run() -> list[tuple[str, float, str]]:
             a = jnp.asarray(rng.normal(size=(m, k)), dtype)
             b = jnp.asarray(rng.normal(size=(k, n)), dtype)
             f = jax.jit(lambda x, y: x @ y)
-            f(a, b).block_until_ready()
-            t0 = time.perf_counter()
-            reps = 3
-            for _ in range(reps):
-                f(a, b).block_until_ready()
-            us = (time.perf_counter() - t0) / reps * 1e6
+            us = telemetry.timeit(lambda: f(a, b), reps=3, warmup=1).mean_us
             gflops = 2.0 * m * n * k / (us / 1e6) / 1e9
             rows.append((
                 f"fig2_gemm_{dname}_{m}x{k}x{n}", us,

@@ -26,6 +26,7 @@ import numpy as np
 from repro.core.optim import (make_problem, minimize, composite_value,
                               METHODS)
 from repro.core.tfocs import CountingLinop
+from repro.launch import telemetry
 
 # Trace-time A-pass call sites per method (see CountingLinop: while-loop
 # bodies trace once, so counts are structural).  gra traces its attempt
@@ -73,11 +74,7 @@ def _timed(p, method, fused, iters, reps=3):
             lambda x0: tfocs(p.smooth, p.linop, p.prox, x0, opts)[0])
     x0 = jnp.zeros(n, jnp.float32)
     x = jax.block_until_ready(fn(x0))              # compile + warm-up
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        x = fn(x0)
-    jax.block_until_ready(x)
-    dt = (time.perf_counter() - t0) / reps
+    dt = telemetry.timeit(lambda: fn(x0), reps=reps, warmup=0).mean_s
     return x, {"wall_s": round(dt, 4), "iters_run": iters,
                "per_iter_ms": round(dt / iters * 1e3, 4),
                "iters_per_s": round(iters / dt, 2)}

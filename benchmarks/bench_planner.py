@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +32,7 @@ import numpy as np
 
 from repro.kernels import autotune as at
 from repro.kernels import ops
-from repro.launch import machine, planner
+from repro.launch import machine, planner, telemetry
 
 # The canonical decision table: (op, dims, context, expected choice on the
 # reference machine).  tests/test_perf_smoke.py asserts these stay stable;
@@ -113,13 +112,7 @@ def measure_records(reps: int = 5) -> list[dict]:
     records = []
     for kernel, dims in CALIB_SHAPES:
         run = _runner(kernel, dims)
-        run()
-        times = []
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            run()
-            times.append(time.perf_counter() - t0)
-        measured = sorted(times)[len(times) // 2]
+        measured = telemetry.timeit(run, reps=reps, warmup=1).median_s
         blocks = at.get_config(kernel, dims, jnp.float32)
         records.append(planner.calibration_record(kernel, dims, blocks,
                                                   jnp.float32, measured))

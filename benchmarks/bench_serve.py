@@ -190,6 +190,72 @@ def recovery_overhead(m: int = 256, n: int = 32, k: int = 4,
     return out
 
 
+def traced_demo(out_dir: str = "bench-artifacts",
+                m: int = 256, n: int = 32, k: int = 4,
+                delay_s: float = 0.02) -> dict:
+    """End-to-end traced episode for the CI trace artifact: a batched
+    served solve plus an elastic fault episode (straggler → trip →
+    checkpoint → re-mesh) recorded under one telemetry Recorder, exported
+    as JSONL events and a Chrome/Perfetto trace.  Returns the summary so
+    the caller (and CI log) can see the span-tree phase coverage."""
+    import pathlib
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.distmat import RowMatrix
+    from repro.core.distmat.types import make_mesh
+    from repro.core.optim.elastic import (ElasticConfig, ElasticGroup,
+                                          SolveCheckpoint)
+    from repro.core.tfocs.linop import LinopMatrix
+    from repro.launch import telemetry
+    from repro.launch.serve import SolverServer
+    from repro.train.faults import FaultPlan, FaultyLinop, FaultyMesh
+    from repro.train.straggler import ShardMonitor, StragglerConfig
+
+    rec = telemetry.Recorder()
+    A, bs = _trace(m, n, k, seed=3)
+    with telemetry.recording(rec):
+        # -- served group solve: admit/queue-wait/latency/retire spans ---
+        server = SolverServer(slots=k)
+        _serve(server, A, bs, max_iters=60)
+
+        # -- elastic fault episode: iterate/checkpoint/re-mesh spans -----
+        mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+        fm = FaultyMesh(mesh)
+        lin = FaultyLinop(LinopMatrix(RowMatrix.create(jnp.asarray(A),
+                                                       mesh)),
+                          FaultPlan())
+        with tempfile.TemporaryDirectory() as ckdir:
+            cfg = ElasticConfig(
+                monitor=ShardMonitor(lin.row_shards(),
+                                     StragglerConfig(warmup_steps=2,
+                                                     threshold=2.0,
+                                                     trip_limit=2)),
+                remesh_to=fm.drop,
+                checkpoint=SolveCheckpoint(ckdir, every=5,
+                                           async_save=False))
+            grp = ElasticGroup(lin, "quad", slots=k, elastic=cfg)
+            for b in bs:
+                grp.admit_slot(b, tol=1e-6)
+            lin.delays[0] = delay_s
+            lin.plan.delay_from = 4
+            it_cap = 120
+            while grp.busy() and grp.iteration < it_cap:
+                grp.step_iteration()
+                if grp.remeshes >= 1 and grp.iteration >= 20:
+                    break
+
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    rec.export_jsonl(out / "telemetry_events.jsonl")
+    rec.export_chrome_trace(out / "trace.perfetto.json")
+    summary = rec.summary()
+    summary["artifacts"] = [str(out / "telemetry_events.jsonl"),
+                            str(out / "trace.perfetto.json")]
+    return summary
+
+
 def run(full: bool = False) -> list[tuple[str, float, str]]:
     configs = [(2000, 256, 8), (2000, 256, 16)] if full \
         else [(512, 64, 8)]
@@ -244,3 +310,20 @@ def run(full: bool = False) -> list[tuple[str, float, str]]:
         + f";remeshes={sum(r['remeshes'] for r in s.values())}"
         + (f";recovery_p100_ms={max(recov) * 1e3:.1f}" if recov else "")))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--traced-demo", action="store_true",
+                    help="record a traced served solve + fault episode and "
+                         "export JSONL + Perfetto trace artifacts")
+    ap.add_argument("--out-dir", default="bench-artifacts")
+    args = ap.parse_args()
+    if args.traced_demo:
+        summary = traced_demo(out_dir=args.out_dir)
+        print("TRACE " + json.dumps(summary, sort_keys=True))
+    else:
+        for name, us, derived in run():
+            print(f"{name},{us:.1f},{derived}")

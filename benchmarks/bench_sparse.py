@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -19,17 +18,11 @@ import numpy as np
 
 from repro.core.distmat import RowMatrix, SparseMatrixCSC, SparseRowMatrix
 from repro.kernels.bsr import BlockELL
-from repro.launch import planner
+from repro.launch import planner, telemetry
 
 
 def _time(f, *args, reps=5):
-    f(*args)
-    jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+    return telemetry.timeit(lambda: f(*args), reps=reps, warmup=2).mean_us
 
 
 def run() -> list[tuple[str, float, str]]:

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.distmat import CoordinateMatrix, RowMatrix
 from repro.core.linalg import compute_svd, lanczos_eigsh
+from repro.launch import telemetry
 from repro.launch.machine import V5E
 
 # (rows, cols, nnz) ~ paper Table 1 ÷ 1000
@@ -102,12 +103,14 @@ def run_mode_comparison(m: int = 20_000, n: int = 1024, k: int = 8
     for mode, kw in modes.items():
         # Warm-up run eats the jit trace+compile; the timed run is the
         # steady-state number the modes are actually compared on.
-        jax.block_until_ready(
-            compute_svd(rm, k, mode=mode, compute_u=False, **kw).s)
-        t0 = time.perf_counter()
-        res = compute_svd(rm, k, mode=mode, compute_u=False, **kw)
-        jax.block_until_ready(res.s)
-        dt = time.perf_counter() - t0
+        res = None
+
+        def go():
+            nonlocal res
+            res = compute_svd(rm, k, mode=mode, compute_u=False, **kw)
+            return res.s
+
+        dt = telemetry.timeit(go, reps=1, warmup=1).times[0]
         rel = float(np.max(np.abs(np.asarray(res.s) - s_ref) / s_ref))
         record = {"bench": "svd_mode_comparison", "mode": mode,
                   "m": m, "n": n, "k": k, "wall_s": round(dt, 4),

@@ -206,3 +206,39 @@ print(f"degraded solve: converged={r3.info['converged']} "
 # re-mesh latency) is benchmarked by the serve_recovery BENCH line of
 #
 #     PYTHONPATH=src python -m benchmarks.run --only serve
+
+# --- Observability: spans, metrics, plan-vs-actual -------------------------
+# Every solve can be traced (launch/telemetry.py): telemetry=True runs the
+# request under a fresh Recorder and attaches info["trace"] — per-phase
+# span timings (iteration / fused A-pass / checkpoint / re-mesh), server
+# queue-wait and latency histograms, and one plan-vs-actual record per
+# engine step tying the planner's modeled cost to the measured wall time.
+# Off by default: the disabled path is shared no-op singletons.
+from repro.launch import telemetry
+
+rec = telemetry.Recorder()
+rt = api.solve(api.SolveRequest(A=A, b=jnp.asarray(b), loss="quad",
+                                tol=0.0, max_iters=10,
+                                checkpoint_dir=ckdir, telemetry=rec))
+trace = rt.info["trace"]
+print(f"\ntraced solve: {trace['spans']} spans; per-phase totals:",
+      {k: round(v["total_s"], 4) for k, v in trace["phases"].items()})
+
+# The same recorder scopes a whole serving session: build the server under
+# telemetry.recording() and its scheduler actions (admit / retire / shed)
+# are spanned, queue-wait/latency histograms filled, and degraded
+# retirements counted per reason (server.stats["degraded"]).
+with telemetry.recording(rec):
+    traced_srv = SolverServer(slots=2)
+    tid = traced_srv.submit(api.SolveRequest(A=A, b=jnp.asarray(b1),
+                                             loss="quad", tol=1e-6))
+    traced_srv.run()
+lat = traced_srv.tel.histogram("serve.latency_s")
+print(f"served p50 latency: {lat.percentile(0.5) * 1e3:.1f} ms "
+      f"(stats: {traced_srv.stats})")
+
+# Exports: rec.export_jsonl(path) writes one JSON event per line;
+# rec.export_chrome_trace(path) writes a Chrome/Perfetto trace (open at
+# https://ui.perfetto.dev).  rec.calibration_records() feeds
+# planner.calibrate() so the cost model learns from production traces —
+# the same loop benchmarks/bench_serve.py --traced-demo packages for CI.

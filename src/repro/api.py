@@ -110,6 +110,12 @@ class SolveRequest:
     problem: Problem | None = None
     smooth: Any = None
     prox: Any = None
+    # observability (launch/telemetry.py): True for a fresh recorder, or a
+    # telemetry.Recorder to accumulate across requests.  Off by default
+    # (near-zero overhead).  When set, the solve runs under
+    # telemetry.recording() and Result.info["trace"] carries the span /
+    # plan-vs-actual summary.
+    telemetry: Any = None
     request_id: str = field(default_factory=lambda: _next_id("solve"))
 
     def __post_init__(self):
@@ -154,6 +160,7 @@ class SvdRequest:
     mode: str = "auto"            # auto | gram | lanczos | randomized
     options: dict = field(default_factory=dict)   # extra compute_svd kwargs
     deadline_s: float | None = None
+    telemetry: Any = None         # True | telemetry.Recorder (see SolveRequest)
     request_id: str = field(default_factory=lambda: _next_id("svd"))
 
     def __post_init__(self):
@@ -170,6 +177,7 @@ class SimilarityRequest:
     gamma: float | None = None
     seed: int = 0
     deadline_s: float | None = None
+    telemetry: Any = None         # True | telemetry.Recorder (see SolveRequest)
     request_id: str = field(default_factory=lambda: _next_id("sim"))
 
     def __post_init__(self):
@@ -250,6 +258,24 @@ def solve_prox(req: SolveRequest):
 
 # -- direct call path ---------------------------------------------------------
 
+def _traced(req, kind: str, run) -> Result:
+    """The ``telemetry=`` escape hatch: when the request asks for it, run
+    the job under a scoped recorder (every instrumented component —
+    elastic iterations, checkpoints, stragglers — resolves it via
+    telemetry.current()) and attach the compact summary as
+    ``Result.info["trace"]``.  Off (the default) adds no work at all."""
+    if not req.telemetry:
+        return run()
+    from repro.launch import telemetry as _telemetry
+    rec = req.telemetry if isinstance(req.telemetry, _telemetry.Recorder) \
+        else _telemetry.Recorder()
+    with _telemetry.recording(rec):
+        with rec.span("api." + kind, request_id=req.request_id):
+            res = run()
+    res.info["trace"] = rec.summary()
+    return res
+
+
 def _solve_elastic(req: SolveRequest) -> Result:
     """Host-driven resumable/deadline-aware path (core.optim.elastic):
     taken when a direct-form gra/lbfgs request asks for a checkpoint or a
@@ -271,6 +297,10 @@ def _solve_elastic(req: SolveRequest) -> Result:
 
 def solve(req: SolveRequest, *, fused: bool | str = "auto") -> Result:
     """Run one SolveRequest immediately (no queue, no batching)."""
+    return _traced(req, "solve", lambda: _solve(req, fused=fused))
+
+
+def _solve(req: SolveRequest, *, fused: bool | str = "auto") -> Result:
     if req.problem is not None:
         x, info = _minimize(req.problem, req.method,
                             max_iters=req.max_iters, tol=req.tol,
@@ -311,6 +341,10 @@ def solve(req: SolveRequest, *, fused: bool | str = "auto") -> Result:
 
 
 def svd(req: SvdRequest) -> Result:
+    return _traced(req, "svd", lambda: _svd(req))
+
+
+def _svd(req: SvdRequest) -> Result:
     t0 = time.perf_counter()
     res = _compute_svd(req.A, req.k, compute_u=req.compute_u,
                        mode=req.mode, **req.options)
@@ -325,6 +359,10 @@ def svd(req: SvdRequest) -> Result:
 
 
 def similarities(req: SimilarityRequest) -> Result:
+    return _traced(req, "similarities", lambda: _similarities(req))
+
+
+def _similarities(req: SimilarityRequest) -> Result:
     sim, info = req.A.column_similarities(
         req.threshold, gamma=req.gamma, seed=req.seed, return_info=True)
     info = dict(info or {})

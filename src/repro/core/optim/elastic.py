@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.optim import batched as _batched
+from repro.launch import telemetry as _tel
 from repro.train import checkpoint as _ckpt
 from repro.train.straggler import ShardMonitor
 
@@ -214,11 +215,21 @@ class ElasticGroup:
                  iterations.
 
     With ``elastic=None`` every branch above is skipped and the op
-    sequence is exactly the legacy serving loop's."""
+    sequence is exactly the legacy serving loop's.
+
+    Observability: every iteration phase is wrapped in a telemetry span
+    (``solver.iteration`` > seed_pass / fused_pass / validate /
+    checkpoint / remesh — see launch/telemetry.py), and when a recorder
+    is live each engine step emits a plan-vs-actual record pricing the
+    fused A-pass against the planner's model.  `telemetry=None` (the
+    default) resolves the module-level recorder at call time — a no-op
+    unless ``telemetry.enable()`` / ``api.*Request(telemetry=...)`` is in
+    effect, so the untraced path costs nothing."""
 
     def __init__(self, linop, kind: str, param: float = 1.0, *,
                  reg: str = "none", method: str = "gra", slots: int = 8,
-                 mem: int = 10, elastic: ElasticConfig | None = None):
+                 mem: int = 10, elastic: ElasticConfig | None = None,
+                 telemetry: _tel.Recorder | None = None):
         if method not in GROUP_METHODS:
             raise ValueError(f"method must be one of {GROUP_METHODS}")
         if method == "lbfgs" and reg != "none":
@@ -246,10 +257,28 @@ class ElasticGroup:
         self.retries = 0
         self.remeshes = 0
         self.checkpoint_saves = 0
+        self._telemetry = telemetry
+        self._fused_plan_cache = None   # invalidated on remesh
         self.monitor = elastic.monitor if elastic is not None else None
         if self.monitor is not None \
                 and self.monitor.nshards != linop.row_shards():
             self.monitor.reset(linop.row_shards())
+
+    @property
+    def tel(self) -> _tel.Recorder:
+        """The group's recorder: the one passed in, else the module-level
+        ``telemetry.current()`` (a no-op unless enabled)."""
+        return self._telemetry if self._telemetry is not None \
+            else _tel.current()
+
+    def _fused_plan(self):
+        """Lazily-priced ExecutionPlan for this group's fused A-pass (the
+        per-step unit of plan-vs-actual); re-priced after a remesh."""
+        if self._fused_plan_cache is None:
+            from repro.launch import planner
+            self._fused_plan_cache = planner.plan(
+                "fusedgrad", {"m": self.m_pad, "n": self.n})
+        return self._fused_plan_cache
 
     def _build_engines(self) -> None:
         if self.method == "gra":
@@ -308,10 +337,14 @@ class ElasticGroup:
     def _seed_if_dirty(self) -> int:
         if not self._dirty:
             return 0
-        if self.method == "gra":
-            self.state, p = self._seed(self.state, self.T, self.W, self.lam)
-        else:
-            self.state, p = self._seed(self.state, self.T, self.W)
+        with self.tel.span("solver.seed_pass",
+                           active=int(self.active.sum())) as sp:
+            if self.method == "gra":
+                self.state, p = self._seed(self.state, self.T, self.W,
+                                           self.lam)
+            else:
+                self.state, p = self._seed(self.state, self.T, self.W)
+            sp.sync_on(self.state.F)
         self._dirty = False
         self.a_passes += int(p)
         return int(p)
@@ -329,58 +362,76 @@ class ElasticGroup:
         DeviceLostError when a device dies with no remesh_to policy."""
         if not self.busy():
             return 0
+        tel = self.tel
         passes = 0
         failures = 0
-        while True:
-            passes += self._seed_if_dirty()
-            act = jnp.asarray(self.active)
-            t0 = time.monotonic()
-            new_state, tries = self._engine_step(act)
-            dt = time.monotonic() - t0
-            passes += int(tries)
-            self.a_passes += int(tries)
-            if self.elastic is None:
+        with tel.span("solver.iteration", iteration=self.iteration,
+                      active=int(self.active.sum())):
+            while True:
+                passes += self._seed_if_dirty()
+                act = jnp.asarray(self.active)
+                t0 = time.monotonic()
+                with tel.span("solver.fused_pass") as psp:
+                    new_state, tries = self._engine_step(act)
+                    dt = time.monotonic() - t0
+                    psp.sync_on(new_state.F)
+                    psp.annotate(tries=int(tries))
+                passes += int(tries)
+                self.a_passes += int(tries)
+                if tel.enabled:
+                    tel.record_plan_actual(
+                        self._fused_plan(), psp.dur_s / max(int(tries), 1),
+                        iteration=self.iteration, tries=int(tries))
+                if self.elastic is None:
+                    self.state = new_state
+                    return passes
+                telemetry = None
+                try:
+                    with tel.span("solver.validate"):
+                        hook = _find_hook(self.linop)
+                        if hook is not None:
+                            new_state, telemetry = hook.fault_hook(
+                                self.iteration, new_state, dt)
+                        if not bool(jnp.all(jnp.isfinite(
+                                jnp.where(act, new_state.F, 0.0)))):
+                            raise TransientShardError(
+                                "non-finite smooth value after step")
+                except DeviceLostError as e:
+                    if self.elastic.remesh_to is None:
+                        raise
+                    # Pre-step state is intact (rollback is free: new_state
+                    # was never committed) — re-mesh, re-run the iteration.
+                    self.remesh(self.elastic.remesh_to(e.shard),
+                                dropped=e.shard)
+                    failures = 0
+                    continue
+                except TransientShardError:
+                    failures += 1
+                    self.retries += 1
+                    tel.counter("solver.retries").inc()
+                    if failures > self.elastic.max_retries:
+                        raise
+                    self.elastic.sleep(self.elastic.backoff_s
+                                       * (2 ** (failures - 1)))
+                    continue                   # rollback + bounded retry
                 self.state = new_state
+                self.iteration += 1
+                if telemetry is not None and self.monitor is not None:
+                    verdict = self.monitor.observe(telemetry["shard_times"])
+                    if verdict["tripped"] \
+                            and self.elastic.remesh_to is not None:
+                        self.remesh(self.elastic.remesh_to(verdict["shard"]),
+                                    dropped=verdict["shard"])
+                ck = self.elastic.checkpoint
+                if ck is not None and ck.every > 0 \
+                        and self.iteration % ck.every == 0:
+                    with tel.span("solver.checkpoint",
+                                  iteration=self.iteration):
+                        if ck.maybe_save(self.iteration, self.state,
+                                         self.active,
+                                         extra={"a_passes": self.a_passes}):
+                            self.checkpoint_saves += 1
                 return passes
-            telemetry = None
-            try:
-                hook = _find_hook(self.linop)
-                if hook is not None:
-                    new_state, telemetry = hook.fault_hook(
-                        self.iteration, new_state, dt)
-                if not bool(jnp.all(jnp.isfinite(
-                        jnp.where(act, new_state.F, 0.0)))):
-                    raise TransientShardError(
-                        "non-finite smooth value after step")
-            except DeviceLostError as e:
-                if self.elastic.remesh_to is None:
-                    raise
-                # Pre-step state is intact (rollback is free: new_state was
-                # never committed) — re-mesh and re-run the iteration.
-                self.remesh(self.elastic.remesh_to(e.shard), dropped=e.shard)
-                failures = 0
-                continue
-            except TransientShardError:
-                failures += 1
-                self.retries += 1
-                if failures > self.elastic.max_retries:
-                    raise
-                self.elastic.sleep(self.elastic.backoff_s
-                                   * (2 ** (failures - 1)))
-                continue                       # rollback + bounded retry
-            self.state = new_state
-            self.iteration += 1
-            if telemetry is not None and self.monitor is not None:
-                verdict = self.monitor.observe(telemetry["shard_times"])
-                if verdict["tripped"] and self.elastic.remesh_to is not None:
-                    self.remesh(self.elastic.remesh_to(verdict["shard"]),
-                                dropped=verdict["shard"])
-            ck = self.elastic.checkpoint
-            if ck is not None and ck.maybe_save(
-                    self.iteration, self.state, self.active,
-                    extra={"a_passes": self.a_passes}):
-                self.checkpoint_saves += 1
-            return passes
 
     # -- mid-solve re-mesh ----------------------------------------------------
 
@@ -391,6 +442,13 @@ class ElasticGroup:
         the next step re-seeds F/G in one group pass — `k` is untouched,
         so no completed iteration is re-run."""
         from repro.train import elastic as _train_elastic
+        tel = self.tel
+        with tel.span("solver.remesh", dropped=dropped,
+                      iteration=self.iteration):
+            self._remesh_inner(_train_elastic, new_mesh, dropped, tel)
+        tel.counter("solver.remeshes").inc()
+
+    def _remesh_inner(self, _train_elastic, new_mesh, dropped, tel) -> None:
         self.linop = _train_elastic.remesh_linop(self.linop, new_mesh)
         obj = self.linop
         while obj is not None:                 # tell injection wrappers
@@ -398,7 +456,9 @@ class ElasticGroup:
                 obj.on_remesh(dropped)
             obj = getattr(obj, "base", None)
         self.m_pad = self.linop.out_shape[0]
-        self._build_engines()
+        self._fused_plan_cache = None          # re-price plan-vs-actual
+        with tel.span("solver.rejit"):
+            self._build_engines()
         # Solver state is logically driver-side, but its arrays are still
         # committed to the OLD device set (they were produced by jits over
         # the old mesh).  Re-home them as uncommitted host-backed arrays so

@@ -377,6 +377,24 @@ def calibration_record(kernel: str, dims: Mapping[str, int],
             "mxu_util": t.mxu_util, "measured_s": float(measured_s)}
 
 
+def actual_record(plan: ExecutionPlan, measured_s: float) -> dict:
+    """One plan-vs-actual record: an ExecutionPlan's modeled cost next to
+    a measured wall time.  For kernel ops with block configs the record is
+    merged with ``calibration_record()``'s raw roofline terms, so the same
+    record that shows drift in ``Result.info["trace"]`` feeds
+    ``calibrate()`` unchanged (launch/telemetry.py collects them)."""
+    rec = {"op": plan.op, "choice": plan.choice, "dims": dict(plan.dims),
+           "dtype": plan.dtype, "backend": plan.backend,
+           "modeled_s": float(plan.cost_s),
+           "measured_s": float(measured_s),
+           "ratio": (float(measured_s) / plan.cost_s
+                     if plan.cost_s > 0 else None)}
+    if plan.op in KERNEL_OPS and plan.blocks:
+        rec.update(calibration_record(plan.op, plan.dims, plan.blocks,
+                                      plan.dtype, measured_s))
+    return rec
+
+
 def calibrate(records, backend: str | None = None, *,
               write: bool = True) -> tuple[MachineModel, float, float]:
     """Fit the backend's machine model to measured records; returns

@@ -51,6 +51,17 @@ resumable solves" section of examples/quickstart.py):
 Every answer is a ``repro.api.Result`` whose info carries the standardized
 keys; for served solves ``a_passes`` is the number of GROUP passes consumed
 while the request was resident — the amortized cost the batching buys down.
+
+Observability (launch/telemetry.py): the server's metrics are ALWAYS live —
+typed counters behind the ``stats`` view (including the per-reason
+``stats["degraded"]`` breakdown that separates shed/overloaded from
+fault-retired from deadline-expired requests), plus ``serve.queue_wait_s``
+and ``serve.latency_s`` histograms with real p50/p99.  Scheduler-action
+spans (admit / oneshot / retire / shed / recover) and the solver's
+per-iteration spans are recorded when the server is constructed while
+``telemetry.enable()`` is in effect (or given an explicit ``telemetry=``
+recorder); export with ``server.tel.export_chrome_trace(path)``.  See the
+"observability" section of examples/quickstart.py.
 """
 from __future__ import annotations
 
@@ -65,11 +76,16 @@ import numpy as np
 from repro import api
 from repro.core.optim import elastic as _elastic
 from repro.launch import planner as _planner
+from repro.launch import telemetry as _tel
 
 Array = jax.Array
 
 # Engines the group runner batches; everything else is served one-shot.
 GROUP_METHODS = _elastic.GROUP_METHODS
+
+# The server's aggregate counters (rendered by SolverServer.stats).
+_STAT_KEYS = ("steps", "a_passes", "admitted", "oneshot", "deferred_steps",
+              "shed", "expired", "remeshes")
 
 
 def group_key(req: api.SolveRequest):
@@ -104,13 +120,16 @@ class GroupRunner:
     def __init__(self, linop, kind: str, param: float = 1.0, *,
                  reg: str = "none", method: str = "gra", slots: int = 8,
                  mem: int = 10,
-                 elastic: _elastic.ElasticConfig | None = None):
+                 elastic: _elastic.ElasticConfig | None = None,
+                 telemetry: _tel.Recorder | None = None):
         # All solver state lives in the elastic executor; the runner adds
         # the serving concerns on top (request metadata, deadlines,
         # retirement into api.Results, planner price cache).
+        self.tel = telemetry if telemetry is not None else _tel.NULL
         self._eg = _elastic.ElasticGroup(linop, kind, param, reg=reg,
                                          method=method, slots=slots,
-                                         mem=mem, elastic=elastic)
+                                         mem=mem, elastic=elastic,
+                                         telemetry=telemetry)
         self.kind, self.param = kind, param
         self.reg, self.method, self.slots = reg, method, slots
         self.meta: list[dict | None] = [None] * slots
@@ -175,10 +194,11 @@ class GroupRunner:
             # Recovery exhausted (or no re-mesh policy): fail the resident
             # requests gracefully with their best iterates rather than
             # poisoning the serving loop.
-            for i in range(self.slots):
-                if self.active[i]:
-                    out.append(self._retire(i, False, degraded="fault",
-                                            error=str(e)))
+            with self.tel.span("serve.recover", error=str(e)):
+                for i in range(self.slots):
+                    if self.active[i]:
+                        out.append(self._retire(i, False, degraded="fault",
+                                                error=str(e)))
             return out
         done = np.asarray(self.state.done)
         k = np.asarray(self.state.k)
@@ -212,21 +232,26 @@ class GroupRunner:
         req = meta["req"]
         if degraded is None and not converged:
             degraded = "max_iterations"
-        info = {"iterations": int(self.state.k[i]),
-                # Group passes consumed while resident: the amortized cost
-                # (each pass also served every co-resident request).
-                "a_passes": self.a_passes - meta["admit_passes"],
-                "converged": converged, "plan": "fused-group",
-                "objective": float(self.state.obj[i]),
-                "slot": i, "degraded": degraded}
-        if error is not None:
-            info["error"] = error
-        # Zero the weight row so the retired lane contributes nothing to
-        # subsequent group passes; state rows are reset on the next admit.
-        self._eg.clear_slot(i)
-        self.meta[i] = None
-        return api.Result(x=jnp.asarray(self.state.X[i]), info=info,
-                          request_id=req.request_id)
+        with self.tel.span("serve.retire", slot=i, converged=converged,
+                           degraded=degraded,
+                           request_id=req.request_id):
+            info = {"iterations": int(self.state.k[i]),
+                    # Group passes consumed while resident: the amortized
+                    # cost (each pass also served every co-resident
+                    # request).
+                    "a_passes": self.a_passes - meta["admit_passes"],
+                    "converged": converged, "plan": "fused-group",
+                    "objective": float(self.state.obj[i]),
+                    "slot": i, "degraded": degraded}
+            if error is not None:
+                info["error"] = error
+            # Zero the weight row so the retired lane contributes nothing
+            # to subsequent group passes; state rows are reset on the next
+            # admit.
+            self._eg.clear_slot(i)
+            self.meta[i] = None
+            return api.Result(x=jnp.asarray(self.state.X[i]), info=info,
+                              request_id=req.request_id)
 
 
 class SolverServer:
@@ -241,7 +266,8 @@ class SolverServer:
     def __init__(self, *, slots: int = 8, budget_s: float | None = None,
                  backend: str | None = None,
                  max_pending: int | None = None,
-                 elastic_factory=None):
+                 elastic_factory=None,
+                 telemetry: _tel.Recorder | None = None):
         self.slots = slots
         self.budget_s = budget_s
         self.backend = backend
@@ -251,14 +277,36 @@ class SolverServer:
         # () -> core.optim.elastic.ElasticConfig, called once per group so
         # each runner gets its own monitor/checkpoint instances.
         self.elastic_factory = elastic_factory
+        # Metrics are always on (a private spanless recorder renders the
+        # `stats` view); spans ride along when the server is built under
+        # telemetry.enable() or given an explicit recorder.
+        if telemetry is not None:
+            self.tel = telemetry
+        else:
+            cur = _tel.current()
+            self.tel = cur if cur.enabled else _tel.Recorder(spans=False)
+        self._c = {k: self.tel.counter("serve." + k) for k in _STAT_KEYS}
+        self._h_wait = self.tel.histogram("serve.queue_wait_s")
+        self._h_latency = self.tel.histogram("serve.latency_s")
         self._queue: list[Any] = []
         self._runners: dict[Any, GroupRunner] = {}
         self._results: dict[str, api.Result] = {}
         self._submit_t: dict[str, float] = {}
         self._events: list[tuple[str, float, float]] = []
-        self.stats = {"steps": 0, "a_passes": 0, "admitted": 0,
-                      "oneshot": 0, "deferred_steps": 0, "shed": 0,
-                      "expired": 0, "remeshes": 0}
+
+    @property
+    def stats(self) -> dict:
+        """Aggregate server statistics, rendered from the typed telemetry
+        counters (same keys the old ad-hoc dict carried), plus the
+        per-reason ``degraded`` breakdown that distinguishes
+        shed/overloaded from fault-retired from deadline-expired requests
+        — previously all invisible in aggregate."""
+        s = {k: c.value for k, c in self._c.items()}
+        s["degraded"] = {
+            lbl.split("=", 1)[1]: v
+            for lbl, v in self.tel.counters("serve.degraded").items()
+            if "=" in lbl}
+        return s
 
     # -- queue ----------------------------------------------------------------
 
@@ -269,9 +317,11 @@ class SolverServer:
             raise ValueError("method='lbfgs' needs reg='none'")
         if self.max_pending is not None \
                 and len(self._queue) >= self.max_pending:
-            self._submit_t[req.request_id] = time.perf_counter()
-            self._finish(api.Overloaded(request_id=req.request_id))
-            self.stats["shed"] += 1
+            with self.tel.span("serve.shed", request_id=req.request_id,
+                               pending=len(self._queue)):
+                self._submit_t[req.request_id] = time.perf_counter()
+                self._finish(api.Overloaded(request_id=req.request_id))
+                self._c["shed"].inc()
             return req.request_id
         self._queue.append(req)
         self._submit_t[req.request_id] = time.perf_counter()
@@ -340,24 +390,30 @@ class SolverServer:
                 if runner is not None and runner.busy():
                     if runner.free_slots() == 0:
                         break                      # group full → wait
-                    runner.admit(req)              # marginal cost: zero
+                    with self.tel.span("serve.admit", mode="join",
+                                       request_id=req.request_id):
+                        runner.admit(req)          # marginal cost: zero
                 else:
                     cost = self._price(req)
                     if self.budget_s is not None and spent > 0 \
                             and spent + cost > self.budget_s:
                         break                      # no budget → wait
-                    if runner is None:
-                        runner = GroupRunner(
-                            api.solve_linop(req), req.loss, req.param,
-                            reg=req.reg, method=req.method,
-                            slots=self.slots,
-                            elastic=(self.elastic_factory()
-                                     if self.elastic_factory else None))
-                        runner._price_cache = cost
-                        self._runners[key] = runner
-                    runner.admit(req)
+                    with self.tel.span("serve.admit", mode="open",
+                                       request_id=req.request_id):
+                        if runner is None:
+                            runner = GroupRunner(
+                                api.solve_linop(req), req.loss, req.param,
+                                reg=req.reg, method=req.method,
+                                slots=self.slots,
+                                elastic=(self.elastic_factory()
+                                         if self.elastic_factory else None),
+                                telemetry=self.tel)
+                            runner._price_cache = cost
+                            self._runners[key] = runner
+                        runner.admit(req)
                     spent += cost
-                self.stats["admitted"] += 1
+                self._c["admitted"].inc()
+                self._observe_wait(req)
                 self._queue.pop(0)
             else:
                 cost = self._price(req)
@@ -365,12 +421,21 @@ class SolverServer:
                         and spent + cost > self.budget_s:
                     break
                 self._queue.pop(0)
-                res = self._run_oneshot(req)
+                self._observe_wait(req)
+                with self.tel.span("serve.oneshot",
+                                   request_id=req.request_id):
+                    res = self._run_oneshot(req)
                 self._finish(res)
                 done.append(res)
                 spent += cost
-                self.stats["oneshot"] += 1
+                self._c["oneshot"].inc()
         return done
+
+    def _observe_wait(self, req) -> None:
+        """Queue-wait histogram: submit→dequeue, observed at admission."""
+        t0 = self._submit_t.get(req.request_id)
+        if t0 is not None:
+            self._h_wait.observe(time.perf_counter() - t0)
 
     def _expire_queued(self, req) -> api.Result | None:
         """Dequeue-time deadline check for one-shot jobs: a request whose
@@ -383,7 +448,7 @@ class SolverServer:
         t0 = self._submit_t.get(req.request_id)
         if t0 is None or time.perf_counter() - t0 <= deadline:
             return None
-        self.stats["expired"] += 1
+        self._c["expired"].inc()
         return api.Result(
             x=None, info={"iterations": 0, "a_passes": 0,
                           "converged": False, "plan": "expired",
@@ -399,31 +464,38 @@ class SolverServer:
 
     def _finish(self, res: api.Result) -> None:
         self._results[res.request_id] = res
-        self._events.append((res.request_id,
-                             self._submit_t.get(res.request_id,
-                                                time.perf_counter()),
-                             time.perf_counter()))
+        t0 = self._submit_t.get(res.request_id, time.perf_counter())
+        t1 = time.perf_counter()
+        self._events.append((res.request_id, t0, t1))
+        self._h_latency.observe(t1 - t0)
+        reason = res.info.get("degraded") \
+            if isinstance(res.info, dict) else None
+        if reason:
+            # Per-reason retirement accounting: "overloaded" (shed),
+            # "fault", "deadline" and "max_iterations" each count apart,
+            # so aggregate stats can tell load-shedding from failures.
+            self.tel.counter("serve.degraded", reason=reason).inc()
 
     # -- the serving loop -----------------------------------------------------
 
     def step(self) -> list[api.Result]:
         """One scheduler tick: admit, then one solver iteration per active
         group; returns the requests that completed this tick."""
-        self.stats["steps"] += 1
+        self._c["steps"].inc()
         out = self._admit()
         if self._queue:
-            self.stats["deferred_steps"] += 1
+            self._c["deferred_steps"].inc()
         for runner in self._runners.values():
             if runner.busy():
                 before = runner.a_passes
                 out.extend(runner.step())
-                self.stats["a_passes"] += runner.a_passes - before
+                self._c["a_passes"].inc(runner.a_passes - before)
                 if runner.remeshes != runner._priced_remeshes:
                     # A mid-solve re-mesh changed the shard shape (and the
                     # padded row count with it): re-price the group so the
                     # admission budget sees the post-failure cost.
-                    self.stats["remeshes"] += (runner.remeshes
-                                               - runner._priced_remeshes)
+                    self._c["remeshes"].inc(runner.remeshes
+                                            - runner._priced_remeshes)
                     runner._priced_remeshes = runner.remeshes
                     runner._price_cache = _planner.plan(
                         "fusedgrad", {"m": int(runner._eg.m_pad),
@@ -439,7 +511,7 @@ class SolverServer:
 
     def run(self, max_steps: int = 100_000) -> list[api.Result]:
         out = []
-        while self.busy() and self.stats["steps"] < max_steps:
+        while self.busy() and self._c["steps"].value < max_steps:
             out.extend(self.step())
         return out
 

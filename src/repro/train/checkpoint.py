@@ -27,7 +27,10 @@ import os
 import pathlib
 import shutil
 import threading
+import time
 from typing import Any
+
+from repro.launch import telemetry as _tel
 
 
 def _fsync_file(path: pathlib.Path) -> None:
@@ -76,6 +79,15 @@ def _spec_from_str(s: str) -> P:
 def save(ckpt_dir: str | os.PathLike, step: int, tree,
          specs=None, *, extra: dict | None = None) -> pathlib.Path:
     """Synchronous sharded save; returns the committed directory."""
+    tel = _tel.current()
+    t0 = time.perf_counter()
+    with tel.span("checkpoint.write", step=step):
+        final = _save(ckpt_dir, step, tree, specs, extra=extra)
+    tel.histogram("checkpoint.write_s").observe(time.perf_counter() - t0)
+    return final
+
+
+def _save(ckpt_dir, step, tree, specs=None, *, extra=None) -> pathlib.Path:
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     tmp = ckpt_dir / f".tmp_step_{step:08d}"
@@ -137,6 +149,13 @@ class AsyncCheckpointer:
         # callers learn about a lost checkpoint at the next save, not at
         # process exit.
         self.wait()
+        tel = _tel.current()
+        tel.counter("checkpoint.async_saves").inc()
+        # Backlog gauge: 1 while a write is in flight on the worker, 0
+        # once it commits — a stuck-at-1 gauge is the "checkpointing can't
+        # keep up / disk stalled" signal.
+        backlog = tel.gauge("checkpoint.backlog")
+        backlog.set(1)
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
 
@@ -146,6 +165,8 @@ class AsyncCheckpointer:
             except BaseException as e:  # noqa: BLE001
                 with self._lock:
                     self.last_error = e
+            finally:
+                backlog.set(0)
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()

@@ -31,6 +31,8 @@ import statistics
 import time
 from typing import Callable
 
+from repro.launch import telemetry as _tel
+
 
 @dataclasses.dataclass
 class StragglerConfig:
@@ -148,6 +150,15 @@ class ShardMonitor:
                                             for v in verdicts),
                    "flagged": [i for i, v in enumerate(verdicts)
                                if v["flagged"] or v["tripped"]]}
+        tel = _tel.current()
+        if tel.enabled:
+            # The per-shard EMAs double as live gauges: the same numbers
+            # the trip decision runs on, readable from any snapshot.
+            for i, m in enumerate(self.monitors):
+                if m.ema is not None:
+                    tel.gauge("straggler.ema_s", shard=i).set(m.ema)
+            if verdict["tripped"]:
+                tel.counter("straggler.trips").inc()
         if verdict["tripped"] and self.on_straggler is not None:
             self.on_straggler(dict(verdict))
         return verdict

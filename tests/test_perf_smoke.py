@@ -56,3 +56,50 @@ def test_planner_decisions_stable_on_cpu():
         assert rec["stable"], (
             f"planner decision drifted for {rec['op']} {rec['dims']}: "
             f"got {rec['choice']}, expected {rec['expected']}")
+
+
+@pytest.mark.perf_smoke
+def test_telemetry_off_is_free_and_result_identical():
+    """Telemetry canary: with no recorder installed every span/metric call
+    resolves to shared null singletons (no per-call allocation), and a
+    traced solve returns bit-identical iterates to an untraced one — the
+    instrumentation must observe, never perturb."""
+    import numpy as np
+    from repro import api
+    from repro.launch import telemetry
+
+    null = telemetry.current()
+    assert null is telemetry.NULL and not null.enabled
+    # no-op paths hand back the SAME objects every call
+    assert null.span("solver.iteration", k=1) is null.span("serve.admit")
+    assert null.counter("a") is null.counter("b", reason="x")
+
+    rng = np.random.default_rng(3)
+    A = rng.normal(size=(120, 12)).astype(np.float32)
+    b = (A @ rng.normal(size=12)).astype(np.float32)
+    base = api.solve(api.SolveRequest(A=A, b=b, loss="quad",
+                                      tol=1e-7, max_iters=200))
+    traced = api.solve(api.SolveRequest(A=A, b=b, loss="quad",
+                                        tol=1e-7, max_iters=200,
+                                        telemetry=True))
+    np.testing.assert_array_equal(np.asarray(base.x),
+                                  np.asarray(traced.x))
+    assert int(base.info["iterations"]) == int(traced.info["iterations"])
+    assert "trace" in traced.info and "trace" not in base.info
+
+
+@pytest.mark.perf_smoke
+def test_null_span_overhead_bounded():
+    """A disabled span costs nanoseconds, not microseconds: 10k no-op
+    spans must finish in well under the time one solver iteration takes.
+    The bound is generous (0.25s) — it catches an accidental allocation
+    or lock on the disabled path, not scheduler noise."""
+    import time
+    from repro.launch import telemetry
+
+    null = telemetry.NULL
+    t0 = time.perf_counter()
+    for i in range(10_000):
+        with null.span("solver.iteration", iteration=i) as sp:
+            sp.annotate(ok=True)
+    assert time.perf_counter() - t0 < 0.25
