@@ -7,7 +7,9 @@ Table 1 = bench_svd, Figure 1 = bench_optim, Figure 2 = bench_gemm,
 §4.2 = bench_sparse; autotune = the kernel block-size sweep, which also
 emits ``BENCH {json}`` lines and refreshes the persistent config cache;
 planner = execution-planner golden decisions + machine-model calibration
-from measured timings, persisted next to the autotune cache).
+from measured timings, persisted next to the autotune cache;
+collectives = modeled-vs-measured psum time by payload size and device
+count plus the link_eff fit demo, BENCH json only — never persisted).
 bench_optim additionally emits ``BENCH {json}`` lines for the fused-vs-
 unfused gradient hot path (wall time, iterations/sec, counted A-passes
 per attempt: 2 unfused → 1 fused); serve = the solver serving frontend
@@ -27,11 +29,13 @@ def main() -> None:
                     help="paper-size problems (slow on one core)")
     ap.add_argument("--only", default=None,
                     help="run a single suite: "
-                         "svd|optim|gemm|sparse|autotune|planner|serve")
+                         "svd|optim|gemm|sparse|autotune|planner|serve|"
+                         "collectives")
     args = ap.parse_args()
 
     from benchmarks import (bench_svd, bench_optim, bench_gemm, bench_sparse,
-                            bench_autotune, bench_planner, bench_serve)
+                            bench_autotune, bench_planner, bench_serve,
+                            bench_collectives)
     suites = {
         "svd": lambda: bench_svd.run(),
         "optim": lambda: bench_optim.run(full=args.full),
@@ -40,6 +44,7 @@ def main() -> None:
         "autotune": lambda: bench_autotune.run(),
         "planner": lambda: bench_planner.run(),
         "serve": lambda: bench_serve.run(full=args.full),
+        "collectives": lambda: bench_collectives.run(),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

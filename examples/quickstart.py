@@ -87,8 +87,11 @@ print(f"LASSO: {int(info['iterations'])} iters, "
 # pass over the distributed matrix (kernels/fusedgrad) instead of the two
 # passes of apply + adjoint.  Proximal gradient (`gra`) and L-BFGS take the
 # fused path automatically whenever the roofline dispatch prices it ahead
-# (on HBM-bound shards that is ~2× less matrix traffic per iteration);
-# accelerated TFOCS variants keep their cached two-pass scheme.  Opt out
+# (on HBM-bound shards that is ~2× less matrix traffic per iteration).
+# Accelerated variants over a QUADRATIC loss get their own one-pass engine
+# (plan="fused_affine"): the gradient is affine in cached u = Aᵀ(w∘A·)
+# vectors, so acc/acc_b/acc_rb also pay a single A-pass per backtracking
+# attempt; non-quadratic acc* keep the cached two-pass scheme.  Opt out
 # with fused=False (solve_* / minimize / TfocsOptions all accept it).
 from repro.core.tfocs import SmoothQuad, LinopMatrix, ProxZero, tfocs
 
@@ -131,6 +134,35 @@ print(p.explain())                       # why gram beats lanczos here
 # "tightened" line), writes machine.json, and re-plans a golden shape to
 # show `calibrated: true`.  `python -m benchmarks.run --only planner`
 # runs the same thing inside the benchmark harness.
+
+# --- Multi-host execution: pricing the collectives ------------------------
+# On one host the psum at the end of gram/fused_grad/rmatvec is free; on a
+# pod it dominates.  Passing the mesh topology to plan() prices the
+# collective end-to-end — ring vs tree reduction chosen by payload and
+# axis sizes, and a chunk count scheduled when splitting the shard into
+# column segments lets segment k's partial psum overlap segment k+1's
+# compute:
+from repro.launch import machine
+
+p = planner.plan("gram", {"m": 1_000_000 // 64, "n": 1024},
+                 machine=machine.V5E, context={"axes": (64,)})
+print(f"\ngram on 64 devices -> {p.choice} "
+      f"(chunks={p.blocks['chunks']})")
+print(p.explain())        # the "comm:" line shows the modeled psum share
+
+# The distmat methods consult the same plan: gram()/fused_grad() default
+# to chunks="auto" (eager single-dispatch whenever the modeled psum is not
+# worth hiding — always on one device) and accept an explicit chunk count.
+# Chunked and eager results are BIT-identical; only the dispatch schedule
+# changes.  telemetry spans around each collective feed plan-vs-actual
+# records, so MachineModel.calibrate() can fit link efficiencies from
+# production traces or from the sweep in:
+#
+#     PYTHONPATH=src python -m benchmarks.run --only collectives
+#
+# (modeled-vs-measured psum time by payload size and device count, plus a
+# link_eff fit demo; CI uploads the BENCH json as a workflow artifact.)
+_ = rm.gram(chunks=4)     # forced overlap: same bits as rm.gram(chunks=1)
 
 # --- Serving: many users, one A-pass --------------------------------------
 # launch/serve.py turns the solver into a frontend.  Requests that share a

@@ -35,6 +35,24 @@ def _shard_index(axes: Sequence[str]) -> Array:
     return idx
 
 
+def chunk_bounds(n: int, chunks: int) -> tuple[tuple[int, int], ...]:
+    """Static column-segment bounds for the overlapped collective bodies:
+    `chunks` contiguous [s0, s1) segments covering [0, n)."""
+    c = max(min(int(chunks), n), 1)
+    step = -(-n // c)
+    return tuple((s0, min(s0 + step, n)) for s0 in range(0, n, step))
+
+
+def _record_collective(plan, span, **attrs) -> None:
+    """Plan-vs-actual for one distributed op: the span's synced duration
+    next to the comm-priced plan (launch/telemetry collects the records;
+    their comm terms feed MachineModel.calibrate's link column)."""
+    from repro.launch import telemetry as _tel
+    rec = _tel.current()
+    if rec.enabled and span.dur_s > 0:
+        rec.record_plan_actual(plan, span.dur_s, **attrs)
+
+
 @dataclass(frozen=True)
 class RowMatrix(T.DistMatrix):
     rows: Array                      # (m_padded, n), sharded P(row_axes, None)
@@ -65,6 +83,25 @@ class RowMatrix(T.DistMatrix):
         return compat.shard_map(f, mesh=self.mesh, in_specs=in_specs,
                                 out_specs=out_specs)
 
+    def _local_rows(self) -> int:
+        return self.rows.shape[0] // T.axes_size(self.mesh, self.row_axes)
+
+    def _collective_plan(self, op: str, dims):
+        """Comm-priced plan for a distributed op on this mesh: per-shard
+        dims + the row-axis device counts as the collective topology."""
+        from repro.launch import mesh as _mesh
+        from repro.launch import planner as _planner
+        return _planner.plan(
+            op, dims, self.rows.dtype.name,
+            context={"axes": _mesh.axis_sizes(self.mesh, self.row_axes)})
+
+    def _resolve_chunks(self, chunks, plan) -> int:
+        """The overlap chunk count: planner-chosen on "auto" (1 = eager),
+        else the caller's explicit override (tests force both paths)."""
+        if chunks == "auto":
+            return int(plan.blocks.get("chunks", 1))
+        return max(int(chunks), 1)
+
     def _row_mask(self) -> Array:
         """Row-sharded {0,1} mask of true (non-padding) rows."""
         m, nshards = self.n_rows, T.axes_size(self.mesh, self.row_axes)
@@ -78,23 +115,50 @@ class RowMatrix(T.DistMatrix):
         return self._smap(body, in_specs=(), out_specs=P(self.row_axes))()
 
     # -- cluster matrix ops --------------------------------------------------
-    def gram(self) -> Array:
+    def gram(self, *, chunks: int | str = "auto") -> Array:
         """AᵀA, replicated — the paper's one-all-to-one DIMSUM reduction.
 
-        Per-shard partial Gram then a tree all-reduce over the row axes.
-        The shard reduction is the Pallas tsgram kernel (autotuned block
-        sizes) on TPU; on CPU `ops.tsgram` dispatches to the jnp reference,
-        which stays the ground truth.  Padding rows are zero so they do not
+        Per-shard partial Gram then an all-reduce over the row axes.  The
+        shard reduction is the Pallas tsgram kernel (autotuned block sizes)
+        on TPU; on CPU `ops.tsgram` dispatches to the jnp reference, which
+        stays the ground truth.  Padding rows are zero so they do not
         contribute.
+
+        `chunks` > 1 runs the comm-overlapped schedule the planner prices
+        (plan("gram") with this mesh's axis sizes): C column-segment
+        cross-grams Aᵀ·A[:, seg], each segment's partial psum pipelined
+        behind the next segment's compute.  Every segment is the same
+        columns of the same product, so the result is bit-identical to the
+        eager body; "auto" defers to the planner (1 — eager — unless the
+        modeled collective dominates the extra A reads).
         """
         from repro.kernels import ops as _ops
+        from repro.launch import telemetry as _tel
         axes = self.row_axes
+        n = self.rows.shape[1]
+        plan = self._collective_plan("gram", {"m": self._local_rows(),
+                                              "n": n})
+        c = self._resolve_chunks(chunks, plan)
 
-        def body(a):
-            g = _ops.tsgram(a, out_dtype=jnp.float32)
-            return jax.lax.psum(g, axes)
+        if c <= 1:
+            def body(a):
+                g = _ops.tsgram(a, out_dtype=jnp.float32)
+                return jax.lax.psum(g, axes)
+        else:
+            bounds = chunk_bounds(n, c)
 
-        out = self._smap(body, in_specs=(self._spec,), out_specs=P())(self.rows)
+            def body(a):
+                parts = [jax.lax.psum(
+                    _ops.randsketch(a, a[:, s0:s1], out_dtype=jnp.float32),
+                    axes) for s0, s1 in bounds]
+                return jnp.concatenate(parts, axis=1)
+
+        with _tel.current().span("collective.gram", op="gram", n=n,
+                                 chunks=c) as sp:
+            out = self._smap(body, in_specs=(self._spec,),
+                             out_specs=P())(self.rows)
+            sp.sync_on(out)
+        _record_collective(plan, sp, collective="psum", chunks=c)
         return out.astype(self.rows.dtype)
 
     def matvec(self, v: Array) -> Array:
@@ -107,36 +171,83 @@ class RowMatrix(T.DistMatrix):
 
     def rmatvec(self, u: Array) -> Array:
         """Aᵀ u with u row-sharded → replicated n-vector (back to driver)."""
+        from repro.launch import telemetry as _tel
         axes = self.row_axes
+        plan = self._collective_plan("matvec", {"m": self._local_rows(),
+                                                "n": self.rows.shape[1]})
 
         def body(a, u):
             return jax.lax.psum(a.T @ u, axes)
 
-        return self._smap(body, in_specs=(self._spec, P(self.row_axes)),
-                          out_specs=P())(self.rows, u)
+        with _tel.current().span("collective.rmatvec", op="matvec",
+                                 n=self.rows.shape[1]) as sp:
+            out = self._smap(body, in_specs=(self._spec, P(self.row_axes)),
+                             out_specs=P())(self.rows, u)
+            sp.sync_on(out)
+        _record_collective(plan, sp, collective="psum")
+        return out
 
-    def fused_grad(self, x: Array, smooth) -> tuple[Array, Array, Array]:
+    def fused_grad(self, x: Array, smooth, *,
+                   chunks: int | str = "auto") -> tuple[Array, Array, Array]:
         """(f(Ax), Aᵀ∇f(Ax), Ax) in ONE streaming pass over the shard — the
         paper's one-pass treeAggregate gradient, fused on-chip
         (kernels/fusedgrad).  `smooth` is a row-separable smooth (or its
         RowSeparable form); its target/weights are data-space vectors and
         get padded to the sharded row count, with padding rows weighted 0.
         Returns (replicated f32 scalar, replicated (n,) gradient,
-        row-sharded image)."""
+        row-sharded image).
+
+        `chunks` > 1 runs the planner's overlapped schedule (plan("grad")
+        with this mesh's axis sizes, blocks["chunks"]): one full pass
+        computes the image and row residual with the exact
+        ``fused_grad_jnp`` math, then the gradient is assembled per column
+        segment — r·A[:, seg] — with each segment's partial psum pipelined
+        behind the next segment's compute.  Segmented psums of the same
+        products make it bit-identical to the eager body; the price (one
+        extra read of A) is the planner's break-even, so "auto" stays
+        eager until the modeled collective dominates."""
+        from repro.kernels import fusedgrad as _fg
         from repro.kernels import ops as _ops
+        from repro.launch import telemetry as _tel
         axes = self.row_axes
         kind, t, w, prm = T.row_separable_inputs(smooth, self.rows.shape[0],
                                                  self._row_mask)
         x = jnp.asarray(x)
+        n = self.rows.shape[1]
+        plan = self._collective_plan("grad", {"m": self._local_rows(),
+                                              "n": n})
+        c = self._resolve_chunks(chunks, plan)
 
-        def body(a, x, t, w):
-            f, g, z = _ops.fused_grad(a, x, t, w, loss=kind, param=prm)
-            return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
+        if c <= 1:
+            def body(a, x, t, w):
+                f, g, z = _ops.fused_grad(a, x, t, w, loss=kind, param=prm)
+                return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
+        else:
+            bounds = chunk_bounds(n, c)
 
-        f, g, z = self._smap(
-            body,
-            in_specs=(self._spec, P(), P(self.row_axes), P(self.row_axes)),
-            out_specs=(P(), P(), P(self.row_axes)))(self.rows, x, t, w)
+            def body(a, x, t, w):
+                # Phase 1 — image + row residual, the exact math of
+                # kernels.fusedgrad.fused_grad_jnp (the eager CPU path).
+                z = jnp.dot(a, x, preferred_element_type=jnp.float32)
+                f, r = _fg.row_loss_grad(z, t, w, kind, prm)
+                rc = r.astype(a.dtype)
+                # Phase 2 — per-segment gradient; segment k's partial psum
+                # overlaps segment k+1's contraction.
+                gs = [jax.lax.psum(
+                    jnp.dot(rc, a[:, s0:s1],
+                            preferred_element_type=jnp.float32)
+                    .astype(x.dtype), axes) for s0, s1 in bounds]
+                return jax.lax.psum(f, axes), jnp.concatenate(gs), z
+
+        with _tel.current().span("collective.fused_grad", op="grad", n=n,
+                                 chunks=c) as sp:
+            f, g, z = self._smap(
+                body,
+                in_specs=(self._spec, P(), P(self.row_axes),
+                          P(self.row_axes)),
+                out_specs=(P(), P(), P(self.row_axes)))(self.rows, x, t, w)
+            sp.sync_on(g)
+        _record_collective(plan, sp, collective="psum", chunks=c)
         return f, g, z
 
     def fused_grad_multi(self, x: Array, smooths

@@ -254,6 +254,22 @@ class SparseRowMatrix(T.DistMatrix):
              "nx": max(nx, 1), "ell": self.ell, "bs": self.bs},
             self.data.dtype.name).choice == "bsr"
 
+    def _collective_plan(self, op: str, dims):
+        """Comm-priced plan for a distributed op on this mesh (see
+        RowMatrix._collective_plan; the dense-terms model is an upper bound
+        for the sparse shard's compute, which is fine for the chunk
+        decision — it only moves the overlap break-even conservatively)."""
+        from repro.launch import mesh as _mesh
+        from repro.launch import planner as _planner
+        return _planner.plan(
+            op, dims, self.data.dtype.name,
+            context={"axes": _mesh.axis_sizes(self.mesh, self.row_axes)})
+
+    def _resolve_chunks(self, chunks, plan) -> int:
+        if chunks == "auto":
+            return int(plan.blocks.get("chunks", 1))
+        return max(int(chunks), 1)
+
     def _local(self, data: Array, cols: Array) -> _bsr.BlockELL:
         """The shard's BlockELL view (called inside shard_map bodies)."""
         return _bsr.BlockELL(data, cols, (data.shape[0] * self.bs,
@@ -332,16 +348,30 @@ class SparseRowMatrix(T.DistMatrix):
         return RowMatrix(rows=out, n_rows=self.dims[0], mesh=self.mesh,
                          row_axes=self.row_axes)
 
-    def fused_grad(self, x: Array, smooth, *,
-                   dispatch: str = "auto") -> tuple[Array, Array, Array]:
+    def fused_grad(self, x: Array, smooth, *, dispatch: str = "auto",
+                   chunks: int | str = "auto") -> tuple[Array, Array, Array]:
         """(f(Ax), Aᵀ∇f(Ax), Ax) in one pass over the stored blocks — the
         BSR form of the fused composite gradient (kernels/fusedgrad): z for
         a block-row accumulates while its blocks are staged in VMEM, the
         row-local residual is evaluated on-chip, and the transpose
         contributions scatter-add into a resident accumulator.  Dense
         fallback (densify + dense fused kernel) under the same density-aware
-        dispatch as every other multiply."""
+        dispatch as every other multiply.
+
+        `chunks` > 1 runs the comm-overlapped schedule (planner-chosen on
+        "auto", via plan("grad") with this mesh's axis sizes).  The dense
+        fallback arm gets the full two-phase split RowMatrix.fused_grad
+        uses (per-column-segment r·A[:, seg] contractions overlapping the
+        partial psums); the BSR arm keeps its one-pass kernel — re-reading
+        the stored blocks per segment would forfeit exactly the fusion the
+        kernel exists for — and pipelines the gradient *reduction* in
+        column segments instead, so successive partial psums overlap each
+        other and the f psum.  Both arms are bit-identical to eager
+        (segmented psums of the same per-shard values)."""
+        from repro.kernels import fusedgrad as _fg
         from repro.kernels import ops as _ops
+        from repro.launch import telemetry as _tel
+        from .rowmatrix import _record_collective, chunk_bounds
         use_bsr = self._use_bsr(1, dispatch)
         axes = self.row_axes
         n = self.dims[1]
@@ -350,21 +380,45 @@ class SparseRowMatrix(T.DistMatrix):
         x = jnp.asarray(x)
         xp = jnp.pad(x, (0, self.n_pad - x.shape[0])) \
             if x.shape[0] < self.n_pad else x
+        plan = self._collective_plan("grad", {"m": self._local_rows(),
+                                              "n": self.n_pad})
+        c = self._resolve_chunks(chunks, plan)
+        bounds = chunk_bounds(self.n_pad, c)
 
         def body(data, cols, xp, t, w):
             local = self._local(data, cols)
             if use_bsr:
                 f, g, z = _ops.fused_grad_bsr(local, xp, t, w, loss=kind,
                                               param=prm)
+                if c > 1:   # pipeline the reduction in column segments
+                    gs = [jax.lax.psum(g[s0:s1], axes) for s0, s1 in bounds]
+                    return jax.lax.psum(f, axes), jnp.concatenate(gs), z
+            elif c > 1:
+                # Two-phase dense split — fused_grad_jnp's exact math with
+                # the gradient built per column segment (see RowMatrix).
+                dense = local.to_dense()
+                z = jnp.dot(dense, xp, preferred_element_type=jnp.float32)
+                f, r = _fg.row_loss_grad(z, t, w, kind, prm)
+                rc = r.astype(dense.dtype)
+                gs = [jax.lax.psum(
+                    jnp.dot(rc, dense[:, s0:s1],
+                            preferred_element_type=jnp.float32)
+                    .astype(xp.dtype), axes) for s0, s1 in bounds]
+                return jax.lax.psum(f, axes), jnp.concatenate(gs), z
             else:
                 f, g, z = _ops.fused_grad(local.to_dense(), xp, t, w,
                                           loss=kind, param=prm)
             return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
 
-        f, g, z = self._smap(
-            body,
-            in_specs=(self._dspec, self._dspec, P(), P(axes), P(axes)),
-            out_specs=(P(), P(), P(axes)))(self.data, self.cols, xp, t, w)
+        with _tel.current().span("collective.fused_grad", op="grad",
+                                 n=self.n_pad, chunks=c) as sp:
+            f, g, z = self._smap(
+                body,
+                in_specs=(self._dspec, self._dspec, P(), P(axes), P(axes)),
+                out_specs=(P(), P(), P(axes)))(self.data, self.cols, xp,
+                                               t, w)
+            sp.sync_on(g)
+        _record_collective(plan, sp, collective="psum", chunks=c)
         return f, g[:n], z
 
     def fused_grad_multi(self, x: Array, smooths, *,

@@ -20,9 +20,18 @@ point of this one, so the single-pass fused gradient kernel
 streaming read of A — covers the whole attempt: ONE A-pass instead of an
 apply + an adjoint.  `fused="auto"` (TfocsOptions) takes that path when the
 smooth advertises separability, the operator supports it, and the execution
-planner (launch/planner.plan("grad", ...)) prices it ahead; accelerated
-variants keep the cached two-pass scheme (their gradient point is a moving
-combination whose image is already free).  `fused=False` opts out.
+planner (launch/planner.plan("grad", ...)) prices it ahead.  `fused=False`
+opts out.
+
+Accelerated runs over a *quadratic* row-separable smooth get the same
+one-pass floor by a different trick (`_tfocs_fused_accel`): ∇f(z) = w∘(z−b)
+is affine, so the x-space gradient decomposes as Aᵀ∇f(A y) = u_y − u_b with
+u_v ≔ Aᵀ(w∘A v) — and u_y = (1−θ)u_x + θu_z combines from carried vectors
+exactly like the cached images.  Each attempt then needs only ONE fused
+pass (at the candidate z⁺, which refreshes u_z); the momentum point's
+gradient is free.  acc/acc_b/acc_r/acc_rb drop from two A-passes per
+attempt to one.  Non-quadratic accelerated variants keep the cached
+two-pass scheme (their data-space gradient is not affine in the image).
 
 One engine serves the whole Figure-1 family:
   accel=False                         → `gra`   (proximal gradient)
@@ -74,11 +83,12 @@ def fused_gradient_enabled(smooth, linop, fused: bool | str = "auto",
                            accel: bool = False) -> bool:
     """Whether a (smooth, linop) composite should take the single-pass fused
     gradient path.  Structure gates first (row-separable smooth, a
-    fused-capable operator, and — for the TFOCS engine — no acceleration,
-    since the cached-image trick already makes the momentum point's
-    value/grad free); `"auto"` then consults the execution planner
-    (launch/planner.plan("grad", ...): one A read vs two, priced on the
-    calibrated machine model)."""
+    fused-capable operator, and — with needs_theta_one — no acceleration,
+    since the θ ≡ 1 engine's candidate/gradient-point identity breaks under
+    momentum; accelerated quadratic composites get their own affine fused
+    engine, see `_tfocs_fused_accel`); `"auto"` then consults the execution
+    planner (launch/planner.plan("grad", ...): one A read vs two, priced on
+    the calibrated machine model)."""
     if fused is False or (needs_theta_one and accel):
         return False
     sep = row_separable(smooth)
@@ -233,6 +243,156 @@ def _tfocs_fused(smooth, linop, prox, x0: Array, opts: TfocsOptions,
     return final.x, info
 
 
+class _AccFusedState(NamedTuple):
+    # The cached-image carries of TfocsState plus the x-space u-vectors
+    # u_v = Aᵀ(w∘A v) that make the quadratic gradient affine.
+    x: Array
+    Ax: Array
+    ux: Array
+    z: Array
+    Az: Array
+    uz: Array
+    theta: Array
+    L: Array
+    k: Array
+    hist: Array
+    done: Array
+    n_backtracks: Array
+    n_restarts: Array
+
+
+class _AccFusedAttempt(NamedTuple):
+    L: Array
+    theta: Array
+    x: Array
+    Ax: Array
+    ux: Array
+    z: Array
+    Az: Array
+    uz: Array
+    gy: Array                    # data-space gradient at y (restart test)
+    ok: Array
+    tries: Array
+
+
+def _tfocs_fused_accel(smooth, linop, prox, x0: Array, opts: TfocsOptions,
+                       sep) -> tuple[Array, dict]:
+    """Accelerated engine over the fused single-pass gradient — quadratic
+    row-separable smooths only.
+
+    With f(z) = Σ wᵢ·½(zᵢ−bᵢ)² the x-space gradient at any point v is
+    Aᵀ∇f(A v) = u_v − u_b where u_v = Aᵀ(w∘A v): *affine* in u.  The
+    iterates x̄, z therefore carry u_x, u_z alongside their cached images,
+    and the momentum point's gradient  u_y − u_b = (1−θ)u_x + θu_z − u_b
+    costs nothing.  One `linop.fused_grad(z⁺)` per attempt refreshes
+    (f(Az⁺), u_z⁺ − u_b, Az⁺) in a single streaming read of A; x̄⁺ updates
+    affinely.  The math reproduces the cached engine's iterates to float
+    tolerance at HALF the passes: a_passes = 2 (seed: u_b then x0) +
+    iterations + extra backtracks."""
+    backtracking = opts.backtracking and opts.Lexact is None
+    L_init = jnp.asarray(opts.Lexact if opts.Lexact is not None else opts.L0,
+                         jnp.float32)
+
+    # Seed: u_b from a fused pass at 0 (g(0) = Aᵀ(w∘(0−b)) = −u_b), then
+    # the starting iterate's image and u_x.  Two passes, done once.
+    _, g_zero, _ = linop.fused_grad(jnp.zeros_like(x0), sep)
+    ub = -g_zero
+    _, gx0, Ax0 = linop.fused_grad(x0, sep)
+    ux0 = gx0 + ub
+
+    def theta_next(theta, L_ratio):
+        return 2.0 / (1.0 + jnp.sqrt(1.0 + 4.0 * L_ratio / (theta * theta)))
+
+    def attempt_once(a: _AccFusedAttempt,
+                     state: _AccFusedState) -> _AccFusedAttempt:
+        Ay = (1 - a.theta) * state.Ax + a.theta * state.Az
+        fy = smooth.value(Ay)
+        gy = smooth.grad(Ay)                        # data-space, no A pass
+        g = (1 - a.theta) * state.ux + a.theta * state.uz - ub  # affine!
+        step = 1.0 / (a.L * a.theta)
+        z_new = prox.prox(state.z - step * g, step)
+        _, gz, Az_new = linop.fused_grad(z_new, sep)  # ← the ONE A-pass
+        uz_new = gz + ub
+        x_new = (1 - a.theta) * state.x + a.theta * z_new
+        Ax_new = (1 - a.theta) * state.Ax + a.theta * Az_new
+        ux_new = (1 - a.theta) * state.ux + a.theta * uz_new
+        f_new = smooth.value(Ax_new)
+        dx = a.theta * (z_new - state.z)            # = x_new − y
+        rhs = fy + jnp.vdot(gy, Ax_new - Ay) + 0.5 * a.L * jnp.vdot(dx, dx)
+        ok = f_new <= rhs + 1e-12 * jnp.abs(fy)
+        return a._replace(x=x_new, Ax=Ax_new, ux=ux_new, z=z_new,
+                          Az=Az_new, uz=uz_new, gy=gy, ok=ok,
+                          tries=a.tries + 1)
+
+    def outer(state: _AccFusedState) -> _AccFusedState:
+        L0k = state.L * (opts.beta if backtracking else 1.0)
+        theta0 = theta_next(state.theta, L0k / state.L)
+        init = _AccFusedAttempt(
+            L=L0k, theta=theta0, x=state.x, Ax=state.Ax, ux=state.ux,
+            z=state.z, Az=state.Az, uz=state.uz,
+            gy=jnp.zeros_like(state.Ax), ok=jnp.asarray(False),
+            tries=jnp.int32(0))
+        first = attempt_once(init, state)
+
+        if backtracking:
+            def bt_cond(a: _AccFusedAttempt):
+                return (~a.ok) & (a.tries < opts.max_backtracks)
+
+            def bt_body(a: _AccFusedAttempt):
+                L_new = a.L * opts.alpha
+                theta_new = theta_next(state.theta, L_new / state.L)
+                return attempt_once(a._replace(L=L_new, theta=theta_new),
+                                    state)
+
+            acc = jax.lax.while_loop(bt_cond, bt_body, first)
+        else:
+            acc = first
+
+        # Gradient-test restart (O'Donoghue–Candès), exactly the cached
+        # engine's test; resetting momentum also resets u_z to u_x.
+        if opts.restart:
+            uphill = jnp.vdot(acc.gy, acc.Ax - state.Ax) > 0
+            theta_out = jnp.where(uphill, 1.0, acc.theta)
+            z_out = jnp.where(uphill, acc.x, acc.z)
+            Az_out = jnp.where(uphill, acc.Ax, acc.Az)
+            uz_out = jnp.where(uphill, acc.ux, acc.uz)
+            n_restarts = state.n_restarts + uphill.astype(jnp.int32)
+        else:
+            theta_out, z_out, Az_out, uz_out = (acc.theta, acc.z, acc.Az,
+                                                acc.uz)
+            n_restarts = state.n_restarts
+
+        obj = smooth.value(acc.Ax) + prox.value(acc.x)
+        hist = state.hist.at[state.k].set(obj)
+        dx = acc.x - state.x
+        rel = jnp.linalg.norm(dx) / jnp.maximum(1.0, jnp.linalg.norm(acc.x))
+        return _AccFusedState(
+            x=acc.x, Ax=acc.Ax, ux=acc.ux, z=z_out, Az=Az_out, uz=uz_out,
+            theta=theta_out, L=acc.L, k=state.k + 1, hist=hist,
+            done=rel < opts.tol,
+            n_backtracks=state.n_backtracks + acc.tries - 1,
+            n_restarts=n_restarts)
+
+    def cond(state: _AccFusedState):
+        return (~state.done) & (state.k < opts.max_iters)
+
+    init = _AccFusedState(
+        x=x0, Ax=Ax0, ux=ux0, z=x0, Az=Ax0, uz=ux0,
+        theta=jnp.asarray(1.0, jnp.float32), L=L_init, k=jnp.int32(0),
+        hist=jnp.full((opts.max_iters,), jnp.nan, jnp.float32),
+        done=jnp.asarray(False),
+        n_backtracks=jnp.int32(0), n_restarts=jnp.int32(0))
+    final = jax.lax.while_loop(cond, outer, init)
+    info = {"iterations": final.k,
+            "a_passes": 2 + final.k + final.n_backtracks,
+            "converged": final.done, "plan": "fused_affine",
+            "history": final.hist,
+            "n_backtracks": final.n_backtracks,
+            "n_restarts": final.n_restarts, "fused": True,
+            "objective": final.hist[jnp.maximum(final.k - 1, 0)]}
+    return final.x, info
+
+
 def tfocs(smooth, linop, prox, x0: Array,
           opts: TfocsOptions = TfocsOptions()) -> tuple[Array, dict]:
     """Run the solver; returns (x*, info dict with per-iteration history)."""
@@ -240,6 +400,11 @@ def tfocs(smooth, linop, prox, x0: Array,
                               needs_theta_one=True, accel=opts.accel):
         return _tfocs_fused(smooth, linop, prox, x0, opts,
                             row_separable(smooth))
+    sep = row_separable(smooth)
+    if (opts.accel and sep is not None and sep.kind == "quad"
+            and _fused_capable(linop)
+            and fused_gradient_enabled(smooth, linop, opts.fused)):
+        return _tfocs_fused_accel(smooth, linop, prox, x0, opts, sep)
     backtracking = opts.backtracking and opts.Lexact is None
     L_init = jnp.asarray(opts.Lexact if opts.Lexact is not None else opts.L0,
                          jnp.float32)

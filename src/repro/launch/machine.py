@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -69,6 +70,25 @@ class CostTerms:
     hbm_bytes: float = 0.0       # bytes moved through HBM
     steps: float = 0.0           # grid steps launched
     mxu_util: float = 1.0        # utilization fraction of the tiling
+    comm_bytes: float = 0.0      # bytes on the busiest ICI link (collectives)
+    comm_steps: float = 0.0      # serial collective hops (latency term)
+
+
+def collective_cost(n_devices: int, payload_bytes: float,
+                    algorithm: str) -> tuple[float, float]:
+    """(bytes on the busiest link, serial hops) for one all-reduce over a
+    single torus axis of ``n_devices``.  Ring moves 2·P·(N−1)/N bytes in
+    2·(N−1) hops (bandwidth-optimal); a binary reduce+broadcast tree moves
+    2·P·⌈log₂N⌉ bytes in 2·⌈log₂N⌉ hops (latency-optimal for small P)."""
+    n = int(n_devices)
+    if n <= 1:
+        return 0.0, 0.0
+    if algorithm == "ring":
+        return 2.0 * payload_bytes * (n - 1) / n, 2.0 * (n - 1)
+    if algorithm == "tree":
+        depth = math.ceil(math.log2(n))
+        return 2.0 * payload_bytes * depth, 2.0 * depth
+    raise ValueError(f"algorithm must be 'ring' or 'tree', got {algorithm!r}")
 
 
 @dataclass(frozen=True)
@@ -82,6 +102,8 @@ class MachineModel:
     vmem_bytes: int                     # fast scratch per core
     mxu_eff: Mapping[str, float] = field(default_factory=dict)  # dtype name
     hbm_eff: Mapping[str, float] = field(default_factory=dict)  # dtype name
+    link_eff: Mapping[str, float] = field(default_factory=dict)  # dtype name
+    link_latency_s: float = 1e-6        # per-hop collective latency
     source: str = "builtin"             # "builtin" | "calibrated"
 
     # -- constants, efficiency-adjusted --------------------------------------
@@ -93,6 +115,9 @@ class MachineModel:
     def bandwidth(self, dtype) -> float:
         return self.hbm_bw * self.hbm_eff.get(_dtype_name(dtype), 1.0)
 
+    def link_bandwidth(self, dtype) -> float:
+        return self.link_bw * self.link_eff.get(_dtype_name(dtype), 1.0)
+
     # -- terms → seconds -----------------------------------------------------
     def breakdown(self, terms: CostTerms, dtype) -> dict:
         """The roofline decomposition plan().explain() prints."""
@@ -100,13 +125,46 @@ class MachineModel:
                                    * max(terms.mxu_util, 1e-9))
         memory_s = terms.hbm_bytes / self.bandwidth(dtype)
         step_s = terms.steps * self.step_overhead_s
+        comm_s = 0.0
+        if terms.comm_bytes or terms.comm_steps:
+            comm_s = (terms.comm_bytes / self.link_bandwidth(dtype)
+                      + terms.comm_steps * self.link_latency_s)
         bound = "compute" if compute_s >= memory_s else "memory"
+        if comm_s > max(compute_s, memory_s):
+            bound = "comm"
+        total = max(compute_s, memory_s) + step_s
+        if comm_s:     # keep the comm-free total bit-identical to the seed
+            total += comm_s
         return {"compute_s": compute_s, "memory_s": memory_s,
-                "step_s": step_s, "bound": bound,
-                "total_s": max(compute_s, memory_s) + step_s}
+                "step_s": step_s, "comm_s": comm_s, "bound": bound,
+                "total_s": total}
 
     def time(self, terms: CostTerms, dtype) -> float:
         return self.breakdown(terms, dtype)["total_s"]
+
+    # -- collectives ---------------------------------------------------------
+    def collective(self, payload_bytes: float, axis_sizes: Sequence[int],
+                   dtype="float32", algorithm: str = "auto") -> dict:
+        """Price one all-reduce (psum) of ``payload_bytes`` over the mesh
+        axes it reduces across — a sequential per-axis reduction, the way
+        XLA lowers multi-axis psums on a torus.  ``algorithm`` picks ring
+        vs tree per the link model; "auto" takes whichever is cheaper for
+        this payload and topology (ring past the bandwidth break-even,
+        tree under it)."""
+        algos = ("ring", "tree") if algorithm == "auto" else (algorithm,)
+        best = None
+        for algo in algos:
+            cb = cs = 0.0
+            for nax in axis_sizes:
+                b, s = collective_cost(nax, payload_bytes, algo)
+                cb += b
+                cs += s
+            t = (cb / self.link_bandwidth(dtype)
+                 + cs * self.link_latency_s)
+            if best is None or t < best["comm_s"]:
+                best = {"algorithm": algo, "comm_bytes": cb,
+                        "comm_steps": cs, "comm_s": t}
+        return best
 
     # -- calibration ---------------------------------------------------------
     def calibrate(self, records: Sequence[Mapping]) -> "MachineModel":
@@ -119,22 +177,30 @@ class MachineModel:
              "mxu_util": …, "measured_s": …}
 
         Least squares on the additive roofline relaxation
-            measured − steps·overhead ≈ a·compute_raw + b·hbm_raw
-        gives inverse efficiencies a = 1/mxu_eff, b = 1/hbm_eff (the max()
-        roofline is not linear; the sum is its standard regression
-        surrogate and upper-bounds it within 2×).  Rows are weighted by
-        1/measured so the fit minimizes *relative* error — the metric
-        ``error()`` scores and plan() decisions care about — instead of
-        letting the largest shape dominate.  Coefficients are clamped
-        positive; a dtype needs ≥ 2 records to be fit."""
+            measured − steps·overhead − comm_steps·latency
+                ≈ a·compute_raw + b·hbm_raw [+ c·comm_raw]
+        gives inverse efficiencies a = 1/mxu_eff, b = 1/hbm_eff, and —
+        when any record carries collective terms (``comm_bytes`` from a
+        distributed plan-vs-actual span or bench_collectives sweep) —
+        c = 1/link_eff (the max() roofline is not linear; the sum is its
+        standard regression surrogate and upper-bounds it within 2×).  The
+        comm column joins the parameter vector only when the records
+        exercise it, so compute-only sweeps reproduce the seed's two-term
+        fit exactly.  Rows are weighted by 1/measured so the fit minimizes
+        *relative* error — the metric ``error()`` scores and plan()
+        decisions care about — instead of letting the largest shape
+        dominate.  Coefficients are clamped positive; a dtype needs ≥ 2
+        records to be fit."""
         by_dtype: dict[str, list[Mapping]] = {}
         for r in records:
             by_dtype.setdefault(str(r["dtype"]), []).append(r)
         mxu_eff = dict(self.mxu_eff)
         hbm_eff = dict(self.hbm_eff)
+        link_eff = dict(self.link_eff)
         for dname, recs in by_dtype.items():
             if len(recs) < 2:
                 continue
+            has_comm = any(float(r.get("comm_bytes", 0.0)) > 0 for r in recs)
             A, y = [], []
             for r in recs:
                 compute_raw = (float(r["flops"])
@@ -142,33 +208,45 @@ class MachineModel:
                                   * max(float(r.get("mxu_util", 1.0)), 1e-9)))
                 hbm_raw = float(r["hbm_bytes"]) / self.hbm_bw
                 resid = (float(r["measured_s"])
-                         - float(r.get("steps", 0.0)) * self.step_overhead_s)
+                         - float(r.get("steps", 0.0)) * self.step_overhead_s
+                         - (float(r.get("comm_steps", 0.0))
+                            * self.link_latency_s))
                 scale = 1.0 / max(float(r["measured_s"]), 1e-12)
-                A.append([compute_raw * scale, hbm_raw * scale])
+                row = [compute_raw * scale, hbm_raw * scale]
+                if has_comm:
+                    row.append(float(r.get("comm_bytes", 0.0))
+                               / self.link_bw * scale)
+                A.append(row)
                 y.append(max(resid, 0.0) * scale)
             A = np.asarray(A, np.float64)
             y = np.asarray(y, np.float64)
+            ncol = A.shape[1]
             coef, *_ = np.linalg.lstsq(A, y, rcond=None)
-            a, b = float(coef[0]), float(coef[1])
-            if a <= 0 or b <= 0:
+            coef = [float(v) for v in coef]
+            if coef[0] <= 0 or coef[1] <= 0:
                 # Degenerate fit (one term dominates every record, or the
                 # terms are collinear): projected NNLS — take whichever
                 # single-slope fit leaves the smaller residual.
                 fits = []
-                for col in (0, 1):
+                for col in range(ncol):
                     s = float(A[:, col] @ y
                               / max(A[:, col] @ A[:, col], 1e-30))
                     s = max(s, 0.0)
                     sse = float(((A[:, col] * s - y) ** 2).sum())
                     fits.append((sse, col, s))
                 _, col, s = min(fits)
-                a, b = (s, 0.0) if col == 0 else (0.0, s)
+                coef = [0.0] * ncol
+                coef[col] = s
+            a, b = coef[0], coef[1]
+            c = coef[2] if ncol > 2 else 0.0
             if a > 0:
                 mxu_eff[dname] = float(np.clip(1.0 / a, 1e-4, 16.0))
             if b > 0:
                 hbm_eff[dname] = float(np.clip(1.0 / b, 1e-4, 16.0))
+            if c > 0:
+                link_eff[dname] = float(np.clip(1.0 / c, 1e-4, 16.0))
         return dataclasses.replace(self, mxu_eff=mxu_eff, hbm_eff=hbm_eff,
-                                   source="calibrated")
+                                   link_eff=link_eff, source="calibrated")
 
     def peak_flops_raw(self, dname: str) -> float:
         import jax.numpy as jnp
@@ -180,11 +258,14 @@ class MachineModel:
         the number calibration must tighten."""
         errs = []
         for r in records:
-            t = self.time(CostTerms(flops=float(r["flops"]),
-                                    hbm_bytes=float(r["hbm_bytes"]),
-                                    steps=float(r.get("steps", 0.0)),
-                                    mxu_util=float(r.get("mxu_util", 1.0))),
-                          str(r["dtype"]))
+            t = self.time(
+                CostTerms(flops=float(r["flops"]),
+                          hbm_bytes=float(r["hbm_bytes"]),
+                          steps=float(r.get("steps", 0.0)),
+                          mxu_util=float(r.get("mxu_util", 1.0)),
+                          comm_bytes=float(r.get("comm_bytes", 0.0)),
+                          comm_steps=float(r.get("comm_steps", 0.0))),
+                str(r["dtype"]))
             meas = float(r["measured_s"])
             if meas > 0:
                 errs.append(abs(t - meas) / meas)
@@ -198,6 +279,8 @@ class MachineModel:
                 "step_overhead_s": self.step_overhead_s,
                 "link_bw": self.link_bw, "vmem_bytes": self.vmem_bytes,
                 "mxu_eff": dict(self.mxu_eff), "hbm_eff": dict(self.hbm_eff),
+                "link_eff": dict(self.link_eff),
+                "link_latency_s": self.link_latency_s,
                 "source": self.source}
 
     @staticmethod
@@ -210,6 +293,8 @@ class MachineModel:
             link_bw=float(d["link_bw"]), vmem_bytes=int(d["vmem_bytes"]),
             mxu_eff=dict(d.get("mxu_eff", {})),
             hbm_eff=dict(d.get("hbm_eff", {})),
+            link_eff=dict(d.get("link_eff", {})),
+            link_latency_s=float(d.get("link_latency_s", 1e-6)),
             source=d.get("source", "builtin"))
 
 
@@ -223,7 +308,8 @@ V5E = MachineModel(
     hbm_bw=819e9,                        # bytes/s per chip
     step_overhead_s=2e-7,                # per-grid-step issue cost
     link_bw=50e9,                        # bytes/s per ICI link
-    vmem_bytes=16 * 2**20)
+    vmem_bytes=16 * 2**20,
+    link_latency_s=1e-6)                 # per-ICI-hop collective latency
 
 CPU = MachineModel(
     name="cpu-host",
@@ -231,7 +317,8 @@ CPU = MachineModel(
     hbm_bw=3e10,                         # one socket's DRAM stream
     step_overhead_s=1e-6,                # dispatch/loop overhead per tile
     link_bw=1e10,
-    vmem_bytes=16 * 2**20)               # keeps tilings TPU-shaped
+    vmem_bytes=16 * 2**20,               # keeps tilings TPU-shaped
+    link_latency_s=2e-6)                 # shared-memory "hop" (host psum)
 
 _BUILTIN = {"tpu": V5E, "cpu": CPU}
 

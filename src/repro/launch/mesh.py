@@ -26,3 +26,16 @@ def make_host_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         data, model = n, 1
     return compat.make_mesh((data, model), ("data", "model"))
+
+
+def axis_sizes(mesh, axes=None) -> tuple[int, ...]:
+    """Per-axis device counts of `mesh` (all axes, or the named subset, a
+    single name included) — the topology key the planner's collective
+    model prices reductions against (`MachineModel.collective`)."""
+    if axes is None:
+        names = tuple(mesh.axis_names)
+    elif isinstance(axes, str):
+        names = (axes,)
+    else:
+        names = tuple(axes)
+    return tuple(int(mesh.shape[a]) for a in names)

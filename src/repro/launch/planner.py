@@ -27,12 +27,26 @@ Supported ops:
                            the ops-wrapper ``tune="auto"`` path)
   "sparse_matmul"          {m, n, nx, ell, bs} per-shard BSR-vs-dense
   "grad"                   {m, n} per-shard fused-vs-unfused composite
-                           gradient (one A read vs two)
+                           gradient (one A read vs two); with context
+                           {"axes": mesh axis sizes} the psum of (f, g) is
+                           priced end-to-end and an overlapped chunk count
+                           is chosen (blocks["chunks"], 1 = eager)
   "bsr_bs"                 {m, n, nx} + context {"ell_by_bs": {bs: ell}}
                            block-size selection on actual ELL widths
   "svd"                    {m, n, k} + context {"kind": "row"|"sparse"|
                            "other", thresholds} → gram | randomized | lanczos
+  "gram"                   {m, n} per-shard AᵀA + context {"axes": …}:
+                           eager tsgram+psum vs column-chunked cross-grams
+                           whose partial psums pipeline behind the next
+                           chunk's compute (choice "eager"|"overlap",
+                           blocks["chunks"])
+  "matvec"                 {m, n} one streaming shard pass + context
+                           {"axes": …} reduction of the n-vector result;
+                           choice names the reduction (ring|tree|local)
 
+Distributed ops price their collectives with ``MachineModel.collective``
+(ring vs tree by mesh shape and payload — pass mesh axis sizes via
+``launch.mesh.axis_sizes``), and ``explain()`` reports the comm fraction.
 Decision functions are memoized (the shard_map bodies consult them at trace
 time); ``kernels.autotune.reset()`` clears every layer at once.
 """
@@ -48,7 +62,11 @@ from repro.launch import machine as _machine
 from repro.launch.machine import LANE, CostTerms, MachineModel
 
 KERNEL_OPS = tuple(at.KERNELS)
-DECISION_OPS = ("sparse_matmul", "grad", "bsr_bs", "svd")
+DECISION_OPS = ("sparse_matmul", "grad", "bsr_bs", "svd", "gram", "matvec")
+
+# Overlap chunk counts the distributed deciders sweep (1 = eager
+# compute-then-reduce); segments narrower than a lane never win.
+CHUNK_CANDIDATES = (1, 2, 4, 8)
 
 # BSR block-size candidates — the one definition (SparseRowMatrix's
 # bs="auto" constructors and plan("bsr_bs") both sweep this list).
@@ -79,6 +97,10 @@ class ExecutionPlan:
     breakdown: Mapping[str, float] = field(default_factory=dict)
     alternatives: tuple = ()          # ((label, modeled_s), ...) ascending
     notes: tuple = ()
+    terms: Mapping[str, float] = field(default_factory=dict)
+    # ^ raw (efficiency-1) cost terms of the chosen path for decision ops
+    #   that price collectives — lets actual_record() feed calibrate()
+    #   with the comm column (kernel ops rebuild terms from blocks instead).
 
     def explain(self) -> str:
         """Human-readable roofline breakdown of the decision."""
@@ -97,6 +119,11 @@ class ExecutionPlan:
                 f"  roofline: compute {_us(b['compute_s'])}"
                 f" | memory {_us(b['memory_s'])}"
                 f" | steps {_us(b['step_s'])}  -> {b['bound']}-bound")
+            comm_s = b.get("comm_s", 0.0)
+            if comm_s:
+                frac = comm_s / b["total_s"] if b["total_s"] > 0 else 0.0
+                lines.append(f"  comm: {_us(comm_s)}"
+                             f" ({frac:.0%} of modeled serial time)")
         if self.alternatives:
             selected = {self.choice,
                         json.dumps(dict(self.blocks), sort_keys=True)}
@@ -201,10 +228,51 @@ def _decide(op, dims_key, dtype_name, backend, ctx_key,
     if op == "sparse_matmul":
         return _decide_sparse(d, dtype_name, machine, kw)
     if op == "grad":
-        return _decide_grad(d, dtype_name, machine, kw)
+        return _decide_grad(d, dtype_name, machine, ctx, kw)
     if op == "bsr_bs":
         return _decide_bsr_bs(d, dtype_name, machine, ctx, kw)
+    if op == "gram":
+        return _decide_gram(d, dtype_name, machine, ctx, kw)
+    if op == "matvec":
+        return _decide_matvec(d, dtype_name, machine, ctx, kw)
     return _decide_svd(d, dtype_name, machine, ctx, kw)
+
+
+# -- collective helpers --------------------------------------------------------
+
+def _axes(ctx) -> tuple[int, ...]:
+    """Mesh axis sizes the op reduces across (context["axes"]); () when the
+    caller runs single-device / undistributed."""
+    return tuple(int(a) for a in ctx.get("axes", ()) or ())
+
+
+def _terms_dict(t: CostTerms) -> dict:
+    return {"flops": t.flops, "hbm_bytes": t.hbm_bytes, "steps": t.steps,
+            "mxu_util": t.mxu_util, "comm_bytes": t.comm_bytes,
+            "comm_steps": t.comm_steps}
+
+
+def _with_comm(t: CostTerms, coll: Mapping) -> CostTerms:
+    import dataclasses
+    return dataclasses.replace(
+        t, comm_bytes=t.comm_bytes + coll["comm_bytes"],
+        comm_steps=t.comm_steps + coll["comm_steps"])
+
+
+def _pipeline_s(t_chunk: float, comm_chunk: float, chunks: int,
+                pre: float = 0.0) -> float:
+    """Modeled wall time of `chunks` compute→psum stages where chunk k's
+    psum overlaps chunk k+1's compute: the first compute and the last psum
+    are exposed, every middle stage costs max(compute, comm)."""
+    if chunks <= 1:
+        return pre + t_chunk + comm_chunk
+    return (pre + t_chunk
+            + (chunks - 1) * max(t_chunk, comm_chunk) + comm_chunk)
+
+
+def _chunk_counts(n: int) -> tuple[int, ...]:
+    """Chunk counts worth sweeping for an n-column segment split."""
+    return tuple(c for c in CHUNK_CANDIDATES if c == 1 or n // c >= LANE)
 
 
 def _decide_sparse(d, dtype_name, machine, kw) -> ExecutionPlan:
@@ -234,14 +302,21 @@ def _decide_sparse(d, dtype_name, machine, kw) -> ExecutionPlan:
                f"{d['ell'] / max(n // d['bs'], 1):.3f}",), **kw)
 
 
-def _decide_grad(d, dtype_name, machine, kw) -> ExecutionPlan:
+def _decide_grad(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
     """Fused single-pass gradient vs apply + adjoint for an (m × n) shard.
 
     The fused side is the best-ranked fusedgrad config (ONE A read, but its
     t/w/z vector strips force lane-aligned row blocks).  The unfused side is
     two independent streaming passes, each priced on its OWN sublane-aligned
     layout — that asymmetry is the real trade: one read vs two, against
-    lane-padding waste, so tiny row shards (m ≪ 128) pick unfused."""
+    lane-padding waste, so tiny row shards (m ≪ 128) pick unfused.
+
+    With context {"axes": mesh axis sizes} the (f, g) psum is priced too,
+    and a column-chunked overlapped schedule competes with the eager body:
+    one full pass produces z and the residual, then the gradient is built
+    per column segment with each segment's partial psum pipelined behind
+    the next segment's compute (an extra read of A buys comm hiding —
+    RowMatrix.fused_grad implements blocks["chunks"])."""
     import jax.numpy as jnp
     m, n = d["m"], d["n"]
     db = jnp.dtype(dtype_name).itemsize
@@ -254,24 +329,162 @@ def _decide_grad(d, dtype_name, machine, kw) -> ExecutionPlan:
                            hbm_bytes=(mp * np_ + mp + np_) * db,
                            steps=-(-mp // bm))
     unfused_s = 2.0 * machine.time(pass_terms, dtype_name)
-    use_fused = fused_s <= unfused_s
-    # Breakdown of the CHOSEN side: the fused kernel's terms, or both
-    # unfused passes together (2× one pass — max and steps scale alike).
-    chosen_terms = at.cost_terms(
-        "fusedgrad", fused_blocks, {"m": m, "n": n}, dtype_name) \
-        if use_fused else CostTerms(flops=2 * pass_terms.flops,
-                                    hbm_bytes=2 * pass_terms.hbm_bytes,
-                                    steps=2 * pass_terms.steps)
+    axes = _axes(ctx)
+    if not axes:
+        use_fused = fused_s <= unfused_s
+        # Breakdown of the CHOSEN side: the fused kernel's terms, or both
+        # unfused passes together (2× one pass — max and steps scale alike).
+        chosen_terms = at.cost_terms(
+            "fusedgrad", fused_blocks, {"m": m, "n": n}, dtype_name) \
+            if use_fused else CostTerms(flops=2 * pass_terms.flops,
+                                        hbm_bytes=2 * pass_terms.hbm_bytes,
+                                        steps=2 * pass_terms.steps)
+        return ExecutionPlan(
+            op="grad", choice="fused" if use_fused else "unfused",
+            blocks=dict(fused_blocks) if use_fused else {},
+            cost_s=min(fused_s, unfused_s),
+            breakdown=machine.breakdown(chosen_terms, dtype_name),
+            alternatives=tuple(sorted((("fused", fused_s),
+                                       ("unfused", unfused_s)),
+                                      key=lambda t: t[1])),
+            notes=("unfused = 2 sublane-padded streaming passes; "
+                   "fused = 1 lane-padded pass",), **kw)
+
+    # Distributed: every alternative ends in a psum of g (n·db) + f (4 B).
+    coll = machine.collective(n * db + 4.0, axes, dtype_name)
+    fused_terms = at.cost_terms("fusedgrad", fused_blocks,
+                                {"m": m, "n": n}, dtype_name)
+    cands = [("fused", 1, fused_s + coll["comm_s"],
+              _with_comm(fused_terms, coll))]
+    pre = machine.time(pass_terms, dtype_name)
+    for c in _chunk_counts(n):
+        if c == 1:
+            continue
+        seg = -(-n // c)
+        segp = at._rup(seg, LANE)
+        chunk_terms = CostTerms(flops=2.0 * mp * segp,
+                                hbm_bytes=(mp * segp + mp + segp) * db,
+                                steps=-(-mp // bm))
+        cc = machine.collective(seg * db, axes, dtype_name)
+        total = _pipeline_s(machine.time(chunk_terms, dtype_name),
+                            cc["comm_s"], c, pre=pre)
+        agg = CostTerms(
+            flops=pass_terms.flops + c * chunk_terms.flops,
+            hbm_bytes=pass_terms.hbm_bytes + c * chunk_terms.hbm_bytes,
+            steps=pass_terms.steps + c * chunk_terms.steps,
+            comm_bytes=c * cc["comm_bytes"], comm_steps=c * cc["comm_steps"])
+        cands.append((f"fused-overlap{c}", c, total, agg))
+    unfused_terms = _with_comm(
+        CostTerms(flops=2 * pass_terms.flops,
+                  hbm_bytes=2 * pass_terms.hbm_bytes,
+                  steps=2 * pass_terms.steps), coll)
+    cands.append(("unfused", 1, unfused_s + coll["comm_s"], unfused_terms))
+    label, chunks, best_s, chosen_terms = min(cands, key=lambda t: t[2])
+    use_fused = label != "unfused"
+    notes = [f"psum({n}·{db}B) over axes={axes}: {coll['algorithm']} "
+             f"all-reduce, {_us(coll['comm_s'])}"]
+    if chunks > 1:
+        notes.append(f"overlap: {chunks} column chunks pipeline each "
+                     "partial psum behind the next chunk's compute "
+                     "(one extra A read)")
     return ExecutionPlan(
         op="grad", choice="fused" if use_fused else "unfused",
-        blocks=dict(fused_blocks) if use_fused else {},
-        cost_s=min(fused_s, unfused_s),
+        blocks={**dict(fused_blocks), "chunks": chunks} if use_fused else {},
+        cost_s=best_s,
         breakdown=machine.breakdown(chosen_terms, dtype_name),
-        alternatives=tuple(sorted((("fused", fused_s),
-                                   ("unfused", unfused_s)),
+        alternatives=tuple(sorted(((lb, s) for lb, _, s, _ in cands),
                                   key=lambda t: t[1])),
-        notes=("unfused = 2 sublane-padded streaming passes; "
-               "fused = 1 lane-padded pass",), **kw)
+        notes=tuple(notes), terms=_terms_dict(chosen_terms), **kw)
+
+
+def _decide_gram(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
+    """Distributed AᵀA for an (m × n) row shard: eager tsgram + one n×n
+    psum, vs C column-segment cross-grams Aᵀ·A[:, seg] whose n×(n/C)
+    partial psums pipeline behind the next segment's compute.  Chunking
+    re-reads A once per segment — it wins only when the modeled collective
+    time dominates that extra memory traffic (pod-scale meshes), so eager
+    stays the dispatch default on small meshes."""
+    m, n = d["m"], d["n"]
+    gram_s, gram_blocks = at.rank("tsgram", {"m": m, "n": n},
+                                  dtype_name, machine=machine)[0]
+    axes = _axes(ctx)
+    # The psum payload is the f32 accumulator, whatever the operand dtype.
+    coll = machine.collective(n * n * 4.0, axes, dtype_name)
+    gram_terms = at.cost_terms("tsgram", gram_blocks,
+                               {"m": m, "n": n}, dtype_name)
+    cands = [("eager", 1, gram_s + coll["comm_s"],
+              _with_comm(gram_terms, coll))]
+    for c in _chunk_counts(n):
+        if c == 1:
+            continue
+        seg = -(-n // c)
+        sk_s, sk_blocks = at.rank("randsketch", {"m": m, "n": n, "r": seg},
+                                  dtype_name, machine=machine)[0]
+        cc = machine.collective(n * seg * 4.0, axes, dtype_name)
+        total = _pipeline_s(sk_s, cc["comm_s"], c)
+        sk_terms = at.cost_terms("randsketch", sk_blocks,
+                                 {"m": m, "n": n, "r": seg}, dtype_name)
+        agg = CostTerms(flops=c * sk_terms.flops,
+                        hbm_bytes=c * sk_terms.hbm_bytes,
+                        steps=c * sk_terms.steps, mxu_util=sk_terms.mxu_util,
+                        comm_bytes=c * cc["comm_bytes"],
+                        comm_steps=c * cc["comm_steps"])
+        cands.append((f"overlap{c}", c, total, agg))
+    label, chunks, best_s, chosen_terms = min(cands, key=lambda t: t[2])
+    notes = [f"psum({n}x{n} f32) over axes={axes}: {coll['algorithm']} "
+             f"all-reduce, {_us(coll['comm_s'])}"]
+    if chunks > 1:
+        notes.append(f"overlap: {chunks} column-segment cross-grams, each "
+                     "partial psum hidden behind the next segment's "
+                     "compute (A re-read per segment)")
+    return ExecutionPlan(
+        op="gram", choice="eager" if chunks == 1 else "overlap",
+        blocks={"chunks": chunks}, cost_s=best_s,
+        breakdown=machine.breakdown(chosen_terms, dtype_name),
+        alternatives=tuple(sorted(((lb, s) for lb, _, s, _ in cands),
+                                  key=lambda t: t[1])),
+        notes=tuple(notes), terms=_terms_dict(chosen_terms), **kw)
+
+
+def _decide_matvec(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
+    """One streaming pass over an (m × n) row shard plus the reduction of
+    its n-vector result (the rmatvec/adjoint psum; context
+    {"reduce": False} prices the psum-free row-space matvec).  The choice
+    names the reduction the link model picks for this mesh shape and
+    payload — ring past the bandwidth break-even, tree under it."""
+    import jax.numpy as jnp
+    m, n = d["m"], d["n"]
+    db = jnp.dtype(dtype_name).itemsize
+    mp = at._rup(m, at.sublane(dtype_name))
+    np_ = at._rup(n, LANE)
+    bm = min(512, mp)
+    pass_terms = CostTerms(flops=2.0 * mp * np_,
+                           hbm_bytes=(mp * np_ + mp + np_) * db,
+                           steps=-(-mp // bm))
+    t_pass = machine.time(pass_terms, dtype_name)
+    axes = _axes(ctx)
+    payload = n * db if ctx.get("reduce", True) else 0.0
+    if not axes or not payload:
+        return ExecutionPlan(
+            op="matvec", choice="local", blocks={}, cost_s=t_pass,
+            breakdown=machine.breakdown(pass_terms, dtype_name),
+            alternatives=(("local", t_pass),),
+            notes=("no reduction: result stays shard-resident",),
+            terms=_terms_dict(pass_terms), **kw)
+    priced = {algo: machine.collective(payload, axes, dtype_name,
+                                       algorithm=algo)
+              for algo in ("ring", "tree")}
+    choice = min(priced, key=lambda a: priced[a]["comm_s"])
+    chosen_terms = _with_comm(pass_terms, priced[choice])
+    return ExecutionPlan(
+        op="matvec", choice=choice, blocks={},
+        cost_s=t_pass + priced[choice]["comm_s"],
+        breakdown=machine.breakdown(chosen_terms, dtype_name),
+        alternatives=tuple(sorted(
+            ((a, t_pass + priced[a]["comm_s"]) for a in priced),
+            key=lambda t: t[1])),
+        notes=(f"psum({n}·{db}B) over axes={axes}",),
+        terms=_terms_dict(chosen_terms), **kw)
 
 
 def _decide_bsr_bs(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
@@ -392,6 +605,10 @@ def actual_record(plan: ExecutionPlan, measured_s: float) -> dict:
     if plan.op in KERNEL_OPS and plan.blocks:
         rec.update(calibration_record(plan.op, plan.dims, plan.blocks,
                                       plan.dtype, measured_s))
+    elif plan.terms:
+        # Distributed decision ops carry their raw terms (including the
+        # comm column) on the plan itself — same calibrate() contract.
+        rec.update(dict(plan.terms))
     return rec
 
 

@@ -222,16 +222,36 @@ class TestSolverStructure:
                                    "fused_grad": 0,
                                    "fused_grad_multi": 0}, counting.counts
 
-    def test_accelerated_variants_keep_cached_path(self):
-        """acc* gradient points are momentum combinations — the cached-image
-        trick already makes their evaluation free, so fused="auto" must not
-        engage."""
+    def test_accelerated_quad_takes_affine_fused_path(self):
+        """acc* over a quadratic smooth rides the affine-u engine: every
+        traced A-contact is a fused_grad — two seeds (u_b, x0) plus one per
+        traced attempt site (first attempt + backtracking body), and zero
+        apply/adjoint calls."""
         smooth, linop = self._composite()
         counting = CountingLinop(linop)
         _, info = tfocs(smooth, counting, ProxZero(), jnp.zeros(16),
                         TfocsOptions(max_iters=3, accel=True,
                                      backtracking=True, fused="auto"))
+        assert counting.counts == {"apply": 0, "adjoint": 0,
+                                   "fused_grad": 4,
+                                   "fused_grad_multi": 0}, counting.counts
+        assert info["plan"] == "fused_affine"
+        assert bool(np.asarray(info["fused"]))
+
+    def test_accelerated_non_quad_keeps_cached_path(self):
+        """The affine decomposition needs ∇f linear in the image — logistic
+        acc* must stay on the cached apply+adjoint engine."""
+        _, linop = self._composite()
+        rng = np.random.default_rng(5)
+        y = (rng.random(120) > 0.5).astype(np.float32) * 2 - 1
+        smooth = SmoothLogLoss(y=linop.pad_data(jnp.asarray(y)),
+                               weights=linop.row_weights())
+        counting = CountingLinop(linop)
+        _, info = tfocs(smooth, counting, ProxZero(), jnp.zeros(16),
+                        TfocsOptions(max_iters=3, accel=True,
+                                     backtracking=True, fused="auto"))
         assert counting.counts["fused_grad"] == 0
+        assert info["plan"] == "cached"
         assert not bool(np.asarray(info["fused"]))
 
     def test_fused_true_on_non_separable_raises(self):

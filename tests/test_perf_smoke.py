@@ -59,6 +59,32 @@ def test_planner_decisions_stable_on_cpu():
 
 
 @pytest.mark.perf_smoke
+def test_eager_dispatch_at_tiny_shapes():
+    """Overlap canary: at shapes where one kernel call is cheaper than any
+    pipeline (tiny shard, small psum), the planner must keep the eager
+    single-dispatch path — chunks=1 — even with topology context, and a
+    force-chunked call must still be bit-identical to eager (so a wrong
+    auto decision could never corrupt results, only waste dispatches)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.distmat import RowMatrix
+    from repro.launch import machine, planner
+
+    p = planner.plan("gram", {"m": 4096, "n": 128}, machine=machine.V5E,
+                     context={"axes": (8,)})
+    assert p.choice == "eager" and p.blocks["chunks"] == 1, p.explain()
+    g = planner.plan("grad", {"m": 4096, "n": 128}, machine=machine.V5E,
+                     context={"axes": (8,)})
+    assert g.blocks["chunks"] == 1, g.explain()
+
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(48, 16)).astype(np.float32)
+    rm = RowMatrix.create(jnp.asarray(A))
+    assert np.array_equal(np.asarray(rm.gram(chunks=4)),
+                          np.asarray(rm.gram(chunks=1)))
+
+
+@pytest.mark.perf_smoke
 def test_telemetry_off_is_free_and_result_identical():
     """Telemetry canary: with no recorder installed every span/metric call
     resolves to shared null singletons (no per-call allocation), and a

@@ -256,6 +256,136 @@ class TestMachineModel:
         assert got.source == "calibrated"
         assert got.hbm_eff == fitted.hbm_eff
 
+class TestCommPlanning:
+    """Collective-aware pricing: psum terms in the plan, topology-keyed
+    ring/tree selection, overlap break-even, and the link_eff fit."""
+
+    def test_collective_cost_formulas(self):
+        assert machine.collective_cost(1, 4096.0, "ring") == (0.0, 0.0)
+        b, s = machine.collective_cost(8, 1024.0, "ring")
+        assert b == 2.0 * 1024.0 * 7 / 8 and s == 14.0
+        b, s = machine.collective_cost(8, 1024.0, "tree")
+        assert b == 2.0 * 1024.0 * 3 and s == 6.0
+        with pytest.raises(ValueError):
+            machine.collective_cost(4, 1.0, "butterfly")
+
+    def test_ring_tree_selection_by_payload(self):
+        """Ring past the bandwidth break-even, tree under it (latency)."""
+        big = machine.V5E.collective(4 * 2**20, (8,), "float32")
+        small = machine.V5E.collective(256.0, (256,), "float32")
+        assert big["algorithm"] == "ring"
+        assert small["algorithm"] == "tree"
+        # multi-axis reduction sums per-axis costs
+        two = machine.V5E.collective(4 * 2**20, (16, 16), "float32")
+        one = machine.V5E.collective(4 * 2**20, (16,), "float32")
+        assert two["comm_s"] > one["comm_s"]
+
+    def test_comm_fraction_grows_with_device_count(self):
+        """Fixed global shape spread over more devices: the shard shrinks,
+        the psum payload does not — the comm share of the modeled serial
+        time must rise monotonically (and be absent on one device)."""
+        fracs = []
+        for dev in (1, 4, 16, 64):
+            p = planner.plan("gram", {"m": 1_000_000 // dev, "n": 1024},
+                             machine=machine.V5E,
+                             context={"axes": (dev,)})
+            comm = p.breakdown.get("comm_s", 0.0)
+            serial = (max(p.breakdown["compute_s"], p.breakdown["memory_s"])
+                      + p.breakdown["step_s"] + comm)
+            fracs.append(comm / serial)
+        assert fracs[0] == 0.0
+        assert all(b > a for a, b in zip(fracs, fracs[1:])), fracs
+        assert fracs[-1] > 0.1
+
+    def test_gram_overlap_past_break_even(self):
+        """Chunked overlap engages only once the modeled psum is worth
+        hiding: eager on few devices, overlapped on many."""
+        few = planner.plan("gram", {"m": 1_000_000 // 4, "n": 1024},
+                           machine=machine.V5E, context={"axes": (4,)})
+        many = planner.plan("gram", {"m": 1_000_000 // 64, "n": 1024},
+                            machine=machine.V5E, context={"axes": (64,)})
+        assert few.choice == "eager" and few.blocks["chunks"] == 1
+        assert many.choice == "overlap" and many.blocks["chunks"] > 1
+        # the decision is the argmin of its own alternatives
+        alt = dict(many.alternatives)
+        assert many.cost_s == min(alt.values())
+
+    def test_grad_plan_without_axes_is_unchanged(self):
+        """No topology context → the seed's compute-only fused/unfused
+        decision, bit-identical: no comm terms, no chunks knob."""
+        p = planner.plan("grad", {"m": 10000, "n": 1024})
+        assert p.choice == "fused"
+        assert "chunks" not in p.blocks
+        assert p.breakdown.get("comm_s", 0.0) == 0.0
+
+    def test_grad_plan_with_axes_prices_psum(self):
+        p = planner.plan("grad", {"m": 4096, "n": 1024},
+                         machine=machine.V5E,
+                         context={"axes": (16, 16)})
+        assert p.choice in ("fused", "unfused")
+        assert p.breakdown["comm_s"] > 0.0
+        assert p.terms["comm_bytes"] > 0.0
+        assert "chunks" in p.blocks
+        text = p.explain()
+        assert "comm:" in text and "% of modeled serial time" in text
+
+    def test_matvec_plan_topology(self):
+        p = planner.plan("matvec", {"m": 65536, "n": 1024},
+                         machine=machine.V5E, context={"axes": (16, 16)})
+        assert p.choice in ("ring", "tree")
+        assert p.breakdown["comm_s"] > 0.0
+        assert dict(p.alternatives).keys() == {"ring", "tree"}
+        local = planner.plan("matvec", {"m": 65536, "n": 1024},
+                             machine=machine.V5E,
+                             context={"axes": (16, 16), "reduce": False})
+        assert local.choice == "local"
+        assert local.breakdown.get("comm_s", 0.0) == 0.0
+
+    def test_calibrate_fits_link_eff_and_persists(self, tmp_path):
+        """Synthetic timings from a machine with 4× slower links: the comm
+        column joins the fit, link_eff lands near 0.25, and the value
+        survives the machine.json round-trip."""
+        base = machine.V5E
+        records = []
+        for payload, axes in [(4 * 2**20, (8,)), (2**20, (16,)),
+                              (16 * 2**20, (4,)), (8 * 2**20, (32,))]:
+            coll = base.collective(float(payload), axes, "float32")
+            slow_s = (coll["comm_bytes"] / (base.link_bw / 4.0)
+                      + coll["comm_steps"] * base.link_latency_s)
+            records.append({"dtype": "float32", "flops": 0.0,
+                            "hbm_bytes": 0.0, "steps": 0.0, "mxu_util": 1.0,
+                            "comm_bytes": coll["comm_bytes"],
+                            "comm_steps": coll["comm_steps"],
+                            "measured_s": slow_s})
+        fitted = base.calibrate(records)
+        assert fitted.link_eff["float32"] == pytest.approx(0.25, rel=0.05)
+        assert fitted.error(records) < base.error(records)
+
+        machine.save_calibration("cpu", fitted,
+                                 path=tmp_path / "machine.json")
+        loaded = json.loads((tmp_path / "machine.json").read_text())
+        got = machine.MachineModel.from_dict(loaded["backends"]["cpu"])
+        assert got.link_eff == fitted.link_eff
+        assert got.link_latency_s == fitted.link_latency_s
+
+    def test_comm_free_records_reproduce_two_term_fit(self):
+        """A compute-only sweep must fit exactly as before the comm column
+        existed (the column only joins when records exercise it)."""
+        records = []
+        for kernel, dims, blocks in [
+            ("gemm", {"m": 2048, "k": 2048, "n": 2048},
+             {"bm": 256, "bn": 256, "bk": 512}),
+            ("tsgram", {"m": 65536, "n": 512}, {"bm": 512}),
+        ]:
+            records.append(planner.calibration_record(
+                kernel, dims, blocks, jnp.float32,
+                at.model_time(kernel, blocks, dims, jnp.float32,
+                              machine=machine.V5E) * 2.0))
+        fitted = machine.V5E.calibrate(records)
+        assert fitted.link_eff == {}
+
+
+class TestMachineModelCalibrated:
     def test_plan_prefers_calibrated_constants(self, tmp_path, monkeypatch):
         """After a calibration is persisted next to the autotune cache,
         plan() on that backend reports calibrated=True and prices with the

@@ -242,7 +242,7 @@ class TestScheduler:
         got = np.asarray(srv.result(s1).factors[1])
         np.testing.assert_allclose(got, sv, rtol=1e-3, atol=1e-3)
         assert srv.result(s2).factors[0].shape == (n, n)
-        assert srv.result(s3).info["plan"] == "cached"
+        assert srv.result(s3).info["plan"] == "fused_affine"
         assert srv.stats["oneshot"] == 3
         for rid in (s0, s1, s2, s3):
             info = srv.result(rid).info
