@@ -1,0 +1,203 @@
+"""Low-precision benchmark: bytes, wall-clock and solution error by format.
+
+    PYTHONPATH=src python -m benchmarks.bench_precision
+
+Three sections, each emitting ``BENCH {json}`` lines (run.py --only
+precision):
+
+  1. **storage sweep** — the bandwidth-bound fused-grad shape priced by the
+     planner's precision sweep, f32 vs bf16 storage: modeled seconds (V5E
+     roofline at each byte width), measured wall time, and the actual
+     operand bytes.  The acceptance floor (bf16 ≥ 1.5× over f32) is a
+     MODELED property of the reference accelerator: on the CI host XLA CPU
+     upcasts bf16 tiles before computing, so the measured ratio hovers near
+     1× — the sweep's job is to expose that gap as data, exactly like
+     bench_collectives does for link time.
+
+  2. **Figure-1 family** — every (method, precision) pair through
+     ``api.solve`` on one shared problem: wall time, iterations, reported
+     precision, per-pass wire bytes (f32 vs the int8+scale compressed
+     psum), and solution error against the f32 reference — the
+     speedup-vs-accuracy table the quickstart quotes.
+
+  3. **int8 BlockELL** — a block-sparse operand stored exact vs quantized:
+     actual stored bytes (data + scales), matvec wall time, and operator
+     error, the storage side of the sparse_matmul precision decision.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core.distmat import RowMatrix, SparseRowMatrix
+from repro.core.tfocs.linop import LinopMatrix
+from repro.core.tfocs.smooth import SmoothQuad, row_separable
+from repro.launch import machine, planner, telemetry
+
+# The bandwidth-bound fused-grad shape of the planner goldens: wide enough
+# that the A-stream dominates and the precision sweep picks bf16 at 1e-4.
+STORAGE_SHAPE = (8192, 2048)
+
+# Figure-1 family problem (small enough for CI, ill-conditioned enough
+# that precision differences are visible in the iterates).
+FAMILY_SHAPE = (1024, 128)
+FAMILY = [("gra", "f32"), ("gra", "bf16"), ("gra", "psum8"),
+          ("acc_b", "f32"), ("acc_b", "bf16"),
+          ("acc_rb", "f32"), ("acc_rb", "bf16"),
+          ("lbfgs", "f32"), ("lbfgs", "bf16")]
+
+
+def _fused_runner(A, store_dtype):
+    rm = RowMatrix.create(A, store_dtype=store_dtype)
+    lin = LinopMatrix(rm)
+    sep = row_separable(SmoothQuad(lin.pad_data(
+        jnp.zeros(A.shape[0], jnp.float32)), lin.row_weights()))
+    f = jax.jit(lambda x: lin.fused_grad(x, sep))
+    return f, rm
+
+
+def storage_sweep(reps: int) -> list[tuple[str, float, str]]:
+    m, n = STORAGE_SHAPE
+    backend = jax.default_backend()
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+
+    plan = planner.plan("grad", {"m": m, "n": n}, machine=machine.V5E,
+                        context={"tol": 1e-4, "axes": (8,)})
+    alt = dict(plan.alternatives)
+    modeled = {"f32": alt["precision:f32"], "bf16": alt["precision:bf16"]}
+
+    rows, meas, opbytes = [], {}, {}
+    for dt, lbl in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16")):
+        f, rm = _fused_runner(A, dt)
+        jax.block_until_ready(f(x))
+        meas[lbl] = telemetry.timeit(
+            lambda: jax.block_until_ready(f(x)), reps=reps,
+            warmup=1).median_s
+        opbytes[lbl] = int(rm.rows.size) * rm.rows.dtype.itemsize
+
+    sp_model = modeled["f32"] / modeled["bf16"]
+    sp_meas = meas["f32"] / meas["bf16"]
+    print("BENCH", json.dumps({
+        "bench": "precision_storage", "backend": backend,
+        "m": m, "n": n, "planner_pick": plan.precision,
+        "operand_bytes_f32": opbytes["f32"],
+        "operand_bytes_bf16": opbytes["bf16"],
+        "modeled_us_f32": round(modeled["f32"] * 1e6, 3),
+        "modeled_us_bf16": round(modeled["bf16"] * 1e6, 3),
+        "measured_us_f32": round(meas["f32"] * 1e6, 1),
+        "measured_us_bf16": round(meas["bf16"] * 1e6, 1),
+        "speedup_modeled": round(sp_model, 3),
+        "speedup_measured": round(sp_meas, 3),
+        "meets_1p5x_modeled": sp_model >= 1.5}, sort_keys=True))
+    rows.append(("precision_fusedgrad_bf16", meas["bf16"] * 1e6,
+                 f"speedup_modeled={sp_model:.2f};"
+                 f"speedup_measured={sp_meas:.2f};"
+                 f"bytes={opbytes['bf16']}/{opbytes['f32']}"))
+    return rows
+
+
+def family_sweep(reps: int) -> list[tuple[str, float, str]]:
+    m, n = FAMILY_SHAPE
+    backend = jax.default_backend()
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    xs = rng.normal(size=n).astype(np.float32)
+    b = (A @ xs + 0.01 * rng.normal(size=m)).astype(np.float32)
+    M = RowMatrix.create(A)
+    L = float(np.linalg.norm(A, 2) ** 2)
+    kw = dict(loss="quad", tol=1e-5, max_iters=400, L0=L)
+
+    refs = {}
+    rows = []
+    for method, prec in FAMILY:
+        req = api.SolveRequest(A=M, b=b, method=method, precision=prec,
+                               **kw)
+        res = api.solve(req)       # warm the jit before timing
+        t = telemetry.timeit(lambda: api.solve(req), reps=reps,
+                             warmup=0).median_s
+        x = np.asarray(res.x)
+        if prec == "f32":
+            refs[method] = x
+        ref = refs[method]
+        err = float(np.linalg.norm(x - ref)
+                    / max(np.linalg.norm(ref), 1e-12))
+        # Per-pass gradient wire bytes: f32 ships n·4; the compressed wire
+        # ships n int8 + one f32 scale via pmax.
+        wire = n * 1 + 4 if res.info["precision"] == "psum8" else n * 4
+        print("BENCH", json.dumps({
+            "bench": "precision_family", "backend": backend,
+            "method": method, "requested": prec,
+            "ran": res.info["precision"],
+            "iterations": int(res.info["iterations"]),
+            "converged": bool(res.info["converged"]),
+            "wire_bytes_per_pass": wire,
+            "measured_us": round(t * 1e6, 1),
+            "solution_err_vs_f32": round(err, 8)}, sort_keys=True))
+        rows.append((f"precision_{method}_{prec}", t * 1e6,
+                     f"ran={res.info['precision']};err={err:.2e};"
+                     f"iters={int(res.info['iterations'])}"))
+    return rows
+
+
+def bsr_sweep(reps: int) -> list[tuple[str, float, str]]:
+    backend = jax.default_backend()
+    m, n, bs = 2048, 512, 64
+    rng = np.random.default_rng(2)
+    mask = rng.random((m // bs, n // bs)) < 0.15
+    dense = (np.kron(mask, np.ones((bs, bs)))
+             * rng.normal(size=(m, n))).astype(np.float32)
+    v = jnp.asarray(rng.normal(size=n), jnp.float32)
+
+    rows = []
+    stats = {}
+    for q, lbl in (("none", "f32"), ("int8", "int8")):
+        srm = SparseRowMatrix.from_dense(dense, bs=bs, quantize=q)
+        nbytes = int(srm.data.size) * srm.data.dtype.itemsize
+        if srm.scales is not None:
+            nbytes += int(srm.scales.size) * srm.scales.dtype.itemsize
+        f = jax.jit(srm.matvec)
+        jax.block_until_ready(f(v))
+        t = telemetry.timeit(lambda: jax.block_until_ready(f(v)),
+                             reps=reps, warmup=1).median_s
+        got = np.asarray(f(v))[:m]
+        stats[lbl] = (t, nbytes, got)
+    ref = dense @ np.asarray(v)
+    err = float(np.abs(stats["int8"][2] - ref).max()
+                / max(np.abs(ref).max(), 1e-12))
+    print("BENCH", json.dumps({
+        "bench": "precision_bsr_int8", "backend": backend,
+        "m": m, "n": n, "bs": bs,
+        "stored_bytes_f32": stats["f32"][1],
+        "stored_bytes_int8": stats["int8"][1],
+        "bytes_ratio": round(stats["f32"][1] / stats["int8"][1], 3),
+        "measured_us_f32": round(stats["f32"][0] * 1e6, 1),
+        "measured_us_int8": round(stats["int8"][0] * 1e6, 1),
+        "matvec_rel_err": round(err, 6)}, sort_keys=True))
+    rows.append(("precision_bsr_int8", stats["int8"][0] * 1e6,
+                 f"bytes={stats['int8'][1]}/{stats['f32'][1]};"
+                 f"err={err:.2e}"))
+    return rows
+
+
+def run(*, reps: int = 5) -> list[tuple[str, float, str]]:
+    return (storage_sweep(reps) + family_sweep(max(reps // 2, 1))
+            + bsr_sweep(reps))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+    for name, us, derived in run(reps=args.reps):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

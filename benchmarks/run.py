@@ -9,7 +9,10 @@ emits ``BENCH {json}`` lines and refreshes the persistent config cache;
 planner = execution-planner golden decisions + machine-model calibration
 from measured timings, persisted next to the autotune cache;
 collectives = modeled-vs-measured psum time by payload size and device
-count plus the link_eff fit demo, BENCH json only — never persisted).
+count plus the link_eff fit demo, BENCH json only — never persisted;
+precision = bytes/wall-clock/solution-error by storage and wire format —
+f32 vs bf16 storage, int8 BlockELL, compressed int8 psums — across the
+Figure-1 family, BENCH json only).
 bench_optim additionally emits ``BENCH {json}`` lines for the fused-vs-
 unfused gradient hot path (wall time, iterations/sec, counted A-passes
 per attempt: 2 unfused → 1 fused); serve = the solver serving frontend
@@ -30,12 +33,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single suite: "
                          "svd|optim|gemm|sparse|autotune|planner|serve|"
-                         "collectives")
+                         "collectives|precision")
     args = ap.parse_args()
 
     from benchmarks import (bench_svd, bench_optim, bench_gemm, bench_sparse,
                             bench_autotune, bench_planner, bench_serve,
-                            bench_collectives)
+                            bench_collectives, bench_precision)
     suites = {
         "svd": lambda: bench_svd.run(),
         "optim": lambda: bench_optim.run(full=args.full),
@@ -45,6 +48,7 @@ def main() -> None:
         "planner": lambda: bench_planner.run(),
         "serve": lambda: bench_serve.run(full=args.full),
         "collectives": lambda: bench_collectives.run(),
+        "precision": lambda: bench_precision.run(),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

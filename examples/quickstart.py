@@ -105,6 +105,52 @@ print(f"fused gra: {int(info_g['iterations'])} iters "
       f"(fused path: {bool(info_g['fused'])}, "
       f"one A-pass per backtracking attempt)")
 
+# --- Low-precision compute: bytes are the bottleneck ----------------------
+# The A-stream dominates every kernel above, so moving fewer bytes is the
+# one optimization that compounds: RowMatrix can STORE its shards in bf16
+# (or fp8) while every kernel upcasts tiles on-chip and accumulates in f32;
+# SparseRowMatrix can quantize BlockELL data to int8 with per-block scales;
+# and the fused-gradient psum can ship int8 payloads with error feedback
+# ("psum8"), so nothing is lost across iterations.  Measured on the
+# benchmark shapes (PYTHONPATH=src python -m benchmarks.run --only
+# precision):
+#
+#   format      bytes moved      modeled speedup   solution error vs f32
+#   bf16 store  2x fewer         1.86x (V5E)       ~5e-4   (at tol 1e-5)
+#   psum8 wire  ~4x fewer/pass   comm-bound wins   ~1e-7   (EF-corrected)
+#   int8 BSR    4.0x fewer       bandwidth-bound   ~7e-3   (operator quant)
+#
+# The solver front door prices this per-solve: precision="auto" (the
+# default) asks the planner, which only admits a format when its guard is
+# below the requested tolerance (bf16 needs tol ≥ 1e-5, int8 ≥ 1e-3,
+# psum8 ≥ 1e-6) AND the modeled byte savings clear a floor.  Every solve
+# reports what actually ran:
+from repro import api
+
+L0 = float(np.linalg.norm(A, 2) ** 2)
+r32 = api.solve(api.SolveRequest(A=rm, b=b, loss="quad", method="gra",
+                                 tol=1e-9, max_iters=300, L0=L0))
+rlo = api.solve(api.SolveRequest(A=rm, b=b, loss="quad", method="gra",
+                                 tol=1e-4, max_iters=300, L0=L0,
+                                 precision="bf16"))   # or "auto"/"psum8"
+drift = float(jnp.linalg.norm(rlo.x - r32.x)
+              / jnp.linalg.norm(r32.x))
+print(f"\nprecision: tol=1e-9 ran {r32.info['precision']}, "
+      f"forced bf16 ran {rlo.info['precision']} "
+      f"(drift vs f32: {drift:.1e})")
+
+# store_dtype=f32 is BIT-identical to the unquantized path, so flipping
+# precision off is always safe; rm.astype_store(jnp.bfloat16) converts a
+# live matrix.  The planner exposes the same decision offline — pass the
+# solve tolerance in the context and explain() prints the admitted
+# formats, the modeled bytes of each, and what the pick saved:
+#
+#     p = planner.plan("grad", {"m": 8192, "n": 2048}, machine=machine.V5E,
+#                      context={"tol": 1e-4, "axes": (8,)})
+#     p.precision        -> "bf16"
+#     p.explain()        -> "... precision: bf16 (saved 33554432 modeled
+#                            bytes vs f32)"
+
 # --- Planning & calibration -----------------------------------------------
 # Every dispatch decision above — kernel block configs, BSR-vs-dense,
 # fused-vs-unfused, the SVD mode — went through ONE code path: the

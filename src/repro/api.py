@@ -101,6 +101,11 @@ class SolveRequest:
     max_iters: int = 200
     L0: float = 1.0               # initial Lipschitz estimate (1/step)
     x0: Any = None
+    # Compute/wire precision: "auto" lets the planner's precision sweep
+    # pick {f32, bf16 storage, int8-compressed psum} with `tol` as the
+    # error guard (see TfocsOptions.precision); "f32"/"bf16"/"psum8"
+    # force the choice.  Result.info["precision"] reports what ran.
+    precision: str = "auto"
     # fault tolerance / resumability (see core.optim.elastic):
     deadline_s: float | None = None     # wall budget; past it → best iterate
     checkpoint_dir: str | None = None   # periodic resumable snapshots
@@ -139,6 +144,9 @@ class SolveRequest:
                       exclusive=True, optional=True)
         _check_scalar("checkpoint_every", self.checkpoint_every, minimum=0,
                       exclusive=True)
+        if self.precision not in ("auto", "f32", "bf16", "psum8"):
+            raise ValueError("precision must be auto | f32 | bf16 | psum8, "
+                             f"got {self.precision!r}")
         if self.checkpoint_dir is not None:
             if self.problem is not None or self.smooth is not None \
                     or self.prox is not None:
@@ -322,7 +330,7 @@ def _solve(req: SolveRequest, *, fused: bool | str = "auto") -> Result:
     x0 = jnp.zeros(linop.in_shape, jnp.float32) if req.x0 is None \
         else jnp.asarray(req.x0, jnp.float32)
     opts = TfocsOptions(max_iters=req.max_iters, tol=req.tol, L0=req.L0,
-                        fused=fused)
+                        fused=fused, precision=req.precision)
     if req.method == "lbfgs" and not isinstance(prox, ProxZero):
         raise ValueError("method='lbfgs' needs reg='none' (fold the "
                          "regularizer into a smooth loss)")

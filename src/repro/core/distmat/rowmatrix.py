@@ -63,17 +63,42 @@ class RowMatrix(T.DistMatrix):
     # -- construction ------------------------------------------------------
     @staticmethod
     def create(rows: Array, mesh: Mesh | None = None,
-               row_axes: Sequence[str] | None = None) -> "RowMatrix":
+               row_axes: Sequence[str] | None = None,
+               store_dtype=None) -> "RowMatrix":
+        """`store_dtype` (bf16/fp8 where the platform supports it) keeps
+        the sharded residency at reduced width; every compute path upcasts
+        tiles on-chip and accumulates float32, so results come back at the
+        logical `out_dtype` (f32 for sub-f32 storage)."""
         mesh = mesh or T.single_device_mesh()
         row_axes = tuple(row_axes) if row_axes else T.row_axes_for(mesh)
         nshards = T.axes_size(mesh, row_axes)
-        padded, m = T.pad_rows(jnp.asarray(rows), nshards)
+        rows = jnp.asarray(rows)
+        if store_dtype is not None:
+            rows = rows.astype(store_dtype)
+        padded, m = T.pad_rows(rows, nshards)
         padded = T.put(padded, NamedSharding(mesh, P(row_axes, None)))
         return RowMatrix(rows=padded, n_rows=m, mesh=mesh, row_axes=row_axes)
 
     @property
     def shape(self) -> tuple[int, int]:
         return (self.n_rows, self.rows.shape[1])
+
+    @property
+    def out_dtype(self):
+        """Logical result dtype: float32 when storage is sub-f32 (bf16/
+        fp8) — low-precision residency never narrows the math the caller
+        sees."""
+        d = self.rows.dtype
+        return jnp.dtype(jnp.float32) if d.itemsize < 4 else d
+
+    def astype_store(self, dtype) -> "RowMatrix":
+        """Recast the sharded storage (the planner's bf16 pick lands
+        here).  Row padding and sharding are preserved; identity when the
+        dtype already matches."""
+        dtype = jnp.dtype(dtype)
+        if dtype == self.rows.dtype:
+            return self
+        return replace(self, rows=self.rows.astype(dtype))
 
     @property
     def _spec(self) -> P:
@@ -110,7 +135,7 @@ class RowMatrix(T.DistMatrix):
 
         def body():
             start = _shard_index(axes) * local
-            return ((start + jnp.arange(local)) < m).astype(self.rows.dtype)
+            return ((start + jnp.arange(local)) < m).astype(self.out_dtype)
 
         return self._smap(body, in_specs=(), out_specs=P(self.row_axes))()
 
@@ -159,7 +184,7 @@ class RowMatrix(T.DistMatrix):
                              out_specs=P())(self.rows)
             sp.sync_on(out)
         _record_collective(plan, sp, collective="psum", chunks=c)
-        return out.astype(self.rows.dtype)
+        return out.astype(self.out_dtype)
 
     def matvec(self, v: Array) -> Array:
         """A v with v replicated (driver) → row-sharded result (cluster)."""
@@ -187,8 +212,16 @@ class RowMatrix(T.DistMatrix):
         _record_collective(plan, sp, collective="psum")
         return out
 
-    def fused_grad(self, x: Array, smooth, *,
-                   chunks: int | str = "auto") -> tuple[Array, Array, Array]:
+    def init_psum_residual(self) -> Array:
+        """Zeroed per-shard f32 error-feedback residual for the compressed
+        ("psum8") fused_grad reduction: one (n,) row per row shard, laid
+        out P(row_axes, None) so each shard owns exactly its own row."""
+        nshards = T.axes_size(self.mesh, self.row_axes)
+        z = jnp.zeros((nshards, self.rows.shape[1]), jnp.float32)
+        return T.put(z, NamedSharding(self.mesh, P(self.row_axes, None)))
+
+    def fused_grad(self, x: Array, smooth, *, chunks: int | str = "auto",
+                   residual: Array | None = None):
         """(f(Ax), Aᵀ∇f(Ax), Ax) in ONE streaming pass over the shard — the
         paper's one-pass treeAggregate gradient, fused on-chip
         (kernels/fusedgrad).  `smooth` is a row-separable smooth (or its
@@ -205,11 +238,20 @@ class RowMatrix(T.DistMatrix):
         behind the next segment's compute.  Segmented psums of the same
         products make it bit-identical to the eager body; the price (one
         extra read of A) is the planner's break-even, so "auto" stays
-        eager until the modeled collective dominates."""
+        eager until the modeled collective dominates.
+
+        `residual` (from init_psum_residual) switches the gradient psum to
+        the compressed int8 wire (train.compression.psum_int8): shards
+        quantize their partials against a shared pmax'd scale, the
+        all-reduce ships int8, and the quantization error is carried in
+        the returned residual for re-injection next call.  Returns a
+        4-tuple (f, g, z, new_residual) in that mode."""
         from repro.kernels import fusedgrad as _fg
         from repro.kernels import ops as _ops
         from repro.launch import telemetry as _tel
+        from repro.train import compression as _comp
         axes = self.row_axes
+        nshards = T.axes_size(self.mesh, self.row_axes)
         kind, t, w, prm = T.row_separable_inputs(smooth, self.rows.shape[0],
                                                  self._row_mask)
         x = jnp.asarray(x)
@@ -219,36 +261,62 @@ class RowMatrix(T.DistMatrix):
         c = self._resolve_chunks(chunks, plan)
 
         if c <= 1:
-            def body(a, x, t, w):
+            def body(a, x, t, w, *res):
                 f, g, z = _ops.fused_grad(a, x, t, w, loss=kind, param=prm)
+                if res:
+                    g, nres = _comp.psum_int8(g, res[0][0], axes, nshards)
+                    return (jax.lax.psum(f, axes), g, z, nres[None])
                 return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
         else:
             bounds = chunk_bounds(n, c)
 
-            def body(a, x, t, w):
+            def body(a, x, t, w, *res):
                 # Phase 1 — image + row residual, the exact math of
                 # kernels.fusedgrad.fused_grad_jnp (the eager CPU path).
                 z = jnp.dot(a, x, preferred_element_type=jnp.float32)
                 f, r = _fg.row_loss_grad(z, t, w, kind, prm)
-                rc = r.astype(a.dtype)
+                rc = r.astype(a.dtype) if a.dtype == jnp.float32 else r
                 # Phase 2 — per-segment gradient; segment k's partial psum
                 # overlaps segment k+1's contraction.
+                if res:
+                    gs, rs = [], []
+                    for s0, s1 in bounds:
+                        part = jnp.dot(rc, a[:, s0:s1],
+                                       preferred_element_type=jnp.float32)
+                        gseg, rseg = _comp.psum_int8(
+                            part, res[0][0, s0:s1], axes, nshards)
+                        gs.append(gseg)
+                        rs.append(rseg)
+                    return (jax.lax.psum(f, axes), jnp.concatenate(gs), z,
+                            jnp.concatenate(rs)[None])
                 gs = [jax.lax.psum(
                     jnp.dot(rc, a[:, s0:s1],
                             preferred_element_type=jnp.float32)
                     .astype(x.dtype), axes) for s0, s1 in bounds]
                 return jax.lax.psum(f, axes), jnp.concatenate(gs), z
 
+        wire = "int8" if residual is not None else "f32"
         with _tel.current().span("collective.fused_grad", op="grad", n=n,
-                                 chunks=c) as sp:
-            f, g, z = self._smap(
-                body,
-                in_specs=(self._spec, P(), P(self.row_axes),
-                          P(self.row_axes)),
-                out_specs=(P(), P(), P(self.row_axes)))(self.rows, x, t, w)
+                                 chunks=c, wire=wire) as sp:
+            if residual is None:
+                f, g, z = self._smap(
+                    body,
+                    in_specs=(self._spec, P(), P(self.row_axes),
+                              P(self.row_axes)),
+                    out_specs=(P(), P(), P(self.row_axes)))(self.rows, x,
+                                                            t, w)
+                out = (f, g, z)
+            else:
+                f, g, z, nres = self._smap(
+                    body,
+                    in_specs=(self._spec, P(), P(self.row_axes),
+                              P(self.row_axes), self._spec),
+                    out_specs=(P(), P(), P(self.row_axes),
+                               self._spec))(self.rows, x, t, w, residual)
+                out = (f, g, z, nres)
             sp.sync_on(g)
-        _record_collective(plan, sp, collective="psum", chunks=c)
-        return f, g, z
+        _record_collective(plan, sp, collective="psum", chunks=c, wire=wire)
+        return out
 
     def fused_grad_multi(self, x: Array, smooths
                          ) -> tuple[Array, Array, Array]:
@@ -405,7 +473,7 @@ class RowMatrix(T.DistMatrix):
 
         sim = self._smap(body, in_specs=(self._spec, P(), P()),
                          out_specs=P())(self.rows, p, scale)
-        sim = sim.astype(self.rows.dtype)
+        sim = sim.astype(self.out_dtype)
         diag = (norms > 0).astype(sim.dtype)
         sim = sim.at[jnp.arange(n), jnp.arange(n)].set(diag)
         if not return_info:

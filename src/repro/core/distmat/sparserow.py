@@ -108,14 +108,24 @@ class SparseRowMatrix(T.DistMatrix):
     nnz: int
     mesh: Mesh = field(repr=False)
     row_axes: tuple[str, ...] = T.ROW_AXES
+    # Per-stored-block f32 dequantization scales (nbr_pad, ell), sharded
+    # like data — present iff the blocks are int8-quantized (kernels/bsr
+    # quantized mode); None means exact storage.
+    scales: Array | None = None
 
     # -- construction --------------------------------------------------------
     @staticmethod
     def from_dense(a, bs: int | str = "auto", mesh: Mesh | None = None,
                    row_axes: Sequence[str] | None = None, *,
-                   nx_hint: int = 128) -> "SparseRowMatrix":
+                   nx_hint: int = 128, quantize: str = "none",
+                   tol: float = 1e-3) -> "SparseRowMatrix":
         """Driver-scale constructor: block-compress a local dense matrix and
-        scatter contiguous block-row strips across the mesh."""
+        scatter contiguous block-row strips across the mesh.
+
+        `quantize` follows kernels/bsr.BlockELL.from_dense: "int8" stores
+        blocks as int8 with per-block f32 scales, "auto" lets the planner's
+        precision sweep decide whether int8 clears the `tol` guard and
+        pays for itself, "none" keeps exact storage."""
         mesh = mesh or T.single_device_mesh()
         row_axes = tuple(row_axes) if row_axes else T.row_axes_for(mesh)
         nshards = T.axes_size(mesh, row_axes)
@@ -128,11 +138,14 @@ class SparseRowMatrix(T.DistMatrix):
         nbr_pad = _rup(_rup(m, bs) // bs, nshards)
         padded = np.zeros((nbr_pad * bs, n_pad), a.dtype)
         padded[:m, :n] = a
-        bell = _bsr.BlockELL.from_dense(padded, bs)
+        bell = _bsr.BlockELL.from_dense(padded, bs, quantize=quantize,
+                                        tol=tol)
         sh = NamedSharding(mesh, P(row_axes))
         return SparseRowMatrix(T.put(bell.data, sh), T.put(bell.cols, sh),
                                dims=(m, n), nnz=int(np.count_nonzero(a)),
-                               mesh=mesh, row_axes=row_axes)
+                               mesh=mesh, row_axes=row_axes,
+                               scales=(None if bell.scales is None
+                                       else T.put(bell.scales, sh)))
 
     @staticmethod
     def from_entries(row_idx, col_idx, values, shape: tuple[int, int],
@@ -188,19 +201,29 @@ class SparseRowMatrix(T.DistMatrix):
         nshards = T.axes_size(mesh, row_axes)
         nbr_true = _rup(self.dims[0], self.bs) // self.bs
         nbr_pad = _rup(nbr_true, nshards)
-        data, cols = self.data, self.cols
+        data, cols, scales = self.data, self.cols, self.scales
         if nbr_pad <= data.shape[0]:
             data, cols = data[:nbr_pad], cols[:nbr_pad]
+            if scales is not None:
+                scales = scales[:nbr_pad]
         else:
             extra = nbr_pad - data.shape[0]
             data = jnp.concatenate(
                 [data, jnp.zeros((extra,) + data.shape[1:], data.dtype)])
             cols = jnp.concatenate(
                 [cols, jnp.zeros((extra,) + cols.shape[1:], cols.dtype)])
+            if scales is not None:
+                # Padding block-rows hold all-zero blocks: scale 1.0 (the
+                # quantizer's zero-block convention).
+                scales = jnp.concatenate(
+                    [scales, jnp.ones((extra,) + scales.shape[1:],
+                                      scales.dtype)])
         sh = NamedSharding(mesh, P(row_axes))
         return SparseRowMatrix(T.put(data, sh), T.put(cols, sh),
                                dims=self.dims, nnz=self.nnz, mesh=mesh,
-                               row_axes=row_axes)
+                               row_axes=row_axes,
+                               scales=(None if scales is None
+                                       else T.put(scales, sh)))
 
     # -- bookkeeping ---------------------------------------------------------
     @property
@@ -226,6 +249,42 @@ class SparseRowMatrix(T.DistMatrix):
     def block_density(self) -> float:
         """Stored block fraction — the number density-aware dispatch acts on."""
         return self.ell / (self.n_pad // self.bs)
+
+    @property
+    def out_dtype(self):
+        """Logical result dtype: float32 for quantized or sub-f32 storage."""
+        d = self.data.dtype
+        return jnp.dtype(jnp.float32) if (self.scales is not None
+                                          or d.itemsize < 4) else d
+
+    def dequantize(self) -> "SparseRowMatrix":
+        """Exact-f32 copy (identity when storage is already exact) — the
+        cold paths (stats, DIMSUM, materialization) route through this
+        instead of threading scales everywhere."""
+        if self.scales is None:
+            return self
+        data = self.data.astype(jnp.float32) * self.scales[..., None, None]
+        return replace(self, data=data, scales=None)
+
+    def astype_store(self, dtype) -> "SparseRowMatrix":
+        """Recast the stored blocks.  int8 quantizes with per-block f32
+        scales (absmax/127, zero blocks get scale 1.0); any float dtype
+        dequantizes first and recasts.  Sharding is preserved."""
+        if isinstance(dtype, str) and dtype == "int8":
+            dtype = jnp.int8
+        dtype = jnp.dtype(dtype)
+        if dtype == jnp.int8:
+            if self.scales is not None:
+                return self
+            d = self.data.astype(jnp.float32)
+            absmax = jnp.max(jnp.abs(d), axis=(2, 3))
+            scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+            q = jnp.round(d / scales[..., None, None]).astype(jnp.int8)
+            return replace(self, data=q, scales=scales)
+        out = self.dequantize()
+        if dtype == out.data.dtype:
+            return out
+        return replace(out, data=out.data.astype(dtype))
 
     def _smap(self, f, in_specs, out_specs):
         return compat.shard_map(f, mesh=self.mesh, in_specs=in_specs,
@@ -270,10 +329,19 @@ class SparseRowMatrix(T.DistMatrix):
             return int(plan.blocks.get("chunks", 1))
         return max(int(chunks), 1)
 
-    def _local(self, data: Array, cols: Array) -> _bsr.BlockELL:
+    def _local(self, data: Array, cols: Array,
+               scales: Array | None = None) -> _bsr.BlockELL:
         """The shard's BlockELL view (called inside shard_map bodies)."""
         return _bsr.BlockELL(data, cols, (data.shape[0] * self.bs,
-                                          self.n_pad))
+                                          self.n_pad), scales)
+
+    def _scale_ops(self) -> tuple:
+        """Trailing shard_map operand for the quantization scales — empty
+        for exact storage so existing two-operand bodies are unchanged."""
+        return () if self.scales is None else (self.scales,)
+
+    def _scale_specs(self) -> tuple:
+        return () if self.scales is None else (self._dspec,)
 
     def _row_mask(self) -> Array:
         """Row-sharded {0,1} mask of true (non-padding) rows."""
@@ -283,7 +351,7 @@ class SparseRowMatrix(T.DistMatrix):
 
         def body():
             start = _shard_index(axes) * local
-            return ((start + jnp.arange(local)) < m).astype(self.data.dtype)
+            return ((start + jnp.arange(local)) < m).astype(self.out_dtype)
 
         return self._smap(body, in_specs=(), out_specs=P(self.row_axes))()
 
@@ -294,15 +362,17 @@ class SparseRowMatrix(T.DistMatrix):
         use_bsr = self._use_bsr(1, dispatch)
         vp = jnp.pad(jnp.asarray(v), (0, self.n_pad - self.dims[1]))
 
-        def body(data, cols, v):
-            local = self._local(data, cols)
+        def body(data, cols, v, *sc):
+            local = self._local(data, cols, *sc)
             if use_bsr:
                 return _ops.bsr_matvec(local, v)
             return local.to_dense() @ v
 
-        return self._smap(body, in_specs=(self._dspec, self._dspec, P()),
-                          out_specs=P(self.row_axes))(self.data, self.cols,
-                                                      vp)
+        return self._smap(body,
+                          in_specs=(self._dspec, self._dspec, P())
+                          + self._scale_specs(),
+                          out_specs=P(self.row_axes))(
+            self.data, self.cols, vp, *self._scale_ops())
 
     def rmatvec(self, u: Array, *, dispatch: str = "auto") -> Array:
         """Aᵀ u with u row-sharded → replicated (n,) vector (driver)."""
@@ -313,8 +383,8 @@ class SparseRowMatrix(T.DistMatrix):
         if u.shape[0] != self.m_pad:
             u = jnp.pad(u, (0, self.m_pad - u.shape[0]))
 
-        def body(data, cols, u):
-            local = self._local(data, cols)
+        def body(data, cols, u, *sc):
+            local = self._local(data, cols, *sc)
             if use_bsr:
                 out = _ops.bsr_rmatmul(local, u[:, None])[:, 0]
             else:
@@ -322,8 +392,10 @@ class SparseRowMatrix(T.DistMatrix):
             return jax.lax.psum(out, axes)
 
         out = self._smap(body,
-                         in_specs=(self._dspec, self._dspec, P(axes)),
-                         out_specs=P())(self.data, self.cols, u)
+                         in_specs=(self._dspec, self._dspec, P(axes))
+                         + self._scale_specs(),
+                         out_specs=P())(self.data, self.cols, u,
+                                        *self._scale_ops())
         return out[: self.dims[1]]
 
     def multiply_local(self, B: Array, *,
@@ -336,20 +408,31 @@ class SparseRowMatrix(T.DistMatrix):
         use_bsr = self._use_bsr(B.shape[1], dispatch)
         Bp = jnp.pad(B, ((0, self.n_pad - self.dims[1]), (0, 0)))
 
-        def body(data, cols, b):
-            local = self._local(data, cols)
+        def body(data, cols, b, *sc):
+            local = self._local(data, cols, *sc)
             if use_bsr:
                 return _ops.bsr_matmul(local, b)
             return _ops.gemm(local.to_dense(), b, out_dtype=b.dtype)
 
-        out = self._smap(body, in_specs=(self._dspec, self._dspec, P()),
+        out = self._smap(body,
+                         in_specs=(self._dspec, self._dspec, P())
+                         + self._scale_specs(),
                          out_specs=P(self.row_axes, None))(
-            self.data, self.cols, Bp)
+            self.data, self.cols, Bp, *self._scale_ops())
         return RowMatrix(rows=out, n_rows=self.dims[0], mesh=self.mesh,
                          row_axes=self.row_axes)
 
+    def init_psum_residual(self) -> Array:
+        """Zeroed per-shard f32 error-feedback residual for the compressed
+        ("psum8") fused_grad reduction — see RowMatrix.init_psum_residual.
+        Sized to the padded column count (the kernel-facing gradient)."""
+        nshards = T.axes_size(self.mesh, self.row_axes)
+        z = jnp.zeros((nshards, self.n_pad), jnp.float32)
+        return T.put(z, NamedSharding(self.mesh, P(self.row_axes, None)))
+
     def fused_grad(self, x: Array, smooth, *, dispatch: str = "auto",
-                   chunks: int | str = "auto") -> tuple[Array, Array, Array]:
+                   chunks: int | str = "auto",
+                   residual: Array | None = None):
         """(f(Ax), Aᵀ∇f(Ax), Ax) in one pass over the stored blocks — the
         BSR form of the fused composite gradient (kernels/fusedgrad): z for
         a block-row accumulates while its blocks are staged in VMEM, the
@@ -367,13 +450,20 @@ class SparseRowMatrix(T.DistMatrix):
         kernel exists for — and pipelines the gradient *reduction* in
         column segments instead, so successive partial psums overlap each
         other and the f psum.  Both arms are bit-identical to eager
-        (segmented psums of the same per-shard values)."""
+        (segmented psums of the same per-shard values).
+
+        `residual` (from init_psum_residual) switches the gradient psums
+        to the compressed int8 wire with error feedback — see
+        RowMatrix.fused_grad; returns (f, g, z, new_residual)."""
         from repro.kernels import fusedgrad as _fg
         from repro.kernels import ops as _ops
         from repro.launch import telemetry as _tel
+        from repro.train import compression as _comp
         from .rowmatrix import _record_collective, chunk_bounds
         use_bsr = self._use_bsr(1, dispatch)
         axes = self.row_axes
+        nshards = T.axes_size(self.mesh, self.row_axes)
+        quant = self.scales is not None
         n = self.dims[1]
         kind, t, w, prm = T.row_separable_inputs(smooth, self.m_pad,
                                                  self._row_mask)
@@ -385,41 +475,67 @@ class SparseRowMatrix(T.DistMatrix):
         c = self._resolve_chunks(chunks, plan)
         bounds = chunk_bounds(self.n_pad, c)
 
-        def body(data, cols, xp, t, w):
-            local = self._local(data, cols)
+        def _reduce(f, g, z, res):
+            """Gradient reduction in column segments (c > 1 pipelines the
+            partial psums); int8 wire when an EF residual came in."""
+            segs = bounds if c > 1 else ((0, self.n_pad),)
+            if res is not None:
+                gs, rs = [], []
+                for s0, s1 in segs:
+                    gseg, rseg = _comp.psum_int8(g[s0:s1], res[0, s0:s1],
+                                                 axes, nshards)
+                    gs.append(gseg)
+                    rs.append(rseg)
+                return (jax.lax.psum(f, axes), jnp.concatenate(gs), z,
+                        jnp.concatenate(rs)[None])
+            gs = [jax.lax.psum(g[s0:s1], axes) for s0, s1 in segs]
+            return jax.lax.psum(f, axes), jnp.concatenate(gs), z
+
+        def body(data, cols, xp, t, w, *rest):
+            sc, rest = (rest[:1], rest[1:]) if quant else ((), rest)
+            res = rest[0] if rest else None
+            local = self._local(data, cols, *sc)
             if use_bsr:
                 f, g, z = _ops.fused_grad_bsr(local, xp, t, w, loss=kind,
                                               param=prm)
-                if c > 1:   # pipeline the reduction in column segments
-                    gs = [jax.lax.psum(g[s0:s1], axes) for s0, s1 in bounds]
-                    return jax.lax.psum(f, axes), jnp.concatenate(gs), z
-            elif c > 1:
+                return _reduce(f, g, z, res)
+            if c > 1 and res is None:
                 # Two-phase dense split — fused_grad_jnp's exact math with
                 # the gradient built per column segment (see RowMatrix).
                 dense = local.to_dense()
                 z = jnp.dot(dense, xp, preferred_element_type=jnp.float32)
                 f, r = _fg.row_loss_grad(z, t, w, kind, prm)
-                rc = r.astype(dense.dtype)
+                rc = r.astype(dense.dtype) \
+                    if dense.dtype == jnp.float32 else r
                 gs = [jax.lax.psum(
                     jnp.dot(rc, dense[:, s0:s1],
                             preferred_element_type=jnp.float32)
                     .astype(xp.dtype), axes) for s0, s1 in bounds]
                 return jax.lax.psum(f, axes), jnp.concatenate(gs), z
-            else:
-                f, g, z = _ops.fused_grad(local.to_dense(), xp, t, w,
-                                          loss=kind, param=prm)
-            return jax.lax.psum(f, axes), jax.lax.psum(g, axes), z
+            f, g, z = _ops.fused_grad(local.to_dense(), xp, t, w,
+                                      loss=kind, param=prm)
+            return _reduce(f, g, z, res)
 
+        wire = "int8" if residual is not None else "f32"
+        base_specs = (self._dspec, self._dspec, P(), P(axes), P(axes)) \
+            + self._scale_specs()
+        base_ops = (self.data, self.cols, xp, t, w) + self._scale_ops()
         with _tel.current().span("collective.fused_grad", op="grad",
-                                 n=self.n_pad, chunks=c) as sp:
-            f, g, z = self._smap(
-                body,
-                in_specs=(self._dspec, self._dspec, P(), P(axes), P(axes)),
-                out_specs=(P(), P(), P(axes)))(self.data, self.cols, xp,
-                                               t, w)
-            sp.sync_on(g)
-        _record_collective(plan, sp, collective="psum", chunks=c)
-        return f, g[:n], z
+                                 n=self.n_pad, chunks=c, wire=wire) as sp:
+            if residual is None:
+                f, g, z = self._smap(
+                    body, in_specs=base_specs,
+                    out_specs=(P(), P(), P(axes)))(*base_ops)
+                out = (f, g[:n], z)
+            else:
+                f, g, z, nres = self._smap(
+                    body, in_specs=base_specs + (P(self.row_axes, None),),
+                    out_specs=(P(), P(), P(axes),
+                               P(self.row_axes, None)))(*base_ops, residual)
+                out = (f, g[:n], z, nres)
+            sp.sync_on(out[1])
+        _record_collective(plan, sp, collective="psum", chunks=c, wire=wire)
+        return out
 
     def fused_grad_multi(self, x: Array, smooths, *,
                          dispatch: str = "auto"
@@ -441,8 +557,8 @@ class SparseRowMatrix(T.DistMatrix):
         xp = jnp.pad(x, ((0, 0), (0, self.n_pad - x.shape[1]))) \
             if x.shape[1] < self.n_pad else x
 
-        def body(data, cols, xp, t, w):
-            local = self._local(data, cols)
+        def body(data, cols, xp, t, w, *sc):
+            local = self._local(data, cols, *sc)
             if use_bsr:
                 f, g, z = _ops.fused_grad_bsr_multi(local, xp, t, w,
                                                     loss=kind, param=prm)
@@ -454,9 +570,9 @@ class SparseRowMatrix(T.DistMatrix):
         f, g, z = self._smap(
             body,
             in_specs=(self._dspec, self._dspec, P(), P(None, axes),
-                      P(None, axes)),
+                      P(None, axes)) + self._scale_specs(),
             out_specs=(P(), P(), P(None, axes)))(
-            self.data, self.cols, xp, t, w)
+            self.data, self.cols, xp, t, w, *self._scale_ops())
         return f, g[:, :n], z
 
     def gram(self, *, dispatch: str = "auto") -> Array:
@@ -467,8 +583,8 @@ class SparseRowMatrix(T.DistMatrix):
         axes = self.row_axes
         use_bsr = self._use_bsr(self.n_pad, dispatch)
 
-        def body(data, cols):
-            local = self._local(data, cols)
+        def body(data, cols, *sc):
+            local = self._local(data, cols, *sc)
             dense = local.to_dense()
             if use_bsr:
                 g = _rmatmul_strips(_ops, local, dense.astype(jnp.float32))
@@ -476,12 +592,17 @@ class SparseRowMatrix(T.DistMatrix):
                 g = _ops.tsgram(dense, out_dtype=jnp.float32)
             return jax.lax.psum(g, axes)
 
-        out = self._smap(body, in_specs=(self._dspec, self._dspec),
-                         out_specs=P())(self.data, self.cols)
+        out = self._smap(body,
+                         in_specs=(self._dspec, self._dspec)
+                         + self._scale_specs(),
+                         out_specs=P())(self.data, self.cols,
+                                        *self._scale_ops())
         n = self.dims[1]
-        return out[:n, :n].astype(self.data.dtype)
+        return out[:n, :n].astype(self.out_dtype)
 
     def frobenius_norm(self) -> Array:
+        if self.scales is not None:
+            return self.dequantize().frobenius_norm()
         axes = self.row_axes
 
         def body(data):
@@ -492,6 +613,8 @@ class SparseRowMatrix(T.DistMatrix):
 
     def column_norms(self) -> Array:
         """Replicated per-column L2 norms (the DIMSUM scaling vector)."""
+        if self.scales is not None:
+            return self.dequantize().column_norms()
         axes, bs = self.row_axes, self.bs
         nbc = self.n_pad // bs
 
@@ -506,7 +629,11 @@ class SparseRowMatrix(T.DistMatrix):
 
     def scale_columns(self, d: Array) -> "SparseRowMatrix":
         """A · diag(d) with replicated d — scales stored blocks in place
-        (the sparsity pattern is unchanged, so cols are shared)."""
+        (the sparsity pattern is unchanged, so cols are shared).
+        Quantized storage dequantizes first: per-column scaling breaks the
+        shared per-block scale."""
+        if self.scales is not None:
+            return self.dequantize().scale_columns(d)
         bs = self.bs
         dp = jnp.pad(jnp.asarray(d), (0, self.n_pad - self.dims[1]))
         db = dp.reshape(-1, bs)                       # (nbc, bs)
@@ -528,6 +655,9 @@ class SparseRowMatrix(T.DistMatrix):
         probabilities p, and the exact per-pair estimator variance
         Σ_k (ã_ki ã_kj)²·(1/(pᵢpⱼ) − 1) (ã column-scaled), which shrinks
         to 0 as γ grows."""
+        if self.scales is not None:
+            return self.dequantize().column_similarities(
+                threshold, gamma=gamma, seed=seed, return_info=return_info)
         from repro.kernels import ops as _ops
         norms = self.column_norms()
         inv = jnp.where(norms > 0, 1.0 / jnp.maximum(norms, 1e-30), 0.0)
@@ -564,7 +694,7 @@ class SparseRowMatrix(T.DistMatrix):
         sim = self._smap(body,
                          in_specs=(self._dspec, self._dspec, P(), P()),
                          out_specs=P())(self.data, self.cols, pb, sb)
-        sim = sim[:n, :n].astype(self.data.dtype)
+        sim = sim[:n, :n].astype(self.out_dtype)
         # The diagonal estimator is biased (E[b²] = a²/p); its true value is
         # known exactly, so write it instead (MLlib does the same).
         diag = (norms > 0).astype(sim.dtype)
@@ -583,16 +713,20 @@ class SparseRowMatrix(T.DistMatrix):
         block-row strips already live where RowMatrix wants the rows."""
         n = self.dims[1]
 
-        def body(data, cols):
-            return self._local(data, cols).to_dense()[:, :n]
+        def body(data, cols, *sc):
+            return self._local(data, cols, *sc).to_dense()[:, :n]
 
-        out = self._smap(body, in_specs=(self._dspec, self._dspec),
-                         out_specs=P(self.row_axes, None))(self.data,
-                                                           self.cols)
+        out = self._smap(body,
+                         in_specs=(self._dspec, self._dspec)
+                         + self._scale_specs(),
+                         out_specs=P(self.row_axes, None))(
+            self.data, self.cols, *self._scale_ops())
         return RowMatrix(rows=out, n_rows=self.dims[0], mesh=self.mesh,
                          row_axes=self.row_axes)
 
     def to_local(self) -> Array:
+        if self.scales is not None:
+            return self.dequantize().to_local()
         data = np.asarray(jax.device_get(self.data))
         cols = np.asarray(jax.device_get(self.cols))
         nbr, ell, bs = data.shape[0], data.shape[1], data.shape[-1]

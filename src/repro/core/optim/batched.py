@@ -8,7 +8,7 @@ for — their iterations can share those passes: the multi-RHS fused kernels
 right-hand sides in ONE streaming read of A, so a group of k requests
 consumes exactly as many A-passes per iteration as a single request.
 
-Two engines, both operating on a fixed number of SLOTS with per-slot
+Three engines, all operating on a fixed number of SLOTS with per-slot
 convergence masks (the vLLM continuous-batching idiom transplanted to
 solvers — the server admits/retires requests between iterations by editing
 slot rows, and the step functions freeze inactive slots):
@@ -18,6 +18,13 @@ slot rows, and the step functions freeze inactive slots):
     backtracking attempt loop shared across the group: every attempt is one
     group A-pass, and slots whose step already passed recompute the same
     accepted candidate deterministically while stragglers halve their step);
+  * ``acc``   — the accelerated engine, quadratic smooths only, via the
+    affine u-vector trick of core/tfocs/solver._tfocs_fused_accel batched
+    over slots: each slot carries (u_x, u_z, u_b) alongside the cached
+    images, so the momentum point's gradient is an affine combination and
+    an iteration is still ONE group A-pass.  Per-slot theta/L, shared
+    backtracking attempts and per-slot gradient-test restarts give the
+    ``acc`` and ``acc_rb`` Figure-1 variants;
   * ``lbfgs`` — L-BFGS with the two-loop recursion vmapped over slots and a
     shared backtracking Armijo line search (each probe is one group A-pass).
 
@@ -180,6 +187,186 @@ def make_gra_group(linop, kind: str, param: float = 1.0, *,
             done=state.done | conv,
             obj=jnp.where(act, obj, state.obj),
             bt=state.bt + bt), tries
+
+    return seed, step
+
+
+# -- batched accelerated proximal gradient (acc / acc_rb) ---------------------
+
+class AccGroupState(NamedTuple):
+    X: Array        # (S, n) per-slot averaged iterates x̄
+    AX: Array       # (S, m_pad) cached images A·x̄
+    UX: Array       # (S, n) u_x = Aᵀ(w∘A·x̄)
+    Z: Array        # (S, n) proximal-gradient iterates
+    AZ: Array       # (S, m_pad)
+    UZ: Array       # (S, n)
+    UB: Array       # (S, n) per-slot u_b = Aᵀ(w∘t)
+    F: Array        # (S,)  smooth value at X (local, from AX)
+    theta: Array    # (S,)  per-slot momentum parameters
+    L: Array        # (S,)  per-slot Lipschitz estimates
+    k: Array        # (S,)
+    done: Array     # (S,)
+    obj: Array      # (S,)
+    bt: Array       # (S,)  cumulative backtracks
+    rs: Array       # (S,)  cumulative gradient-test restarts
+
+
+def acc_group_init(slots: int, n: int, m_pad: int,
+                   L0: float = 1.0) -> AccGroupState:
+    return AccGroupState(
+        X=jnp.zeros((slots, n), jnp.float32),
+        AX=jnp.zeros((slots, m_pad), jnp.float32),
+        UX=jnp.zeros((slots, n), jnp.float32),
+        Z=jnp.zeros((slots, n), jnp.float32),
+        AZ=jnp.zeros((slots, m_pad), jnp.float32),
+        UZ=jnp.zeros((slots, n), jnp.float32),
+        UB=jnp.zeros((slots, n), jnp.float32),
+        F=jnp.zeros((slots,), jnp.float32),
+        theta=jnp.ones((slots,), jnp.float32),
+        L=jnp.full((slots,), L0, jnp.float32),
+        k=jnp.zeros((slots,), jnp.int32),
+        done=jnp.zeros((slots,), bool),
+        obj=jnp.full((slots,), jnp.nan, jnp.float32),
+        bt=jnp.zeros((slots,), jnp.int32),
+        rs=jnp.zeros((slots,), jnp.int32))
+
+
+def make_acc_group(linop, kind: str, param: float = 1.0, *,
+                   reg: str = "none", backtracking: bool = False,
+                   restart: bool = False, alpha: float = 2.0,
+                   beta: float = 0.9, max_backtracks: int = 30,
+                   tol_eps: float = 1e-12):
+    """Build (seed_fn, step_fn) for a batched ACCELERATED group — the
+    slot-parallel `_tfocs_fused_accel` (core/tfocs/solver), quadratic
+    smooths only.
+
+    With f(z) = ½ Σ wᵢ(zᵢ−tᵢ)² the x-space gradient at any point v is
+    u_v − u_b with u_v = Aᵀ(w∘Av) *affine* in u, so the momentum point's
+    gradient (1−θ)u_x + θu_z − u_b costs nothing and one group fused pass
+    per attempt (at z⁺) is the whole iteration — the same pass-sharing
+    economics as the `gra` engine despite the momentum point.
+
+    seed_fn(state, T, W, lam) → (state, passes) refreshes per-slot
+    u_b / (AX, u_x) / (AZ, u_z) in THREE group passes (at 0, X̄ and Z —
+    admission re-seeds cost 3× a gra group's 1); step_fn(state, T, W,
+    lam, tol, active) → (state, passes) runs one iteration for all active
+    slots with shared backtracking attempts, per-slot theta/L, and (when
+    `restart`) the O'Donoghue–Candès gradient test per slot.  Inactive
+    slots freeze bit-for-bit."""
+    if reg not in REGS:
+        raise ValueError(f"reg must be one of {REGS}, got {reg!r}")
+    if kind != "quad":
+        raise ValueError("accelerated groups need the affine u-vector "
+                         f"trick — quadratic smooths only, got {kind!r}")
+
+    def _pass(X, T, W):
+        sep = RowSeparable(kind, T, W, param)
+        return linop.fused_grad_multi(X, sep)      # (F, G, AX): ONE A-pass
+
+    def _quad_fg(AY, T, W):
+        """Per-slot (value, data-space gradient) at cached images — local,
+        no A-pass; matches SmoothQuad row-wise."""
+        R = AY - T
+        return 0.5 * jnp.sum(W * R * R, axis=1), W * R
+
+    def seed(state: AccGroupState, T: Array, W: Array, lam: Array):
+        _, G0, _ = _pass(jnp.zeros_like(state.X), T, W)   # g(0) = −u_b
+        UB = -G0
+        Fx, GX, AX = _pass(state.X, T, W)
+        _, GZ, AZ = _pass(state.Z, T, W)
+        obj = Fx + prox_value_batch(reg, state.X, lam)
+        return state._replace(AX=AX, UX=GX + UB, AZ=AZ, UZ=GZ + UB,
+                              UB=UB, F=Fx, obj=obj), jnp.int32(3)
+
+    def step(state: AccGroupState, T: Array, W: Array, lam: Array,
+             tol: Array, active: Array):
+        act = active & ~state.done
+        L0 = jnp.where(act, state.L * (beta if backtracking else 1.0),
+                       state.L)
+
+        def theta_for(L):
+            # TFOCS θ update, per slot; the ratio L⁺/L rescales momentum.
+            ratio = L / state.L
+            return 2.0 / (1.0 + jnp.sqrt(
+                1.0 + 4.0 * ratio / (state.theta * state.theta)))
+
+        def attempt(L):
+            th = theta_for(L)
+            thc = th[:, None]
+            AY = (1 - thc) * state.AX + thc * state.AZ
+            FY, GY = _quad_fg(AY, T, W)
+            G = (1 - thc) * state.UX + thc * state.UZ - state.UB  # affine!
+            stepsz = jnp.where(act, 1.0 / (L * th), 1.0)
+            Zn = prox_batch(reg, state.Z - stepsz[:, None] * G, stepsz, lam)
+            Zn = jnp.where(act[:, None], Zn, state.Z)
+            _, GZ, AZn = _pass(Zn, T, W)                 # ← the ONE pass
+            UZn = GZ + state.UB
+            Xn = (1 - thc) * state.X + thc * Zn
+            AXn = (1 - thc) * state.AX + thc * AZn
+            UXn = (1 - thc) * state.UX + thc * UZn
+            Fn = 0.5 * jnp.sum(W * (AXn - T) ** 2, axis=1)
+            dX = thc * (Zn - state.Z)                    # = x⁺ − y
+            rhs = (FY + jnp.sum(GY * (AXn - AY), axis=1)
+                   + 0.5 * L * jnp.sum(dX * dX, axis=1))
+            ok = Fn <= rhs + tol_eps * jnp.abs(FY)
+            return th, Xn, AXn, UXn, Zn, AZn, UZn, GY, Fn, ok
+
+        out = attempt(L0)
+        carry = (L0, *out, jnp.int32(1), jnp.zeros_like(state.bt))
+
+        if backtracking:
+            def bt_cond(c):
+                ok, tries = c[10], c[11]
+                return jnp.any(act & ~ok) & (tries < max_backtracks)
+
+            def bt_body(c):
+                L, ok, tries, bt = c[0], c[10], c[11], c[12]
+                fail = act & ~ok
+                L = jnp.where(fail, L * alpha, L)
+                bt = bt + fail.astype(jnp.int32)
+                # Passed slots recompute the same accepted candidate (same
+                # per-slot L ⇒ same θ ⇒ identical), so one shared attempt
+                # is still ONE group A-pass for everybody.
+                return (L, *attempt(L), tries + 1, bt)
+
+            carry = jax.lax.while_loop(bt_cond, bt_body, carry)
+
+        L, th, Xn, AXn, UXn, Zn, AZn, UZn, GY, Fn, _, tries, bt = carry
+
+        if restart:
+            # Per-slot O'Donoghue–Candès gradient test; resetting momentum
+            # also resets (z, Az, u_z) to the averaged iterate's.
+            uphill = act & (jnp.sum(GY * (AXn - state.AX), axis=1) > 0)
+            th = jnp.where(uphill, 1.0, th)
+            Zn = jnp.where(uphill[:, None], Xn, Zn)
+            AZn = jnp.where(uphill[:, None], AXn, AZn)
+            UZn = jnp.where(uphill[:, None], UXn, UZn)
+            rs = uphill.astype(jnp.int32)
+        else:
+            rs = jnp.zeros_like(state.rs)
+
+        dX = Xn - state.X
+        rel = (jnp.linalg.norm(dX, axis=1)
+               / jnp.maximum(1.0, jnp.linalg.norm(Xn, axis=1)))
+        conv = act & (rel < tol)
+        obj = Fn + prox_value_batch(reg, Xn, lam)
+        sel = act[:, None]
+        return AccGroupState(
+            X=jnp.where(sel, Xn, state.X),
+            AX=jnp.where(sel, AXn, state.AX),
+            UX=jnp.where(sel, UXn, state.UX),
+            Z=jnp.where(sel, Zn, state.Z),
+            AZ=jnp.where(sel, AZn, state.AZ),
+            UZ=jnp.where(sel, UZn, state.UZ),
+            UB=state.UB,
+            F=jnp.where(act, Fn, state.F),
+            theta=jnp.where(act, th, state.theta),
+            L=jnp.where(act, L, state.L),
+            k=state.k + act.astype(jnp.int32),
+            done=state.done | conv,
+            obj=jnp.where(act, obj, state.obj),
+            bt=state.bt + bt,
+            rs=state.rs + rs), tries
 
     return seed, step
 

@@ -51,7 +51,11 @@ from repro.train.straggler import ShardMonitor
 
 Array = jax.Array
 
-GROUP_METHODS = ("gra", "lbfgs")
+GROUP_METHODS = ("gra", "acc", "acc_rb", "lbfgs")
+# The accelerated members batch via the affine u-vector trick
+# (batched.make_acc_group) — quadratic losses only; acc_rb adds
+# backtracking + gradient-test restarts.
+ACC_METHODS = ("acc", "acc_rb")
 
 
 class TransientShardError(RuntimeError):
@@ -171,6 +175,27 @@ def _write_slot_lbfgs(state, T, W, lam, tol, i, t, w, lamv, tolv, x0, L0):
 
 
 @jax.jit
+def _write_slot_acc(state, T, W, lam, tol, i, t, w, lamv, tolv, x0, L0):
+    # Data-space caches (AX/AZ) and u-vectors are zeroed; the next seed
+    # pass recomputes them for the whole group.
+    state = state._replace(
+        X=state.X.at[i].set(x0), AX=state.AX.at[i].set(0.0),
+        UX=state.UX.at[i].set(0.0), Z=state.Z.at[i].set(x0),
+        AZ=state.AZ.at[i].set(0.0), UZ=state.UZ.at[i].set(0.0),
+        UB=state.UB.at[i].set(0.0), F=state.F.at[i].set(0.0),
+        theta=state.theta.at[i].set(1.0), L=state.L.at[i].set(L0),
+        k=state.k.at[i].set(0), done=state.done.at[i].set(False),
+        obj=state.obj.at[i].set(jnp.nan), bt=state.bt.at[i].set(0),
+        rs=state.rs.at[i].set(0))
+    return (state, T.at[i].set(t), W.at[i].set(w), lam.at[i].set(lamv),
+            tol.at[i].set(tolv))
+
+
+_SLOT_WRITERS = {"gra": _write_slot_gra, "lbfgs": _write_slot_lbfgs,
+                 "acc": _write_slot_acc, "acc_rb": _write_slot_acc}
+
+
+@jax.jit
 def _bind_slot(T, W, lam, tol, i, t, w, lamv, tolv):
     # Resume path: rebind the data-space rows around RESTORED solver state
     # (the restored X/F/G/k must survive untouched).
@@ -234,6 +259,10 @@ class ElasticGroup:
             raise ValueError(f"method must be one of {GROUP_METHODS}")
         if method == "lbfgs" and reg != "none":
             raise ValueError("lbfgs groups need reg='none'")
+        if method in ACC_METHODS and kind != "quad":
+            raise ValueError("accelerated groups batch via the affine "
+                             "u-vector trick — loss='quad' only, got "
+                             f"{kind!r}")
         self.linop, self.kind, self.param = linop, kind, param
         self.reg, self.method, self.slots = reg, method, slots
         self.mem = mem
@@ -242,6 +271,8 @@ class ElasticGroup:
         self.m_pad = linop.out_shape[0]
         if method == "gra":
             self.state = _batched.gra_group_init(slots, self.n)
+        elif method in ACC_METHODS:
+            self.state = _batched.acc_group_init(slots, self.n, self.m_pad)
         else:
             self.state = _batched.lbfgs_group_init(slots, self.n, mem=mem)
         self._build_engines()
@@ -284,6 +315,11 @@ class ElasticGroup:
         if self.method == "gra":
             seed, step = _batched.make_gra_group(self.linop, self.kind,
                                                  self.param, reg=self.reg)
+        elif self.method in ACC_METHODS:
+            rb = self.method == "acc_rb"
+            seed, step = _batched.make_acc_group(
+                self.linop, self.kind, self.param, reg=self.reg,
+                backtracking=rb, restart=rb)
         else:
             seed, step = _batched.make_lbfgs_group(self.linop, self.kind,
                                                    self.param)
@@ -309,8 +345,7 @@ class ElasticGroup:
         x0 = jnp.zeros((self.n,), jnp.float32) if x0 is None \
             else jnp.asarray(x0, jnp.float32)
         if reset_state:
-            write = _write_slot_gra if self.method == "gra" \
-                else _write_slot_lbfgs
+            write = _SLOT_WRITERS[self.method]
             self.state, self.T, self.W, self.lam, self.tol = write(
                 self.state, self.T, self.W, self.lam, self.tol, i,
                 self.linop.pad_data(b), self.linop.row_weights(),
@@ -339,21 +374,21 @@ class ElasticGroup:
             return 0
         with self.tel.span("solver.seed_pass",
                            active=int(self.active.sum())) as sp:
-            if self.method == "gra":
+            if self.method == "lbfgs":
+                self.state, p = self._seed(self.state, self.T, self.W)
+            else:
                 self.state, p = self._seed(self.state, self.T, self.W,
                                            self.lam)
-            else:
-                self.state, p = self._seed(self.state, self.T, self.W)
             sp.sync_on(self.state.F)
         self._dirty = False
         self.a_passes += int(p)
         return int(p)
 
     def _engine_step(self, act):
-        if self.method == "gra":
-            return self._step(self.state, self.T, self.W, self.lam,
-                              self.tol, act)
-        return self._step(self.state, self.T, self.W, self.tol, act)
+        if self.method == "lbfgs":
+            return self._step(self.state, self.T, self.W, self.tol, act)
+        return self._step(self.state, self.T, self.W, self.lam,
+                          self.tol, act)
 
     def step_iteration(self) -> int:
         """One solver iteration for every active slot; returns the group
@@ -466,6 +501,12 @@ class ElasticGroup:
         self.state, self.lam, self.tol = jax.tree_util.tree_map(
             lambda a: jnp.asarray(np.asarray(jax.device_get(a))),
             (self.state, self.lam, self.tol))
+        if self.method in ACC_METHODS:
+            # The accelerated state caches data-space images at the OLD
+            # padded row count; re-size them and let the dirty re-seed
+            # (3 group passes) rebuild AX/AZ and the u-vectors.
+            z = jnp.zeros((self.slots, self.m_pad), jnp.float32)
+            self.state = self.state._replace(AX=z, AZ=z)
         T = jnp.zeros((self.slots, self.m_pad), jnp.float32)
         W = jnp.zeros_like(T)
         w = self.linop.row_weights()

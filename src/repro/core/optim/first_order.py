@@ -31,6 +31,25 @@ shows the roofline terms behind the decision); pass `fused=False` to opt
 out, e.g. when comparing against the unfused baseline (bench_optim does
 exactly that and counts one A-pass per backtracking attempt on the fused
 path).
+
+Low-precision dispatch (`TfocsOptions.precision`, default "auto")
+-----------------------------------------------------------------
+The same planner grows a precision axis: ``plan("grad", ...,
+context={"tol": opts.tol})`` prices the roofline at candidate byte
+widths and picks among
+
+  * "f32"   — exact storage and wire (always admissible);
+  * "bf16"  — the operand's storage recast to bfloat16 (2× fewer HBM and
+    collective bytes; kernels upcast tiles on-chip and accumulate f32);
+    admitted when tol ≥ 1e-5;
+  * "psum8" — the gradient all-reduce ships int8 payloads with a shared
+    scale and per-shard f32 error-feedback residuals
+    (train/compression.psum_int8, ~4× fewer collective bytes); admitted
+    when tol ≥ 1e-6, taken by the θ ≡ 1 fused engine (`gra`) only.
+
+A candidate must also clear the planner's modeled-savings floor, so tiny
+problems stay f32.  ``info["precision"]`` reports what ran;
+``plan(...).explain()`` shows the byte savings behind the choice.
 """
 from __future__ import annotations
 

@@ -163,13 +163,26 @@ def lbfgs_composite(smooth, linop, prox=None, x0: Array | None = None,
     L-BFGS has no image cache to exploit — every line-search probe is a
     fresh (value, gradient) at a new point — so a row-separable smooth takes
     the single-pass fused gradient (one streaming read of A per evaluation
-    instead of apply + adjoint's two); `opts.fused=False` opts out."""
+    instead of apply + adjoint's two); `opts.fused=False` opts out.
+
+    `opts.precision` ("auto" by default) runs the planner's precision
+    sweep like the TFOCS engines: a "bf16" pick recasts the operand's
+    storage (compute upcasts on-chip).  The compressed "psum8" wire is
+    NOT taken here — the EF residual's accounting assumes every pass is an
+    accepted gradient point, which line-search probes violate — so a
+    psum8 pick falls back to the f32 wire."""
+    from repro.core.tfocs.solver import resolve_precision
     prox = prox or ProxZero()
     if not isinstance(prox, ProxZero):
         raise ValueError("lbfgs needs a smooth objective; fold the "
                          "regularizer into the smooth part (e.g. "
                          "SmoothHuberL1) or use acc_rb.")
     opts = opts or TfocsOptions()
+    prec = resolve_precision(linop, opts)
+    if prec == "bf16" and hasattr(linop, "astype_store"):
+        linop = linop.astype_store(jnp.bfloat16)
+    else:
+        prec = "f32"
     x0 = jnp.zeros(linop.in_shape) if x0 is None else x0
 
     if fused_gradient_enabled(smooth, linop, getattr(opts, "fused", "auto")):
@@ -187,5 +200,7 @@ def lbfgs_composite(smooth, linop, prox=None, x0: Array | None = None,
 
         passes_per_eval = 2
 
-    return lbfgs(value_and_grad, x0, max_iters=opts.max_iters, tol=opts.tol,
-                 passes_per_eval=passes_per_eval)
+    x, info = lbfgs(value_and_grad, x0, max_iters=opts.max_iters,
+                    tol=opts.tol, passes_per_eval=passes_per_eval)
+    info["precision"] = prec
+    return x, info

@@ -61,11 +61,17 @@ class LinopMatrix:
             return self.A.rmatvec(y)
         return self.A.T @ y
 
-    def fused_grad(self, x: Array, sep) -> tuple[Array, Array, Array]:
+    def fused_grad(self, x: Array, sep, residual: Array | None = None):
         """(f(Ax), Aᵀ∇f(Ax), Ax) in one streaming pass over A for a
         row-separable smooth (kernels/fusedgrad) — half the HBM traffic of
-        apply + adjoint.  `sep` is the smooth's RowSeparable form."""
+        apply + adjoint.  `sep` is the smooth's RowSeparable form.
+
+        `residual` (distributed operands only; see
+        RowMatrix.init_psum_residual) switches the gradient all-reduce to
+        the compressed int8 wire and returns (f, g, z, new_residual)."""
         if isinstance(self.A, _DIST):
+            if residual is not None:
+                return self.A.fused_grad(x, sep, residual=residual)
             return self.A.fused_grad(x, sep)
         from repro.kernels import ops as _ops
         t = self.pad_data(jnp.asarray(sep.target))
@@ -74,6 +80,21 @@ class LinopMatrix:
         return _ops.fused_grad(jnp.asarray(self.A), jnp.asarray(x), t, w,
                                loss=sep.kind,
                                param=float(getattr(sep, "param", 1.0)))
+
+    def astype_store(self, dtype) -> "LinopMatrix":
+        """Recast the operand's storage (the solver's precision="auto"
+        dispatch lands here) — distributed operands keep their sharding;
+        compute still upcasts on-chip and accumulates f32."""
+        if isinstance(self.A, _DIST):
+            return LinopMatrix(self.A.astype_store(dtype))
+        return LinopMatrix(jnp.asarray(self.A).astype(dtype))
+
+    def init_psum_residual(self):
+        """Zeroed error-feedback residual for the compressed gradient
+        psum; None for local operands (no wire to compress)."""
+        if isinstance(self.A, _DIST):
+            return self.A.init_psum_residual()
+        return None
 
     def fused_grad_multi(self, x: Array, seps) -> tuple[Array, Array, Array]:
         """Request-batched fused gradients: (f (k,), g (k × n), z (k × m))
@@ -184,9 +205,17 @@ class CountingLinop:
         self.counts["adjoint"] += 1
         return self.base.adjoint(y)
 
-    def fused_grad(self, x: Array, sep):
+    def fused_grad(self, x: Array, sep, residual=None):
         self.counts["fused_grad"] += 1
+        if residual is not None:
+            return self.base.fused_grad(x, sep, residual=residual)
         return self.base.fused_grad(x, sep)
+
+    def astype_store(self, dtype):
+        return CountingLinop(self.base.astype_store(dtype), self.counts)
+
+    def init_psum_residual(self):
+        return self.base.init_psum_residual()
 
     def fused_grad_multi(self, x: Array, seps):
         # ONE pass over A regardless of group width — that equality is

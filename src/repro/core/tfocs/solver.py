@@ -66,6 +66,20 @@ class TfocsOptions:
     backtracking: bool = True
     restart: bool = False        # O'Donoghue–Candès gradient-test restart
     fused: bool | str = "auto"   # single-pass fused gradient (False opts out)
+    # Compute/wire precision: "auto" lets the execution planner's precision
+    # sweep (launch/planner, plan("grad", context={"tol": ...})) pick among
+    #   "f32"   — exact storage and wire (always admissible),
+    #   "bf16"  — recast the operand's storage to bfloat16 (kernels upcast
+    #             tiles on-chip and accumulate f32); admitted when
+    #             tol ≥ 1e-5 and the modeled byte savings clear the floor,
+    #   "psum8" — compressed int8 gradient all-reduce with error feedback
+    #             (train/compression.psum_int8); admitted when tol ≥ 1e-6.
+    # The guard is opts.tol: the planner never picks a precision whose
+    # error guard exceeds the solver's own convergence tolerance.  "psum8"
+    # applies only to the θ ≡ 1 fused engine (the EF residual needs the
+    # candidate/gradient-point identity); other engines fall back to f32
+    # wire.  Explicit values force the choice.
+    precision: str = "auto"
 
 
 def _fused_capable(linop) -> bool:
@@ -116,6 +130,42 @@ def fused_gradient_enabled(smooth, linop, fused: bool | str = "auto",
                          dtype).choice == "fused"
 
 
+_PRECISIONS = ("auto", "f32", "bf16", "psum8")
+
+
+def resolve_precision(linop, opts: TfocsOptions) -> str:
+    """The solver's precision choice: "auto" runs the planner's precision
+    sweep — plan("grad", per-shard dims, context={"tol": opts.tol, axes})
+    prices {f32, bf16 storage, int8-compressed psum} against the roofline
+    and admits a candidate only when its error guard clears opts.tol AND
+    the modeled byte savings clear the planner's floor.  Explicit "f32"/
+    "bf16"/"psum8" force the choice; non-f32 operands (already recast) and
+    non-matrix operators resolve to "f32"."""
+    if opts.precision != "auto":
+        if opts.precision not in _PRECISIONS:
+            raise ValueError(f"precision must be one of {_PRECISIONS}, "
+                             f"got {opts.precision!r}")
+        return opts.precision
+    if not (_fused_capable(linop) and hasattr(linop, "operand_dtype")):
+        return "f32"
+    try:
+        if jnp.dtype(linop.operand_dtype()) != jnp.float32:
+            return "f32"
+        m, n = int(linop.out_shape[0]), int(linop.in_shape[0])
+        shards = linop.row_shards() if hasattr(linop, "row_shards") else 1
+    except (AttributeError, TypeError):
+        return "f32"
+    ctx = {"tol": float(opts.tol)}
+    A = getattr(linop, "A", None)
+    if hasattr(A, "mesh") and hasattr(A, "row_axes"):
+        from repro.launch import mesh as _mesh
+        ctx["axes"] = _mesh.axis_sizes(A.mesh, A.row_axes)
+    from repro.launch import planner as _planner
+    p = _planner.plan("grad", {"m": max(m // max(shards, 1), 1), "n": n},
+                      "float32", context=ctx)
+    return p.precision or "f32"
+
+
 class TfocsState(NamedTuple):
     x: Array
     Ax: Array
@@ -156,6 +206,10 @@ class _FusedState(NamedTuple):
     hist: Array
     done: Array
     n_backtracks: Array
+    # Compressed-psum error-feedback residual (None → exact f32 wire).
+    # None is an empty pytree node, so the while_loop carry stays legal
+    # either way.
+    res: object = None
 
 
 class _FusedAttempt(NamedTuple):
@@ -165,10 +219,11 @@ class _FusedAttempt(NamedTuple):
     g: Array
     ok: Array
     tries: Array
+    res: object = None
 
 
 def _tfocs_fused(smooth, linop, prox, x0: Array, opts: TfocsOptions,
-                 sep) -> tuple[Array, dict]:
+                 sep, residual=None) -> tuple[Array, dict]:
     """Non-accelerated engine over the fused single-pass gradient.
 
     With θ ≡ 1 the candidate point x⁺ = prox(x − g/L) is also the next
@@ -178,26 +233,41 @@ def _tfocs_fused(smooth, linop, prox, x0: Array, opts: TfocsOptions,
     gradient, and the image A x⁺.  Exactly ONE A-pass per backtracking
     attempt, against apply + adjoint = two on the unfused path; the math is
     identical, so the iterates match the unfused engine to float tolerance.
+
+    `residual` (the planner's "psum8" pick; see linop.init_psum_residual)
+    threads the compressed-wire error-feedback state through the loop:
+    every fused pass ships an int8 gradient payload and returns the
+    updated residual.  A failed backtracking attempt recomputes from the
+    pre-step residual, so no quantization error is double-counted.
     """
     backtracking = opts.backtracking and opts.Lexact is None
     L_init = jnp.asarray(opts.Lexact if opts.Lexact is not None else opts.L0,
                          jnp.float32)
+    use8 = residual is not None
+
+    def fg(x, res):
+        """One fused A-pass; compressed wire iff an EF residual rides."""
+        if use8:
+            f, g, _, nres = linop.fused_grad(x, sep, residual=res)
+            return f, g, nres
+        f, g, _ = linop.fused_grad(x, sep)
+        return f, g, res
 
     def attempt_once(a: _FusedAttempt, state: _FusedState) -> _FusedAttempt:
         step = 1.0 / a.L
         x_new = prox.prox(state.x - step * state.g, step)
-        f_new, g_new, _ = linop.fused_grad(x_new, sep)       # ← ONE A-pass
+        f_new, g_new, res_new = fg(x_new, state.res)         # ← ONE A-pass
         dx = x_new - state.x
         rhs = state.f + jnp.vdot(state.g, dx) + 0.5 * a.L * jnp.vdot(dx, dx)
         ok = f_new <= rhs + 1e-12 * jnp.abs(state.f)
         return a._replace(x=x_new, f=f_new, g=g_new, ok=ok,
-                          tries=a.tries + 1)
+                          tries=a.tries + 1, res=res_new)
 
     def outer(state: _FusedState) -> _FusedState:
         L0k = state.L * (opts.beta if backtracking else 1.0)
         init = _FusedAttempt(L=L0k, x=state.x, f=state.f,
                              g=state.g, ok=jnp.asarray(False),
-                             tries=jnp.int32(0))
+                             tries=jnp.int32(0), res=state.res)
         first = attempt_once(init, state)
 
         if backtracking:
@@ -218,16 +288,16 @@ def _tfocs_fused(smooth, linop, prox, x0: Array, opts: TfocsOptions,
         return _FusedState(
             x=acc.x, f=acc.f, g=acc.g, L=acc.L,
             k=state.k + 1, hist=hist, done=rel < opts.tol,
-            n_backtracks=state.n_backtracks + acc.tries - 1)
+            n_backtracks=state.n_backtracks + acc.tries - 1, res=acc.res)
 
     def cond(state: _FusedState):
         return (~state.done) & (state.k < opts.max_iters)
 
-    f0, g0, _ = linop.fused_grad(x0, sep)            # ← ONE A-pass to seed
+    f0, g0, res0 = fg(x0, residual)                  # ← ONE A-pass to seed
     init = _FusedState(
         x=x0, f=f0, g=g0, L=L_init, k=jnp.int32(0),
         hist=jnp.full((opts.max_iters,), jnp.nan, jnp.float32),
-        done=jnp.asarray(False), n_backtracks=jnp.int32(0))
+        done=jnp.asarray(False), n_backtracks=jnp.int32(0), res=res0)
     final = jax.lax.while_loop(cond, outer, init)
     # Standardized info keys (iterations / a_passes / converged / plan) plus
     # solver-specific detail; "fused" is a deprecated alias of plan=="fused"
@@ -395,16 +465,36 @@ def _tfocs_fused_accel(smooth, linop, prox, x0: Array, opts: TfocsOptions,
 
 def tfocs(smooth, linop, prox, x0: Array,
           opts: TfocsOptions = TfocsOptions()) -> tuple[Array, dict]:
-    """Run the solver; returns (x*, info dict with per-iteration history)."""
+    """Run the solver; returns (x*, info dict with per-iteration history).
+    info["precision"] reports the resolved compute/wire precision (see
+    TfocsOptions.precision)."""
+    prec = resolve_precision(linop, opts)
+    if prec == "bf16":
+        if hasattr(linop, "astype_store"):
+            linop = linop.astype_store(jnp.bfloat16)
+        else:
+            prec = "f32"
     if fused_gradient_enabled(smooth, linop, opts.fused,
                               needs_theta_one=True, accel=opts.accel):
-        return _tfocs_fused(smooth, linop, prox, x0, opts,
-                            row_separable(smooth))
+        residual = None
+        if prec == "psum8":
+            residual = linop.init_psum_residual() \
+                if hasattr(linop, "init_psum_residual") else None
+            if residual is None:
+                prec = "f32"     # local operand: no wire to compress
+        x, info = _tfocs_fused(smooth, linop, prox, x0, opts,
+                               row_separable(smooth), residual=residual)
+        info["precision"] = prec
+        return x, info
+    if prec == "psum8":
+        prec = "f32"             # EF wire needs the θ ≡ 1 fused engine
     sep = row_separable(smooth)
     if (opts.accel and sep is not None and sep.kind == "quad"
             and _fused_capable(linop)
             and fused_gradient_enabled(smooth, linop, opts.fused)):
-        return _tfocs_fused_accel(smooth, linop, prox, x0, opts, sep)
+        x, info = _tfocs_fused_accel(smooth, linop, prox, x0, opts, sep)
+        info["precision"] = prec
+        return x, info
     backtracking = opts.backtracking and opts.Lexact is None
     L_init = jnp.asarray(opts.Lexact if opts.Lexact is not None else opts.L0,
                          jnp.float32)
@@ -504,5 +594,6 @@ def tfocs(smooth, linop, prox, x0: Array,
             "history": final.hist,
             "n_backtracks": final.n_backtracks,
             "n_restarts": final.n_restarts, "fused": False,
-            "objective": final.hist[jnp.maximum(final.k - 1, 0)]}
+            "objective": final.hist[jnp.maximum(final.k - 1, 0)],
+            "precision": prec}
     return final.x, info

@@ -47,15 +47,22 @@ Array = jax.Array
 
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("data", "cols"), meta_fields=("shape",))
+                   data_fields=("data", "cols", "scales"),
+                   meta_fields=("shape",))
 @dataclass(frozen=True)
 class BlockELL:
     """Fixed-width block-sparse rows: data[i, j] is the j-th stored block of
     block-row i, at block-column col[i, j] (padding blocks are zero with
-    col = 0)."""
+    col = 0).
+
+    Quantized mode: with ``scales`` set (per stored block, f32), the stored
+    block is ``data[i, j].astype(f32) * scales[i, j]`` — int8 data at 1/4
+    the HBM traffic, dequantized on-chip by the kernels.  ``scales=None``
+    is the exact mode (f32 or bf16 data)."""
     data: Array      # (n_block_rows, ell, bs, bs)
     cols: Array      # (n_block_rows, ell) int32
     shape: tuple[int, int]
+    scales: Array | None = None    # (n_block_rows, ell) f32, int8 mode only
 
     @property
     def bs(self) -> int:
@@ -66,7 +73,15 @@ class BlockELL:
         return self.data.shape[1]
 
     @staticmethod
-    def from_dense(a: np.ndarray, bs: int) -> "BlockELL":
+    def from_dense(a: np.ndarray, bs: int, quantize: str = "none",
+                   tol: float = 1e-3) -> "BlockELL":
+        """Pack a dense (m × n) array into BlockELL.
+
+        ``quantize``: "none" keeps a.dtype; "int8" stores int8 blocks with
+        per-block f32 scales; "auto" asks the planner — the shard is
+        quantized iff plan("sparse_matmul", ..., context={"tol": tol})
+        picks the int8 precision (i.e. the tolerance clears the int8 guard
+        AND the modeled byte savings clear the floor)."""
         m, n = a.shape
         assert m % bs == 0 and n % bs == 0, (a.shape, bs)
         nbr, nbc = m // bs, n // bs
@@ -79,16 +94,48 @@ class BlockELL:
         valid = np.take_along_axis(nz, order, axis=1)     # (nbr, ell)
         cols = np.where(valid, order, 0).astype(np.int32)
         data = blocks[np.arange(nbr)[:, None], order] * valid[..., None, None]
-        return BlockELL(jnp.asarray(data.astype(a.dtype)), jnp.asarray(cols),
-                        (m, n))
+        out = BlockELL(jnp.asarray(data.astype(a.dtype)), jnp.asarray(cols),
+                       (m, n))
+        if quantize == "auto":
+            from repro.launch import planner
+            p = planner.plan("sparse_matmul",
+                             {"m": m, "n": n, "nx": 1, "ell": ell, "bs": bs},
+                             context={"tol": float(tol)})
+            quantize = "int8" if p.precision == "int8" else "none"
+        if quantize == "int8":
+            return out.quantize_int8()
+        if quantize != "none":
+            raise ValueError(f"quantize must be 'none'|'int8'|'auto', "
+                             f"got {quantize!r}")
+        return out
+
+    def quantize_int8(self) -> "BlockELL":
+        """Int8 + per-block-scale form of this matrix: scale = absmax/127
+        per stored block, data = round(block/scale).  Zero (padding) blocks
+        get scale 1 so they stay exactly zero."""
+        if self.scales is not None:
+            return self
+        d = self.data.astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(d), axis=(2, 3))          # (nbr, ell)
+        scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        q = jnp.round(d / scales[..., None, None]).astype(jnp.int8)
+        return BlockELL(q, self.cols, self.shape,
+                        scales.astype(jnp.float32))
+
+    def dequantize(self) -> "BlockELL":
+        """Exact-mode (f32 data, no scales) copy of this matrix."""
+        if self.scales is None:
+            return self
+        return BlockELL(effective_data(self), self.cols, self.shape)
 
     def to_dense(self) -> Array:
         m, n = self.shape
-        bs, nbr, ell = self.bs, self.data.shape[0], self.ell
-        out = jnp.zeros((nbr, n // bs, bs, bs), self.data.dtype)
+        data = effective_data(self)
+        bs, nbr, ell = self.bs, data.shape[0], self.ell
+        out = jnp.zeros((nbr, n // bs, bs, bs), data.dtype)
         rows = jnp.repeat(jnp.arange(nbr), ell)
         out = out.at[rows, self.cols.reshape(-1)].add(
-            self.data.reshape(-1, bs, bs))
+            data.reshape(-1, bs, bs))
         return out.transpose(0, 2, 1, 3).reshape(m, n)
 
     def density(self) -> float:
@@ -96,13 +143,40 @@ class BlockELL:
         return self.ell / nbc
 
 
-def _bsr_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, ell: int):
+def effective_data(a: BlockELL) -> Array:
+    """The stored blocks as the values they represent: dequantized (int8 ×
+    per-block scale) or as stored.  The identity for exact-mode f32 data —
+    the jnp paths below route through this, so the unquantized fast path
+    is bit-for-bit what it always was."""
+    if a.scales is not None:
+        return a.data.astype(jnp.float32) * a.scales[..., None, None]
+    return a.data
+
+
+def _load_block(a_ref, s_ref):
+    """One staged (bs × bs) block as f32: upcast sub-f32 storage on-chip
+    and apply the per-block dequant scale when the matrix is quantized.
+    The identity for exact-mode f32 data."""
+    a = a_ref[0]
+    if a.dtype != jnp.float32:
+        a = a.astype(jnp.float32)
+    if s_ref is not None:
+        a = a * s_ref[0, 0]
+    return a
+
+
+def _bsr_kernel(cols_ref, a_ref, *args, ell: int, quantized: bool):
     del cols_ref   # consumed by the index_map gathers
+    if quantized:
+        s_ref, x_ref, o_ref, acc_ref = args
+    else:
+        (x_ref, o_ref, acc_ref), s_ref = args, None
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[0], x_ref[...],
+    acc_ref[...] += jnp.dot(_load_block(a_ref, s_ref), x_ref[...],
                             preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(1) == ell - 1)
@@ -120,37 +194,52 @@ def bsr_matmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
     nbr = m // bs
     flat = a.data.reshape(nbr * ell, bs, bs)
     cols = a.cols.reshape(-1)
+    quantized = a.scales is not None
+
+    in_specs = [
+        pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
+    ]
+    operands = [cols, flat]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda i, j, cols: (i * ell + j, 0)))
+        operands.append(a.scales.reshape(nbr * ell, 1))
+    in_specs.append(
+        pl.BlockSpec((bs, nx), lambda i, j, cols: (cols[i * ell + j], 0)))
+    operands.append(x)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nbr, ell),
-        in_specs=[
-            pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
-            pl.BlockSpec((bs, nx), lambda i, j, cols: (cols[i * ell + j], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bs, nx), lambda i, j, cols: (i, 0)),
         scratch_shapes=[pltpu.VMEM((bs, nx), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_bsr_kernel, ell=ell),
+        functools.partial(_bsr_kernel, ell=ell, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nx), x.dtype),
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="repro_bsr_matmul",
-    )(cols, flat, x)
+    )(*operands)
 
 
-def _bsr_spmv_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, ell: int):
+def _bsr_spmv_kernel(cols_ref, a_ref, *args, ell: int, quantized: bool):
     del cols_ref   # consumed by the index_map gathers
+    if quantized:
+        s_ref, x_ref, o_ref, acc_ref = args
+    else:
+        (x_ref, o_ref, acc_ref), s_ref = args, None
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # (1 × bs) · (bs × bs): the row-vector form of A_block @ x_block, so the
     # contraction still lands on the MXU.
-    acc_ref[...] += jnp.dot(x_ref[...], a_ref[0].T,
+    acc_ref[...] += jnp.dot(x_ref[...], _load_block(a_ref, s_ref).T,
                             preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(1) == ell - 1)
@@ -168,31 +257,45 @@ def bsr_matvec(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
     flat = a.data.reshape(nbr * ell, bs, bs)
     cols = a.cols.reshape(-1)
     xb = x.reshape(n // bs, bs)
+    quantized = a.scales is not None
+
+    in_specs = [
+        pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
+    ]
+    operands = [cols, flat]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda i, j, cols: (i * ell + j, 0)))
+        operands.append(a.scales.reshape(nbr * ell, 1))
+    in_specs.append(
+        pl.BlockSpec((1, bs), lambda i, j, cols: (cols[i * ell + j], 0)))
+    operands.append(xb)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nbr, ell),
-        in_specs=[
-            pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
-            pl.BlockSpec((1, bs), lambda i, j, cols: (cols[i * ell + j], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bs), lambda i, j, cols: (i, 0)),
         scratch_shapes=[pltpu.VMEM((1, bs), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_bsr_spmv_kernel, ell=ell),
+        functools.partial(_bsr_spmv_kernel, ell=ell, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nbr, bs), x.dtype),
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="repro_bsr_matvec",
-    )(cols, flat, xb)
+    )(*operands)
     return out.reshape(m)
 
 
-def _bsr_rmm_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, nbr: int,
-                    ell: int):
+def _bsr_rmm_kernel(cols_ref, a_ref, *args, nbr: int, ell: int,
+                    quantized: bool):
+    if quantized:
+        s_ref, x_ref, o_ref, acc_ref = args
+    else:
+        (x_ref, o_ref, acc_ref), s_ref = args, None
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when((i == 0) & (j == 0))
@@ -200,7 +303,7 @@ def _bsr_rmm_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, nbr: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     c = cols_ref[i * ell + j]
-    contrib = jnp.dot(a_ref[0].T, x_ref[...],
+    contrib = jnp.dot(_load_block(a_ref, s_ref).T, x_ref[...],
                       preferred_element_type=jnp.float32)
     cur = pl.load(acc_ref, (pl.ds(c, 1), slice(None), slice(None)))
     pl.store(acc_ref, (pl.ds(c, 1), slice(None), slice(None)),
@@ -211,8 +314,12 @@ def _bsr_rmm_kernel(cols_ref, a_ref, x_ref, o_ref, acc_ref, *, nbr: int,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _bsr_rmm_partials_kernel(a_ref, x_ref, o_ref):
-    o_ref[...] = jnp.dot(a_ref[0].T, x_ref[...],
+def _bsr_rmm_partials_kernel(a_ref, *args, quantized: bool):
+    if quantized:
+        s_ref, x_ref, o_ref = args
+    else:
+        (x_ref, o_ref), s_ref = args, None
+    o_ref[...] = jnp.dot(_load_block(a_ref, s_ref).T, x_ref[...],
                          preferred_element_type=jnp.float32)[None]
 
 
@@ -250,15 +357,24 @@ def bsr_rmatmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
     nbr, nbc = m // bs, n // bs
     flat = a.data.reshape(nbr * ell, bs, bs)
     cols = a.cols.reshape(-1)
+    quantized = a.scales is not None
+    flat_scales = a.scales.reshape(nbr * ell, 1) if quantized else None
 
     if _rmm_fused_vmem(nbc, bs, nx, x.dtype.itemsize) > _at.VMEM_BUDGET:
+        in_specs = [
+            pl.BlockSpec((1, bs, bs), lambda i, j: (i * ell + j, 0, 0)),
+        ]
+        operands = [flat]
+        if quantized:
+            in_specs.append(
+                pl.BlockSpec((1, 1), lambda i, j: (i * ell + j, 0)))
+            operands.append(flat_scales)
+        in_specs.append(pl.BlockSpec((bs, nx), lambda i, j: (i, 0)))
+        operands.append(x)
         partial = pl.pallas_call(
-            _bsr_rmm_partials_kernel,
+            functools.partial(_bsr_rmm_partials_kernel, quantized=quantized),
             grid=(nbr, ell),
-            in_specs=[
-                pl.BlockSpec((1, bs, bs), lambda i, j: (i * ell + j, 0, 0)),
-                pl.BlockSpec((bs, nx), lambda i, j: (i, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, bs, nx),
                                    lambda i, j: (i * ell + j, 0, 0)),
             out_shape=jax.ShapeDtypeStruct((nbr * ell, bs, nx), jnp.float32),
@@ -266,29 +382,38 @@ def bsr_rmatmul(a: BlockELL, x: Array, *, interpret: bool = False) -> Array:
                 dimension_semantics=("parallel", "parallel")),
             interpret=interpret,
             name="repro_bsr_rmatmul_partials",
-        )(flat, x)
+        )(*operands)
         out = jax.ops.segment_sum(partial, cols, num_segments=nbc)
         return out.reshape(n, nx).astype(x.dtype)
+
+    in_specs = [
+        pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
+    ]
+    operands = [cols, flat]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda i, j, cols: (i * ell + j, 0)))
+        operands.append(flat_scales)
+    in_specs.append(pl.BlockSpec((bs, nx), lambda i, j, cols: (i, 0)))
+    operands.append(x)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nbr, ell),
-        in_specs=[
-            pl.BlockSpec((1, bs, bs), lambda i, j, cols: (i * ell + j, 0, 0)),
-            pl.BlockSpec((bs, nx), lambda i, j, cols: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((nbc, bs, nx), lambda i, j, cols: (0, 0, 0)),
         scratch_shapes=[pltpu.VMEM((nbc, bs, nx), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_bsr_rmm_kernel, nbr=nbr, ell=ell),
+        functools.partial(_bsr_rmm_kernel, nbr=nbr, ell=ell,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nbc, bs, nx), x.dtype),
         compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
         name="repro_bsr_rmatmul",
-    )(cols, flat, x)
+    )(*operands)
     return out.reshape(n, nx)
 
 
@@ -299,7 +424,7 @@ def bsr_matmul_jnp(a: BlockELL, x: Array) -> Array:
     bs = a.bs
     xb = x.reshape(a.shape[1] // bs, bs, -1)              # (nbc, bs, nx)
     gathered = xb[a.cols]                                 # (nbr, ell, bs, nx)
-    y = jnp.einsum("reij,rejn->rin", a.data, gathered,
+    y = jnp.einsum("reij,rejn->rin", effective_data(a), gathered,
                    preferred_element_type=jnp.float32)
     return y.reshape(a.shape[0], -1).astype(x.dtype)
 
@@ -309,7 +434,7 @@ def bsr_matvec_jnp(a: BlockELL, x: Array) -> Array:
     bs = a.bs
     xb = x.reshape(a.shape[1] // bs, bs)
     gathered = xb[a.cols]                                 # (nbr, ell, bs)
-    y = jnp.einsum("reij,rej->ri", a.data, gathered,
+    y = jnp.einsum("reij,rej->ri", effective_data(a), gathered,
                    preferred_element_type=jnp.float32)
     return y.reshape(a.shape[0]).astype(x.dtype)
 
@@ -320,7 +445,7 @@ def bsr_rmatmul_jnp(a: BlockELL, x: Array) -> Array:
     nbr = a.data.shape[0]
     nbc = a.shape[1] // bs
     xr = x.reshape(nbr, bs, -1)                           # (nbr, bs, nx)
-    partial = jnp.einsum("reij,rin->rejn", a.data, xr,
+    partial = jnp.einsum("reij,rin->rejn", effective_data(a), xr,
                          preferred_element_type=jnp.float32)
     out = jnp.zeros((nbc, bs, partial.shape[-1]), jnp.float32)
     out = out.at[a.cols.reshape(-1)].add(

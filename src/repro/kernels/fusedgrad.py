@@ -43,7 +43,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro import compat
-from .bsr import BlockELL
+from .bsr import BlockELL, effective_data
 
 Array = jax.Array
 
@@ -106,6 +106,10 @@ def _fused_grad_kernel(a_ref, x_ref, t_ref, w_ref, f_ref, g_ref, z_ref,
         f_acc[0, 0] = jnp.float32(0.0)
 
     blk = a_ref[...]                                     # (bm, n)
+    # Sub-f32 storage upcasts in VMEM (no-op for f32): one narrow HBM read,
+    # f32 math on-chip.
+    if blk.dtype != jnp.float32:
+        blk = blk.astype(jnp.float32)
     # Row-vector matmuls keep both contractions on the MXU: z = x Aᵀ and
     # g += r A are (1 × bm)·(bm × n) products over the block already in VMEM.
     z = jnp.dot(x_ref[...], blk.T, preferred_element_type=jnp.float32)
@@ -193,6 +197,8 @@ def _fused_grad_bsr_kernel(cols_ref, a_ref, x_ref, t_ref, w_ref,
         f_acc[0, 0] = jnp.float32(0.0)
 
     blocks = a_ref[0]                                    # (ell, bs, bs)
+    if blocks.dtype != jnp.float32:
+        blocks = blocks.astype(jnp.float32)    # sub-f32 storage upcast
     bs = blocks.shape[-1]
     xall = x_ref[...]                                    # (nbc, bs)
 
@@ -288,6 +294,8 @@ def _fused_grad_multi_kernel(a_ref, x_ref, t_ref, w_ref, f_ref, g_ref, z_ref,
         f_acc[...] = jnp.zeros_like(f_acc)
 
     blk = a_ref[...]                                     # (bm, n)
+    if blk.dtype != jnp.float32:
+        blk = blk.astype(jnp.float32)          # sub-f32 storage upcast
     x = x_ref[...]                                       # (kp, n)
     # One block read serves every request: z = X Aᵀ is a (kp × n)·(n × bm)
     # product over the block already in VMEM — the whole point of grouping.
@@ -383,6 +391,8 @@ def _fused_grad_bsr_multi_kernel(cols_ref, a_ref, x_ref, t_ref, w_ref,
         f_acc[...] = jnp.zeros_like(f_acc)
 
     blocks = a_ref[0]                                    # (ell, bs, bs)
+    if blocks.dtype != jnp.float32:
+        blocks = blocks.astype(jnp.float32)    # sub-f32 storage upcast
     bs = blocks.shape[-1]
     kp = x_ref.shape[1]
     xall = x_ref[...]                                    # (nbc, kp, bs)
@@ -484,7 +494,10 @@ def fused_grad_jnp(a: Array, x: Array, t: Array, w: Array, *,
     transposed operand)."""
     z = jnp.dot(a, x, preferred_element_type=jnp.float32)
     f, r = row_loss_grad(z, t, w, loss, param)
-    g = jnp.dot(r.astype(a.dtype), a, preferred_element_type=jnp.float32)
+    # The residual stays f32 for sub-f32 storage (matching the kernel,
+    # which never narrows r); for f32 a this cast is a no-op.
+    rc = r.astype(a.dtype) if a.dtype == jnp.float32 else r
+    g = jnp.dot(rc, a, preferred_element_type=jnp.float32)
     return f, g, z
 
 
@@ -496,13 +509,14 @@ def fused_grad_bsr_jnp(a: BlockELL, x: Array, t: Array, w: Array, *,
     bs = a.bs
     nbr, ell = a.data.shape[0], a.ell
     nbc = a.shape[1] // bs
+    data = effective_data(a)
     xb = x.reshape(nbc, bs)
     gathered = xb[a.cols]                                 # (nbr, ell, bs)
-    z = jnp.einsum("reij,rej->ri", a.data, gathered,
+    z = jnp.einsum("reij,rej->ri", data, gathered,
                    preferred_element_type=jnp.float32).reshape(a.shape[0])
     f, r = row_loss_grad(z, t, w, loss, param)
-    rb = r.astype(a.data.dtype).reshape(nbr, bs)
-    partial = jnp.einsum("reij,ri->rej", a.data, rb,
+    rb = r.astype(data.dtype).reshape(nbr, bs)
+    partial = jnp.einsum("reij,ri->rej", data, rb,
                          preferred_element_type=jnp.float32)
     g = jnp.zeros((nbc, bs), jnp.float32).at[a.cols.reshape(-1)].add(
         partial.reshape(nbr * ell, bs))
@@ -517,7 +531,8 @@ def fused_grad_multi_jnp(a: Array, x: Array, t: Array, w: Array, *,
     over A shared by all k requests (XLA reads A once per contraction)."""
     z = jnp.dot(x, a.T, preferred_element_type=jnp.float32)
     le, r = row_loss_elem(z, t, w, loss, param)
-    g = jnp.dot(r.astype(a.dtype), a, preferred_element_type=jnp.float32)
+    rc = r.astype(a.dtype) if a.dtype == jnp.float32 else r
+    g = jnp.dot(rc, a, preferred_element_type=jnp.float32)
     return le.sum(axis=1), g, z
 
 
@@ -531,13 +546,14 @@ def fused_grad_bsr_multi_jnp(a: BlockELL, x: Array, t: Array, w: Array, *,
     nbr, ell = a.data.shape[0], a.ell
     nbc = a.shape[1] // bs
     k = x.shape[0]
+    data = effective_data(a)
     xb = x.reshape(k, nbc, bs)
     gathered = xb[:, a.cols]                              # (k, nbr, ell, bs)
-    z = jnp.einsum("reij,krej->kri", a.data, gathered,
+    z = jnp.einsum("reij,krej->kri", data, gathered,
                    preferred_element_type=jnp.float32).reshape(k, a.shape[0])
     le, r = row_loss_elem(z, t, w, loss, param)
-    rb = r.astype(a.data.dtype).reshape(k, nbr, bs)
-    partial = jnp.einsum("reij,kri->krej", a.data, rb,
+    rb = r.astype(data.dtype).reshape(k, nbr, bs)
+    partial = jnp.einsum("reij,kri->krej", data, rb,
                          preferred_element_type=jnp.float32)
     g = jnp.zeros((k, nbc, bs), jnp.float32).at[:, a.cols.reshape(-1)].add(
         partial.reshape(k, nbr * ell, bs))

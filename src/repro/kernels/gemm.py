@@ -33,8 +33,15 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                            preferred_element_type=jnp.float32)
+    a = a_ref[...]
+    b = b_ref[...]
+    # Sub-f32 storage (bf16/fp8) upcasts in VMEM: A streams from HBM at the
+    # narrow width, the MXU contraction runs in f32.  No-op for f32 input.
+    if a.dtype != jnp.float32:
+        a = a.astype(jnp.float32)
+    if b.dtype != jnp.float32:
+        b = b.astype(jnp.float32)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _flush():

@@ -176,7 +176,10 @@ def fused_grad_bsr(a: "_bsr.BlockELL", x: Array, target: Array,
         f, g, z = _fg.fused_grad_bsr_jnp(a, x, target, weights, loss=loss,
                                          param=param)
         return f, g.astype(x.dtype), z
-    if _fg.fused_grad_bsr_vmem(a) > _tune.VMEM_BUDGET:
+    # int8-quantized shards compose the scale-aware SpMV/rmatmul kernels
+    # (two reads of the stored blocks — still half the bytes of one f32
+    # read); exact-mode shards keep the single-read fused kernel.
+    if a.scales is not None or _fg.fused_grad_bsr_vmem(a) > _tune.VMEM_BUDGET:
         z = bsr_matvec(a, x, force_pallas=force_pallas)
         f, r = _fg.row_loss_grad(z, target, weights, loss, param)
         g = bsr_rmatmul(a, r.astype(x.dtype)[:, None],
@@ -235,7 +238,10 @@ def fused_grad_bsr_multi(a: "_bsr.BlockELL", x: Array, target: Array,
                                                loss=loss, param=param)
         return f, g.astype(x.dtype), z
     kp = _rup(k, 8)
-    if _fg.fused_grad_bsr_multi_vmem(a, kp) > _tune.VMEM_BUDGET:
+    # Quantized shards route through the scale-aware two-pass composition,
+    # like the single-RHS form above.
+    if a.scales is not None \
+            or _fg.fused_grad_bsr_multi_vmem(a, kp) > _tune.VMEM_BUDGET:
         z = bsr_matmul(a, x.T, force_pallas=force_pallas).T
         le, r = _fg.row_loss_elem(z, target, weights, loss, param)
         g = bsr_rmatmul(a, r.astype(x.dtype).T, force_pallas=force_pallas).T

@@ -39,8 +39,14 @@ def _randsketch_kernel(a_ref, q_ref, o_ref, acc_ref, *, m_steps: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[...].T, q_ref[...],
-                            preferred_element_type=jnp.float32)
+    a = a_ref[...]
+    q = q_ref[...]
+    # Sub-f32 storage upcasts in VMEM; the accumulator is f32 regardless.
+    if a.dtype != jnp.float32:
+        a = a.astype(jnp.float32)
+    if q.dtype != jnp.float32:
+        q = q.astype(jnp.float32)
+    acc_ref[...] += jnp.dot(a.T, q, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(1) == m_steps - 1)
     def _flush():

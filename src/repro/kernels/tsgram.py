@@ -30,6 +30,9 @@ def _tsgram_kernel(a_ref, o_ref, acc_ref, *, m_steps: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     blk = a_ref[...]
+    # Sub-f32 storage upcasts in VMEM; the accumulator is f32 regardless.
+    if blk.dtype != jnp.float32:
+        blk = blk.astype(jnp.float32)
     acc_ref[...] += jnp.dot(blk.T, blk, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(0) == m_steps - 1)

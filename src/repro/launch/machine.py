@@ -304,7 +304,7 @@ class MachineModel:
 
 V5E = MachineModel(
     name="tpu-v5e",
-    mxu_flops={2: 197e12, 4: 98.5e12},   # bf16 / f32 peak per chip
+    mxu_flops={1: 394e12, 2: 197e12, 4: 98.5e12},  # int8 / bf16 / f32 peak
     hbm_bw=819e9,                        # bytes/s per chip
     step_overhead_s=2e-7,                # per-grid-step issue cost
     link_bw=50e9,                        # bytes/s per ICI link
@@ -313,7 +313,7 @@ V5E = MachineModel(
 
 CPU = MachineModel(
     name="cpu-host",
-    mxu_flops={2: 1e11, 4: 1e11},        # a few vector cores' worth
+    mxu_flops={1: 1e11, 2: 1e11, 4: 1e11},  # a few vector cores' worth
     hbm_bw=3e10,                         # one socket's DRAM stream
     step_overhead_s=1e-6,                # dispatch/loop overhead per tile
     link_bw=1e10,

@@ -44,6 +44,15 @@ Supported ops:
                            {"axes": …} reduction of the n-vector result;
                            choice names the reduction (ring|tree|local)
 
+Precision is a planner axis too: pass a solver tolerance via
+``context={"tol": ...}`` and grad/gram/matvec/sparse_matmul plans sweep
+{f32, bf16 storage, int8 BlockELL, int8 error-feedback compressed psum}
+against the PRECISION_GUARDS accuracy ceilings, picking the fastest
+candidate the tolerance admits that also clears a savings floor (tiny
+shapes stay f32).  The chosen plan's ``precision`` field names the pick,
+``explain()`` prints it plus the modeled byte savings, and the solvers'
+``precision="auto"`` (core/optim/first_order.py) defers to this decision.
+
 Distributed ops price their collectives with ``MachineModel.collective``
 (ring vs tree by mesh shape and payload — pass mesh axis sizes via
 ``launch.mesh.axis_sizes``), and ``explain()`` reports the comm fraction.
@@ -71,6 +80,31 @@ CHUNK_CANDIDATES = (1, 2, 4, 8)
 # BSR block-size candidates — the one definition (SparseRowMatrix's
 # bs="auto" constructors and plan("bsr_bs") both sweep this list).
 BS_CANDIDATES = (8, 16, 32, 64, 128)
+
+# Precision as a planner axis.  When the caller passes a solver tolerance
+# (context={"tol": ...}) and the operand is float32, grad/gram/matvec/
+# sparse_matmul plans sweep lower-precision executions and pick the fastest
+# candidate whose accuracy guard the tolerance clears:
+#
+#   "bf16"   A stored bfloat16, tiles upcast on-chip, f32 accumulation
+#            (halves the HBM stream of every A pass)
+#   "int8"   BlockELL data int8 + per-block f32 scale (sparse_matmul only)
+#   "psum8"  error-feedback int8 compressed all-reduce for the distributed
+#            (f, g) / gram reductions (train/compression.psum_int8) — the
+#            wire payload drops 4×, a 4-byte shared-scale pmax rides along
+#
+# The guard values are worst-case relative-error ceilings per candidate
+# (bf16 has ~3 decimal digits; int8 block quantization ~2; psum8 is tighter
+# than its per-step quantization error because error feedback re-injects
+# the residual, keeping the *converged* solution at tolerance).  A
+# candidate is admissible iff tol >= guard.  On top of the guard, a
+# savings floor keeps tiny shapes at f32: low precision must win by
+# max(PRECISION_MIN_SAVINGS_FRAC of the f32 time, PRECISION_MIN_SAVINGS_S)
+# or the plan stays exact — flipping precision for nanoseconds is all risk.
+PRECISION_OPS = ("grad", "gram", "matvec", "sparse_matmul")
+PRECISION_GUARDS = {"f32": 0.0, "psum8": 1e-6, "bf16": 1e-5, "int8": 1e-3}
+PRECISION_MIN_SAVINGS_FRAC = 0.20
+PRECISION_MIN_SAVINGS_S = 2e-6
 
 # SVD auto-mode gates (paper §3.1 dispatch; see core/linalg/svd.py for the
 # derivations of the two numbers).
@@ -101,6 +135,11 @@ class ExecutionPlan:
     # ^ raw (efficiency-1) cost terms of the chosen path for decision ops
     #   that price collectives — lets actual_record() feed calibrate()
     #   with the comm column (kernel ops rebuild terms from blocks instead).
+    precision: str = ""
+    # ^ "" when the plan was not precision-swept (no context["tol"]);
+    #   otherwise the chosen storage/wire precision: "f32" | "bf16" |
+    #   "int8" | "psum8".  `dtype` stays the caller's logical operand
+    #   dtype — precision names how the bytes move, not what x means.
 
     def explain(self) -> str:
         """Human-readable roofline breakdown of the decision."""
@@ -113,6 +152,8 @@ class ExecutionPlan:
             f" ({'calibrated' if self.calibrated else 'builtin constants'})",
             f"  modeled: {_us(self.cost_s)}",
         ]
+        if self.precision:
+            lines.insert(2, f"  precision: {self.precision}")
         b = self.breakdown
         if b:
             lines.append(
@@ -225,8 +266,10 @@ def _decide(op, dims_key, dtype_name, backend, ctx_key,
     kw = dict(dims=d, dtype=dtype_name, backend=backend,
               machine=machine.name,
               calibrated=machine.source == "calibrated")
+    if op in PRECISION_OPS and "tol" in ctx and dtype_name == "float32":
+        return _decide_precision(op, d, dtype_name, machine, ctx, kw)
     if op == "sparse_matmul":
-        return _decide_sparse(d, dtype_name, machine, kw)
+        return _decide_sparse(d, dtype_name, machine, ctx, kw)
     if op == "grad":
         return _decide_grad(d, dtype_name, machine, ctx, kw)
     if op == "bsr_bs":
@@ -275,15 +318,108 @@ def _chunk_counts(n: int) -> tuple[int, ...]:
     return tuple(c for c in CHUNK_CANDIDATES if c == 1 or n // c >= LANE)
 
 
-def _decide_sparse(d, dtype_name, machine, kw) -> ExecutionPlan:
+def _psum_cost(machine, elems: float, axes, dtype_name, wire=None) -> dict:
+    """Price the all-reduce of an `elems`-element f32 accumulator.
+
+    Default wire format is the f32 payload itself.  wire="int8" prices the
+    error-feedback compressed collective (train/compression.psum_int8):
+    the payload ships as int8 (4× fewer wire bytes) plus one 4-byte
+    shared-scale pmax per reduction — cheap on fat payloads, pure latency
+    overhead on small ones, which is exactly what the sweep should see."""
+    if wire == "int8":
+        body = machine.collective(elems * 1.0, axes, "int8")
+        scale = machine.collective(4.0, axes, dtype_name)
+        return {"algorithm": f"{body['algorithm']}+int8",
+                "comm_bytes": body["comm_bytes"] + scale["comm_bytes"],
+                "comm_steps": body["comm_steps"] + scale["comm_steps"],
+                "comm_s": body["comm_s"] + scale["comm_s"]}
+    return machine.collective(elems * 4.0, axes, dtype_name)
+
+
+def _decide_precision(op, d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
+    """Sweep storage/wire precision for one decision op against the solver
+    tolerance in context["tol"] (see PRECISION_GUARDS above).  Each
+    candidate re-prices the op's full decision at the candidate's byte
+    widths — bf16 swaps the storage dtype, psum8 swaps the collective wire
+    format, int8 swaps the BlockELL data dtype — so precision composes
+    with the existing fused/chunked/BSR choices rather than bypassing
+    them.  The returned plan keeps the caller's logical dtype and reports
+    the pick + modeled byte savings in `precision` / notes."""
+    import dataclasses
+    tol = float(ctx["tol"])
+    sub = {k: v for k, v in ctx.items() if k != "tol"}
+
+    def run(dname, wire=None):
+        c = dict(sub)
+        if wire:
+            c["wire"] = wire
+        kw2 = dict(kw, dtype=dname)
+        if op == "sparse_matmul":
+            return _decide_sparse(d, dname, machine, c, kw2)
+        if op == "grad":
+            return _decide_grad(d, dname, machine, c, kw2)
+        if op == "gram":
+            return _decide_gram(d, dname, machine, c, kw2)
+        return _decide_matvec(d, dname, machine, c, kw2)
+
+    base = run(dtype_name)
+    cands = [("f32", base)]
+    if tol >= PRECISION_GUARDS["psum8"] and op in ("grad", "gram") \
+            and _axes(ctx):
+        cands.append(("psum8", run(dtype_name, wire="int8")))
+    if tol >= PRECISION_GUARDS["bf16"]:
+        cands.append(("bf16", run("bfloat16")))
+    if tol >= PRECISION_GUARDS["int8"] and op == "sparse_matmul":
+        p8 = run("int8")
+        if p8.choice == "bsr":     # only BlockELL data quantizes to int8
+            cands.append(("int8", p8))
+
+    floor = max(PRECISION_MIN_SAVINGS_S,
+                PRECISION_MIN_SAVINGS_FRAC * base.cost_s)
+    label, best = "f32", base
+    for lb, p in cands[1:]:
+        if base.cost_s - p.cost_s >= floor and p.cost_s < best.cost_s:
+            label, best = lb, p
+
+    def _moved(p):
+        t = p.terms or {}
+        return float(t.get("hbm_bytes", 0.0)) + float(t.get("comm_bytes", 0.0))
+
+    b0, b1 = _moved(base), _moved(best)
+    if label == "f32":
+        note = (f"precision: f32 — no admissible candidate cleared the "
+                f"savings floor max({PRECISION_MIN_SAVINGS_FRAC:.0%}, "
+                f"{_us(PRECISION_MIN_SAVINGS_S)}) at tol={tol:g}")
+    else:
+        saved = 1.0 - b1 / b0 if b0 > 0 else 0.0
+        note = (f"precision: {label} — modeled bytes {b0:.4g} -> {b1:.4g} "
+                f"({saved:.0%} saved); tol={tol:g} clears guard "
+                f"{PRECISION_GUARDS[label]:g}")
+    return dataclasses.replace(
+        best, precision=label, dtype=dtype_name,
+        alternatives=best.alternatives + tuple(
+            sorted(((f"precision:{lb}", p.cost_s) for lb, p in cands),
+                   key=lambda t: t[1])),
+        notes=best.notes + (note,))
+
+
+def _decide_sparse(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
     """Per-shard BSR-vs-dense for an (m × n) BlockELL shard with `ell`
     stored blocks per block-row of size `bs`, times an (n × nx) operand
     (nx=1 for SpMV).  The BSR side pays lane/sublane padding on every
     stored block plus a per-block grid step; the dense side streams the
-    full m·n at the best-ranked GEMM tiling."""
+    full m·n at the best-ranked GEMM tiling.  At dtype int8 (the
+    quantized-BlockELL candidate of the precision sweep) the BSR side
+    also streams one f32 scale per stored block."""
+    import dataclasses
     m, n, nx = d["m"], d["n"], max(d.get("nx", 1), 1)
     bsr_dims = {"m": m, "n": n, "nx": nx, "ell": d["ell"]}
     bsr_terms = at.cost_terms("bsr", {"bs": d["bs"]}, bsr_dims, dtype_name)
+    if dtype_name == "int8":
+        nbr = at._rup(m, d["bs"]) // d["bs"]
+        bsr_terms = dataclasses.replace(
+            bsr_terms,
+            hbm_bytes=bsr_terms.hbm_bytes + nbr * d["ell"] * 4.0)
     bsr_s = machine.time(bsr_terms, dtype_name)
     gemm_dims = {"m": m, "k": n, "n": nx}
     dense_s, dense_blocks = at.rank("gemm", gemm_dims, dtype_name,
@@ -299,7 +435,8 @@ def _decide_sparse(d, dtype_name, machine, kw) -> ExecutionPlan:
         alternatives=tuple(sorted((("bsr", bsr_s), ("dense", dense_s)),
                                   key=lambda t: t[1])),
         notes=(f"stored-block fraction ell/nbc = "
-               f"{d['ell'] / max(n // d['bs'], 1):.3f}",), **kw)
+               f"{d['ell'] / max(n // d['bs'], 1):.3f}",),
+        terms=_terms_dict(chosen_terms), **kw)
 
 
 def _decide_grad(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
@@ -348,10 +485,14 @@ def _decide_grad(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
                                        ("unfused", unfused_s)),
                                       key=lambda t: t[1])),
             notes=("unfused = 2 sublane-padded streaming passes; "
-                   "fused = 1 lane-padded pass",), **kw)
+                   "fused = 1 lane-padded pass",),
+            terms=_terms_dict(chosen_terms), **kw)
 
-    # Distributed: every alternative ends in a psum of g (n·db) + f (4 B).
-    coll = machine.collective(n * db + 4.0, axes, dtype_name)
+    # Distributed: every alternative ends in a psum of the f32 (g, f)
+    # accumulator — (n+1) elements whatever the storage dtype; context
+    # {"wire": "int8"} prices the compressed-collective wire format.
+    wire = ctx.get("wire")
+    coll = _psum_cost(machine, n + 1.0, axes, dtype_name, wire)
     fused_terms = at.cost_terms("fusedgrad", fused_blocks,
                                 {"m": m, "n": n}, dtype_name)
     cands = [("fused", 1, fused_s + coll["comm_s"],
@@ -365,7 +506,7 @@ def _decide_grad(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
         chunk_terms = CostTerms(flops=2.0 * mp * segp,
                                 hbm_bytes=(mp * segp + mp + segp) * db,
                                 steps=-(-mp // bm))
-        cc = machine.collective(seg * db, axes, dtype_name)
+        cc = _psum_cost(machine, float(seg), axes, dtype_name, wire)
         total = _pipeline_s(machine.time(chunk_terms, dtype_name),
                             cc["comm_s"], c, pre=pre)
         agg = CostTerms(
@@ -381,7 +522,7 @@ def _decide_grad(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
     cands.append(("unfused", 1, unfused_s + coll["comm_s"], unfused_terms))
     label, chunks, best_s, chosen_terms = min(cands, key=lambda t: t[2])
     use_fused = label != "unfused"
-    notes = [f"psum({n}·{db}B) over axes={axes}: {coll['algorithm']} "
+    notes = [f"psum({n}·4B) over axes={axes}: {coll['algorithm']} "
              f"all-reduce, {_us(coll['comm_s'])}"]
     if chunks > 1:
         notes.append(f"overlap: {chunks} column chunks pipeline each "
@@ -408,8 +549,10 @@ def _decide_gram(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
     gram_s, gram_blocks = at.rank("tsgram", {"m": m, "n": n},
                                   dtype_name, machine=machine)[0]
     axes = _axes(ctx)
-    # The psum payload is the f32 accumulator, whatever the operand dtype.
-    coll = machine.collective(n * n * 4.0, axes, dtype_name)
+    # The psum payload is the f32 accumulator, whatever the operand dtype;
+    # context {"wire": "int8"} prices the compressed-collective format.
+    wire = ctx.get("wire")
+    coll = _psum_cost(machine, float(n) * n, axes, dtype_name, wire)
     gram_terms = at.cost_terms("tsgram", gram_blocks,
                                {"m": m, "n": n}, dtype_name)
     cands = [("eager", 1, gram_s + coll["comm_s"],
@@ -420,7 +563,7 @@ def _decide_gram(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
         seg = -(-n // c)
         sk_s, sk_blocks = at.rank("randsketch", {"m": m, "n": n, "r": seg},
                                   dtype_name, machine=machine)[0]
-        cc = machine.collective(n * seg * 4.0, axes, dtype_name)
+        cc = _psum_cost(machine, float(n) * seg, axes, dtype_name, wire)
         total = _pipeline_s(sk_s, cc["comm_s"], c)
         sk_terms = at.cost_terms("randsketch", sk_blocks,
                                  {"m": m, "n": n, "r": seg}, dtype_name)
@@ -463,7 +606,9 @@ def _decide_matvec(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
                            steps=-(-mp // bm))
     t_pass = machine.time(pass_terms, dtype_name)
     axes = _axes(ctx)
-    payload = n * db if ctx.get("reduce", True) else 0.0
+    # The reduced rmatvec result is the f32 accumulator, whatever the
+    # storage dtype — n·4 wire bytes.
+    payload = n * 4.0 if ctx.get("reduce", True) else 0.0
     if not axes or not payload:
         return ExecutionPlan(
             op="matvec", choice="local", blocks={}, cost_s=t_pass,
@@ -483,7 +628,7 @@ def _decide_matvec(d, dtype_name, machine, ctx, kw) -> ExecutionPlan:
         alternatives=tuple(sorted(
             ((a, t_pass + priced[a]["comm_s"]) for a in priced),
             key=lambda t: t[1])),
-        notes=(f"psum({n}·{db}B) over axes={axes}",),
+        notes=(f"psum({n}·4B) over axes={axes}",),
         terms=_terms_dict(chosen_terms), **kw)
 
 

@@ -29,10 +29,14 @@ each pass.  This module is that frontend:
     queue is strictly FIFO: a request that cannot be admitted (budget or
     slots) blocks those behind it, so overload degrades in arrival order.
 
-SVD / similarity requests and non-batchable solves (escape-hatch problems,
-accelerated variants whose momentum point defeats pass sharing) run as
-one-shot jobs through the same FIFO queue and budget, via the same
-``repro.api`` executors.
+Batched engines cover the whole Figure-1 family: ``gra`` and ``lbfgs``
+share passes directly, and the accelerated variants (``acc``/``acc_rb``)
+batch for quadratic losses via the affine u-vector trick (per-slot
+u-vectors make the momentum point's gradient free — see
+core/optim/batched.make_acc_group).  SVD / similarity requests and
+non-batchable solves (escape-hatch problems, non-quadratic accelerated
+requests) run as one-shot jobs through the same FIFO queue and budget,
+via the same ``repro.api`` executors.
 
 The frontend is hardened for real fleets (see the "fault tolerance &
 resumable solves" section of examples/quickstart.py):
@@ -98,10 +102,14 @@ def group_key(req: api.SolveRequest):
 def batchable(req: Any) -> bool:
     # Checkpointed solves run one-shot through the resumable elastic path:
     # their snapshots capture a single request's state, not a shared
-    # group's.
+    # group's.  Accelerated groups batch via the affine u-vector trick,
+    # which only exists for quadratic losses — non-quad acc requests run
+    # one-shot.
     return (isinstance(req, api.SolveRequest) and req.problem is None
             and req.smooth is None and req.prox is None
             and req.method in GROUP_METHODS
+            and (req.loss == "quad"
+                 or req.method not in _elastic.ACC_METHODS)
             and req.checkpoint_dir is None)
 
 

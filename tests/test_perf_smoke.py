@@ -85,6 +85,22 @@ def test_eager_dispatch_at_tiny_shapes():
 
 
 @pytest.mark.perf_smoke
+def test_tiny_shapes_stay_f32():
+    """Precision canary: at tiny shapes the modeled-savings floor must
+    keep the precision sweep at exact f32 eager even when the solver
+    tolerance would admit bf16/psum8 — flipping precision to save
+    nanoseconds is all risk and no win, and a regression here silently
+    degrades every small solve."""
+    from repro.launch import machine, planner
+
+    for op in ("gram", "grad"):
+        p = planner.plan(op, {"m": 4096, "n": 128}, machine=machine.V5E,
+                         context={"axes": (8,), "tol": 1e-3})
+        assert p.precision == "f32", p.explain()
+        assert p.blocks["chunks"] == 1, p.explain()
+
+
+@pytest.mark.perf_smoke
 def test_telemetry_off_is_free_and_result_identical():
     """Telemetry canary: with no recorder installed every span/metric call
     resolves to shared null singletons (no per-call allocation), and a

@@ -166,6 +166,90 @@ class TestDispatchParity:
         assert srm._use_bsr(1, "auto") == (want == "bsr")
 
 
+# Precision-sweep goldens on the reference V5E model: (op, dims, context)
+# -> chosen precision.  Recorded from the tentpole's decision sweep; the
+# guards are PRECISION_GUARDS (bf16 needs tol ≥ 1e-5, psum8 ≥ 1e-6, int8 ≥
+# 1e-3) and every pick must also clear the modeled-savings floor, which is
+# why the tiny grad row stays f32 at a loose tolerance.  The psum8 row is a
+# comm-dominated shape (small per-shard m, wide n, 64-way reduction) where
+# bf16 is inadmissible (tol below its guard) and the int8 wire still pays.
+PRECISION_GOLD = [
+    ("grad", {"m": 8192, "n": 2048}, {"tol": 1e-4, "axes": (8,)}, "bf16"),
+    ("grad", {"m": 8192, "n": 2048}, {"tol": 1e-9, "axes": (8,)}, "f32"),
+    ("grad", {"m": 4096, "n": 128}, {"tol": 1e-4, "axes": (8,)}, "f32"),
+    ("gram", {"m": 65536, "n": 4096}, {"tol": 1e-4, "axes": (16, 16)},
+     "bf16"),
+    ("gram", {"m": 512, "n": 8192}, {"tol": 5e-6, "axes": (64,)}, "psum8"),
+    ("sparse_matmul", {"m": 4096, "n": 2048, "nx": 1, "ell": 2, "bs": 128},
+     {"tol": 1e-3}, "int8"),
+    ("sparse_matmul", {"m": 4096, "n": 2048, "nx": 1, "ell": 2, "bs": 128},
+     {"tol": 1e-8}, "f32"),
+    ("matvec", {"m": 65536, "n": 4096}, {"tol": 1e-4}, "bf16"),
+]
+
+
+class TestPrecisionDecisions:
+    @pytest.mark.parametrize("op,dims,ctx,want", PRECISION_GOLD)
+    def test_precision_golden(self, op, dims, ctx, want):
+        p = planner.plan(op, dims, machine=machine.V5E, context=ctx)
+        assert p.precision == want, p.explain()
+        # The sweep keeps the caller's logical dtype: precision names how
+        # the bytes move, not what x means.
+        assert p.dtype == "float32"
+
+    def test_no_tol_means_no_sweep(self):
+        """Legacy call sites (no context["tol"]) are untouched: the plan
+        is not precision-swept and prices exactly as before."""
+        p = planner.plan("grad", {"m": 8192, "n": 2048},
+                         machine=machine.V5E, context={"axes": (8,)})
+        assert p.precision == ""
+        q = planner.plan("grad", {"m": 8192, "n": 2048},
+                         machine=machine.V5E,
+                         context={"axes": (8,), "tol": 1e-9})
+        assert q.choice == p.choice and q.blocks == p.blocks
+
+    def test_explain_reports_precision_and_savings(self):
+        """Acceptance: explain() must name the chosen precision and the
+        modeled byte savings for grad/gram/sparse_matmul picks."""
+        picked = [
+            planner.plan("grad", {"m": 8192, "n": 2048}, machine=machine.V5E,
+                         context={"tol": 1e-4, "axes": (8,)}),
+            planner.plan("gram", {"m": 512, "n": 8192}, machine=machine.V5E,
+                         context={"tol": 5e-6, "axes": (64,)}),
+            planner.plan("sparse_matmul",
+                         {"m": 4096, "n": 2048, "nx": 1, "ell": 2,
+                          "bs": 128}, machine=machine.V5E,
+                         context={"tol": 1e-3}),
+        ]
+        for p in picked:
+            text = p.explain()
+            assert p.precision in ("bf16", "psum8", "int8"), text
+            assert f"precision: {p.precision}" in text
+            assert "saved" in text and "modeled bytes" in text
+            # Lower precision must actually model fewer seconds than the
+            # f32 alternative it displaced.
+            alt = dict(p.alternatives)
+            assert p.cost_s <= alt["precision:f32"]
+
+    def test_precision_is_argmin_of_alternatives(self):
+        p = planner.plan("grad", {"m": 8192, "n": 2048},
+                         machine=machine.V5E,
+                         context={"tol": 1e-4, "axes": (8,)})
+        prec_alts = {k: v for k, v in p.alternatives
+                     if k.startswith("precision:")}
+        assert f"precision:{p.precision}" == min(prec_alts,
+                                                 key=prec_alts.get)
+
+    def test_bf16_grad_models_big_savings(self):
+        """Acceptance floor: on the bandwidth-bound fused-grad shape the
+        bf16 pick must model ≥ 1.5× over f32."""
+        p = planner.plan("grad", {"m": 8192, "n": 2048},
+                         machine=machine.V5E,
+                         context={"tol": 1e-4, "axes": (8,)})
+        alt = dict(p.alternatives)
+        assert alt["precision:f32"] / p.cost_s >= 1.5, p.explain()
+
+
 class TestExplain:
     def test_explain_smoke_all_ops(self):
         plans = [

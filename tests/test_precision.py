@@ -1,0 +1,238 @@
+"""Low-precision compute: solution parity and bit-compat guarantees.
+
+The tentpole's contract, as tests:
+
+  * store_dtype=f32 is BIT-identical to the default path (the dtype plumbing
+    must be a no-op when nothing is quantized);
+  * bf16 storage / int8 BlockELL / compressed int8 psums reach the f32
+    solution within the solver tolerance that admitted them (the planner's
+    PRECISION_GUARDS are real accuracy ceilings, not vibes) — across the
+    Figure-1 solver family, dense and BSR operands, 1- and 8-device meshes;
+  * every solve reports what ran in info["precision"].
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.distmat import RowMatrix, SparseRowMatrix
+
+
+def _problem(m=192, n=24, seed=0, noise=0.01):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    b = (A @ x + noise * rng.normal(size=m)).astype(np.float32)
+    return A, b
+
+
+def _block_sparse(m=256, n=128, bs=32, density=0.3, seed=1):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((m // bs, n // bs)) < density
+    dense = (np.kron(mask, np.ones((bs, bs)))
+             * rng.normal(size=(m, n))).astype(np.float32)
+    return dense
+
+
+class TestF32BitCompat:
+    def test_store_f32_is_identity(self):
+        A, _ = _problem()
+        base = RowMatrix.create(A)
+        kept = RowMatrix.create(A, store_dtype=jnp.float32)
+        assert kept.rows.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(base.gram()),
+                                      np.asarray(kept.gram()))
+        v = np.linspace(-1, 1, A.shape[1]).astype(np.float32)
+        np.testing.assert_array_equal(np.asarray(base.matvec(v)),
+                                      np.asarray(kept.matvec(v)))
+
+    def test_astype_store_round_trip_shape(self):
+        A, _ = _problem()
+        rm = RowMatrix.create(A)
+        lo = rm.astype_store(jnp.bfloat16)
+        assert lo.rows.dtype == jnp.bfloat16
+        assert lo.out_dtype == jnp.float32          # compute stays f32
+        back = lo.astype_store(jnp.float32)
+        assert back.rows.dtype == jnp.float32
+
+    def test_unquantized_sparse_unchanged(self):
+        dense = _block_sparse()
+        srm = SparseRowMatrix.from_dense(dense, bs=32)
+        srm_none = SparseRowMatrix.from_dense(dense, bs=32, quantize="none")
+        np.testing.assert_array_equal(np.asarray(srm.gram()),
+                                      np.asarray(srm_none.gram()))
+
+
+class TestStorageParity:
+    def test_bf16_gram_close(self):
+        A, _ = _problem(512, 32, seed=2)
+        rm = RowMatrix.create(A, store_dtype=jnp.bfloat16)
+        g = np.asarray(rm.gram())
+        assert g.dtype == np.float32                # f32 accumulate + out
+        ref = A.T @ A
+        rel = np.abs(g - ref).max() / np.abs(ref).max()
+        assert rel < 2e-2, rel                      # bf16 has ~8 mantissa bits
+
+    def test_int8_sparse_matvec_bounded(self):
+        dense = _block_sparse()
+        srm = SparseRowMatrix.from_dense(dense, bs=32, quantize="int8")
+        assert srm.scales is not None
+        v = np.random.default_rng(3).normal(size=dense.shape[1]) \
+            .astype(np.float32)
+        got = np.asarray(srm.matvec(v))[:dense.shape[0]]
+        ref = dense @ v
+        # per-block absmax/127 quantization: error scales with row norms
+        bound = (np.abs(dense).max() / 127.0) * np.abs(v).sum()
+        assert np.abs(got - ref).max() <= bound
+        rel = np.abs(got - ref).max() / max(np.abs(ref).max(), 1e-12)
+        assert rel < 2e-2, rel
+
+    def test_psum8_fused_grad_ef_identity(self):
+        """One compressed fused pass: the returned residual must satisfy
+        sent + residual == exact_gradient + old_residual (per shard), so
+        iteration-to-iteration nothing is lost to the int8 wire."""
+        A, b = _problem(256, 32, seed=4)
+        rm = RowMatrix.create(A)
+        from repro.core.tfocs.linop import LinopMatrix
+        from repro.core.tfocs.smooth import SmoothQuad, row_separable
+        lin = LinopMatrix(rm)
+        sep = row_separable(SmoothQuad(lin.pad_data(jnp.asarray(b)),
+                                       lin.row_weights()))
+        x = jnp.zeros((32,), jnp.float32)
+        f32 = rm.fused_grad(x, sep)
+        res0 = rm.init_psum_residual()
+        f8, g8, _, res1 = rm.fused_grad(x, sep, residual=res0)
+        # value is exact (not quantized), gradient EF-identity exact
+        np.testing.assert_allclose(float(f8), float(f32[0]), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(g8) + np.asarray(res1)[0],
+            np.asarray(f32[1]) + np.asarray(res0)[0],
+            rtol=1e-5, atol=1e-5)
+
+
+# The Figure-1 family under forced low precision: each must reach the f32
+# reference within ~10× the solve tolerance.  psum8 is only taken by the
+# θ ≡ 1 fused engine (gra); the other methods must REPORT the f32 fallback
+# and still match exactly as well as their f32 selves.
+FAMILY = [
+    ("gra", "bf16", "bf16"),
+    ("gra", "psum8", "psum8"),
+    ("acc_b", "bf16", "bf16"),
+    ("acc_b", "psum8", "f32"),
+    ("acc_rb", "bf16", "bf16"),
+    ("acc_rb", "psum8", "f32"),
+    ("lbfgs", "bf16", "bf16"),
+    ("lbfgs", "psum8", "f32"),
+]
+
+
+class TestSolverParity:
+    @pytest.mark.parametrize("method,precision,expect", FAMILY)
+    def test_family_parity(self, method, precision, expect):
+        A, b = _problem(seed=5)
+        M = RowMatrix.create(A)
+        L = float(np.linalg.norm(A, 2) ** 2)
+        tol = 1e-5
+        kw = dict(loss="quad", tol=tol, max_iters=600, L0=L)
+        ref = api.solve(api.SolveRequest(A=M, b=b, method=method, **kw))
+        assert ref.info["precision"] == "f32"
+        low = api.solve(api.SolveRequest(A=M, b=b, method=method,
+                                         precision=precision, **kw))
+        assert low.info["precision"] == expect, low.info
+        rel = float(jnp.linalg.norm(low.x - ref.x)
+                    / jnp.maximum(jnp.linalg.norm(ref.x), 1e-12))
+        # the guard scale: bf16 admitted at tol ≥ 1e-5, psum8 at ≥ 1e-6
+        assert rel < 100 * tol, (method, precision, rel)
+
+    def test_auto_resolves_and_reports(self):
+        """precision="auto" consults the planner and always reports; at a
+        tight tolerance it must stay f32."""
+        A, b = _problem(seed=6)
+        M = RowMatrix.create(A)
+        L = float(np.linalg.norm(A, 2) ** 2)
+        r = api.solve(api.SolveRequest(A=M, b=b, method="gra", tol=1e-9,
+                                       max_iters=50, L0=L))
+        assert r.info["precision"] == "f32"
+
+    def test_local_psum8_falls_back(self):
+        """A non-distributed operand has no wire to compress."""
+        A, b = _problem(seed=7)
+        r = api.solve(api.SolveRequest(A=A, b=b, method="gra", tol=1e-5,
+                                       max_iters=50,
+                                       L0=float(np.linalg.norm(A, 2) ** 2),
+                                       precision="psum8"))
+        assert r.info["precision"] == "f32"
+
+    def test_bsr_solver_parity_int8(self):
+        """Quantized BlockELL operand through the fused solver path."""
+        dense = _block_sparse(m=256, n=64, bs=32, density=0.4, seed=8)
+        rng = np.random.default_rng(9)
+        xs = rng.normal(size=64).astype(np.float32)
+        b = (dense @ xs + 0.01 * rng.normal(size=256)).astype(np.float32)
+        exact = SparseRowMatrix.from_dense(dense, bs=32)
+        quant = SparseRowMatrix.from_dense(dense, bs=32, quantize="int8")
+        L = float(np.linalg.norm(dense, 2) ** 2)
+        kw = dict(loss="quad", tol=1e-6, max_iters=600, L0=L)
+        ref = api.solve(api.SolveRequest(A=exact, b=b, method="acc_b", **kw))
+        got = api.solve(api.SolveRequest(A=quant, b=b, method="acc_b", **kw))
+        rel = float(jnp.linalg.norm(got.x - ref.x)
+                    / jnp.maximum(jnp.linalg.norm(ref.x), 1e-12))
+        # int8 storage: the OPERATOR itself is perturbed (guard tol 1e-3),
+        # so parity is at the quantization scale, not the solve tolerance.
+        assert rel < 5e-2, rel
+
+
+MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    assert len(jax.devices()) == 8
+    from repro import api
+    from repro.core.distmat import RowMatrix
+    from repro.core.distmat.types import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    m, n = 264, 24                       # ragged: padding rows per shard
+    A = rng.normal(size=(m, n)).astype(np.float32)
+    xs = rng.normal(size=n).astype(np.float32)
+    b = (A @ xs + 0.01 * rng.normal(size=m)).astype(np.float32)
+    L = float(np.linalg.norm(A, 2) ** 2)
+
+    # bf16 storage on a real 8-shard mesh
+    lo = RowMatrix.create(A, mesh, store_dtype=jnp.bfloat16)
+    ref = A.T @ A
+    rel = np.abs(np.asarray(lo.gram()) - ref).max() / np.abs(ref).max()
+    assert rel < 2e-2, rel
+
+    M = RowMatrix.create(A, mesh)
+    kw = dict(loss="quad", tol=1e-5, max_iters=600, L0=L)
+    r0 = api.solve(api.SolveRequest(A=M, b=b, method="gra", **kw))
+    assert r0.info["precision"] == "f32"
+    for prec in ("bf16", "psum8"):
+        r = api.solve(api.SolveRequest(A=M, b=b, method="gra",
+                                       precision=prec, **kw))
+        assert r.info["precision"] == prec, (prec, r.info)
+        rel = float(jnp.linalg.norm(r.x - r0.x)
+                    / jnp.maximum(jnp.linalg.norm(r0.x), 1e-12))
+        assert rel < 1e-3, (prec, rel)
+    print("PRECISION_8DEV_OK")
+""")
+
+
+def test_precision_parity_8dev():
+    """The same low-precision paths on a real 8-device host mesh: int8
+    psum payloads crossing actual shard boundaries with a pmax-shared
+    scale, bf16 shards all-reduced in f32."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", MULTIDEV], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "PRECISION_8DEV_OK" in out.stdout

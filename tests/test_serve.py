@@ -36,7 +36,7 @@ def _request(A, b, method="gra", **kw):
 
 
 class TestGroupParity:
-    @pytest.mark.parametrize("method", ["gra", "lbfgs"])
+    @pytest.mark.parametrize("method", ["gra", "acc_rb", "lbfgs"])
     def test_group_matches_sequential(self, method):
         """A k-request group solve reaches the same solutions as k
         sequential single-request solves on the same engine — on the local
@@ -137,6 +137,34 @@ class TestAPassSharing:
         assert max(singles) <= passes_d
         assert sum(singles) > 2 * passes_d
 
+    def test_acc_group_shares_passes(self):
+        """The accelerated group keeps the pass-sharing economics: for a
+        k-request group every iteration is still one fused multi-RHS pass
+        (plus the 3-pass admission seed), identical call sites for any
+        group width."""
+        m, n, iters = 97, 12, 8
+        A, bs = _trace(m, n, 4, seed=21)
+
+        def run(width, rhs):
+            lin = CountingLinop(LinopMatrix(jnp.asarray(A)))
+            runner = GroupRunner(lin, "quad", method="acc_rb",
+                                 slots=max(width, 1))
+            for b in rhs:
+                runner.admit(api.SolveRequest(A=A, b=b, loss="quad",
+                                              method="acc_rb", tol=0.0,
+                                              max_iters=iters))
+            while runner.busy():
+                runner.step()
+            return lin.counts["fused_grad_multi"], runner.a_passes
+
+        sites_1, passes_1 = run(1, bs[:1])
+        sites_k, passes_k = run(4, [bs[0]] * 4)
+        assert sites_k == sites_1
+        assert passes_k == passes_1
+        singles = [run(1, [b])[1] for b in bs]
+        _, passes_d = run(4, bs)
+        assert sum(singles) > 2 * passes_d
+
     def test_counting_linop_sees_no_unfused_calls(self):
         A, bs = _trace(64, 8, 2, seed=9)
         lin = CountingLinop(LinopMatrix(jnp.asarray(A)))
@@ -234,7 +262,10 @@ class TestScheduler:
         s0 = srv.submit(_request(A, bs[0]))
         s1 = srv.submit(api.SvdRequest(A=R, k=3))
         s2 = srv.submit(api.SimilarityRequest(A=R))
-        s3 = srv.submit(api.SolveRequest(A=A, b=bs[0], loss="quad",
+        # Non-quadratic accelerated request: no affine u-vector trick, so
+        # it rides the queue as a one-shot job.
+        y = np.sign(bs[0]).astype(np.float32)
+        s3 = srv.submit(api.SolveRequest(A=A, b=y, loss="logistic",
                                          method="acc_rb", max_iters=80))
         res = srv.run()
         assert len(res) == 4
@@ -242,7 +273,7 @@ class TestScheduler:
         got = np.asarray(srv.result(s1).factors[1])
         np.testing.assert_allclose(got, sv, rtol=1e-3, atol=1e-3)
         assert srv.result(s2).factors[0].shape == (n, n)
-        assert srv.result(s3).info["plan"] == "fused_affine"
+        assert srv.result(s3).info["iterations"] > 0
         assert srv.stats["oneshot"] == 3
         for rid in (s0, s1, s2, s3):
             info = srv.result(rid).info
@@ -254,7 +285,12 @@ class TestScheduler:
         r1, r2 = _request(A, bs[0]), _request(A, bs[1])
         assert batchable(r1) and group_key(r1) == group_key(r2)
         assert not batchable(api.SvdRequest(A=A, k=2))
-        assert not batchable(_request(A, bs[0], method="acc"))
+        # Quadratic accelerated requests batch (affine u-vector engine);
+        # non-quadratic ones cannot.
+        assert batchable(_request(A, bs[0], method="acc"))
+        assert not batchable(api.SolveRequest(
+            A=A, b=np.sign(bs[0]).astype(np.float32), loss="logistic",
+            method="acc_rb"))
         r3 = _request(A, bs[0])
         r3 = api.SolveRequest(A=A, b=bs[0], loss="huber", param=0.5)
         assert group_key(r3) != group_key(r1)
